@@ -1,0 +1,71 @@
+"""Microbenchmarks: full vs delta vs bypass aligner paths (Sec. 4.3 claims).
+
+Measures (a) modeled accelerator cycles — the paper's cycles_full ~= D'*M/W
+vs cycles_delta ~= |Delta|*M/W scaling, (b) wall-clock of the jitted
+functional kernels on this host (interpret-mode Pallas + XLA), and (c) the
+bank-gating (D') sweep.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hdc
+from repro.core.item_memory import random_item_memory
+from repro.core.types import TorrConfig
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters: int = 20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[tuple]:
+    cfg = TorrConfig(D=8192, B=8, M=1024, W=64, delta_budget=1024)
+    key = jax.random.PRNGKey(0)
+    im = random_item_memory(key, cfg)
+    q = hdc.random_hv(jax.random.PRNGKey(1), (8, cfg.D))
+    qp = hdc.pack_bits(q)
+    mw = -(-cfg.M // cfg.W)
+
+    rows = []
+    # (a) modeled cycles: full sweep over banks vs delta
+    for banks in (2, 4, 8):
+        d_eff = banks * cfg.bank_dims
+        rows.append((f"micro/cycles_full_D{d_eff}", d_eff * mw,
+                     "paper: D'*ceil(M/W)"))
+    for delta in (128, 512, 1024):
+        rows.append((f"micro/cycles_delta_{delta}", delta * mw,
+                     f"speedup_vs_full={cfg.D * mw / (delta * mw):.1f}x"))
+
+    # (b) wall-clock of the functional kernels (CPU, interpret-mode Pallas)
+    for banks in (2, 8):
+        us = _time(lambda qp=qp, banks=banks: ops.packed_similarity(
+            qp, im.packed, banks=banks, bank_words=cfg.bank_words)[0])
+        rows.append((f"micro/wallclock_full_banks{banks}", round(us, 1), "us"))
+
+    acc = jnp.zeros((cfg.M,), jnp.int32)
+    idx = jax.random.randint(jax.random.PRNGKey(2), (cfg.delta_budget,), 0, cfg.D)
+    w = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(3), 0.5,
+                                       (cfg.delta_budget,)), 2, -2).astype(jnp.int32)
+    us = _time(lambda: ops.delta_update(acc, im.dmajor, idx, w))
+    rows.append(("micro/wallclock_delta", round(us, 1), "us"))
+
+    z = jax.random.normal(jax.random.PRNGKey(4), (8, 512))
+    R = jax.random.normal(jax.random.PRNGKey(5), (cfg.D, 512))
+    us = _time(lambda: ops.sign_project(z, R))
+    rows.append(("micro/wallclock_sign_project", round(us, 1), "us"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

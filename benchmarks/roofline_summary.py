@@ -1,0 +1,38 @@
+"""Roofline summary: aggregates the dry-run sweep into the per-cell table.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) — this
+benchmark does not compile anything itself, it reports the measured terms.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run(mesh: str = "pod16x16", variant: str = "baseline") -> list[tuple]:
+    rows = []
+    for p in sorted(OUT.glob(f"*__{mesh}__{variant}.json")):
+        d = json.loads(p.read_text())
+        cell = f"roofline/{d.get('arch', p.stem)}/{d.get('shape', '')}"
+        if d["status"] == "SKIP":
+            rows.append((cell, "SKIP", d["reason"][:60]))
+            continue
+        if d["status"] != "OK":
+            rows.append((cell, "FAIL", d.get("error", "")[:80]))
+            continue
+        rows.append((
+            cell,
+            round(d["t_bound"] if "t_bound" in d else
+                  max(d["t_compute"], d["t_memory"], d["t_collective"]), 6),
+            (f"bound={d['bottleneck']};tc={d['t_compute']:.3e};"
+             f"tm={d['t_memory']:.3e};tx={d['t_collective']:.3e};"
+             f"roofline_frac={d['roofline_frac']:.4f};"
+             f"useful={d['useful_flops_frac']:.3f}")))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table + microbenchmarks.
+
+Prints ``name,value,derived`` CSV rows (value is the table's primary
+quantity: mm^2/mW for Table 1, ms for Tables 2-3, FPS for Table 4, AP for
+Table 5, cycles/us for micro, seconds for roofline).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (micro_aligner, roofline_summary, table1_hw,
+                   table2_envelope, table3_runtime, table4_throughput,
+                   table5_accuracy, torr_reuse_ablation)
+
+    suites = [
+        ("table1", table1_hw.run),
+        ("table2", table2_envelope.run),
+        ("table3", table3_runtime.run),
+        ("table4", table4_throughput.run),
+        ("table5", table5_accuracy.run),
+        ("torr_ablation", torr_reuse_ablation.run),
+        ("micro", micro_aligner.run),
+        ("roofline", roofline_summary.run),
+    ]
+    failed = []
+    print("name,value,derived")
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row), flush=True)
+            print(f"{name}/_suite_seconds,{time.time()-t0:.1f},ok", flush=True)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name}/_suite_seconds,{time.time()-t0:.1f},FAILED",
+                  flush=True)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Table 2: min/max end-to-end per-frame latency across the five tasks."""
+from __future__ import annotations
+
+from repro.perf.cycle_model import TASK_PROFILES, simulate_all
+
+PAPER = {"RT-60": (6.8, 13.8), "RT-30": (12.9, 23.6)}
+
+
+def run(n_frames: int = 400) -> list[tuple]:
+    rows = []
+    for rt in ("RT-60", "RT-30"):
+        res = simulate_all(rt, n_frames=n_frames)
+        gmin = min(r["min_ms"] for r in res)
+        gmax = max(r["max_ms"] for r in res)
+        tmin = min(res, key=lambda r: r["min_ms"])["task"]
+        tmax = max(res, key=lambda r: r["max_ms"])["task"]
+        budget = 1000.0 / (60 if rt == "RT-60" else 30)
+        rows.append((f"table2/{rt}/global_min_ms", gmin,
+                     f"task={tmin};paper={PAPER[rt][0]}"))
+        rows.append((f"table2/{rt}/global_max_ms", gmax,
+                     f"task={tmax};paper={PAPER[rt][1]};budget={budget:.2f}"))
+        assert gmax < budget, f"{rt}: max {gmax} exceeds frame budget {budget}"
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,51 @@
+"""Table 5: AP@0.5 per task — dense CLIP-proxy vs naive HDC vs TorR.
+
+Synthetic-surrogate reproduction (see DESIGN.md §7): absolute AP is world-
+dependent; the reproduced claims are (i) TorR within a bounded margin of the
+dense baseline (paper: 75-86% per task), (ii) reuse is accuracy-neutral
+(TorR ~= naive HDC despite bypass/delta traffic savings), (iii) coherent
+scenes show the smallest gaps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import TorrConfig
+from repro.data import tood_synth as ts
+from repro.serving.tood_pipelines import build_system, evaluate_task
+
+PAPER_OURS = {"pour wine": 54.62, "sports": 52.07, "cooking": 46.40,
+              "have breakfast": 34.07, "take a rest": 34.17}
+PAPER_MEAN = 44.27
+
+
+def run(n_frames: int = 100, difficulty: float = 1.4) -> list[tuple]:
+    world = ts.make_world(0, M=64, d=512, n_tasks=5)
+    cfg = TorrConfig(D=8192, B=8, M=64, K=24, N_max=16, delta_budget=2048,
+                     feat_dim=512)
+    sys_ = build_system(world, cfg)
+    rows, aps = [], []
+    for t in range(5):
+        r = evaluate_task(world, sys_, t, n_frames=n_frames,
+                          difficulty=difficulty)
+        aps.append([r["ap_dense"], r["ap_naive_hdc"], r["ap_torr"]])
+        frac = r["ap_torr"] / max(r["ap_dense"], 1e-9)
+        rows.append((
+            f"table5/{r['task'].replace(' ', '_')}", round(r["ap_torr"], 2),
+            (f"dense={r['ap_dense']:.1f};naive_hdc={r['ap_naive_hdc']:.1f};"
+             f"frac_of_dense={frac:.2f};paper_ours={PAPER_OURS[r['task']]};"
+             f"mix_byp={r['path_mix']['bypass']:.2f};"
+             f"mix_delta={r['path_mix']['delta']:.2f}")))
+    m = np.mean(aps, axis=0)
+    rows.append(("table5/mean", round(float(m[2]), 2),
+                 f"dense={m[0]:.1f};naive={m[1]:.1f};paper_mean={PAPER_MEAN};"
+                 f"frac_of_dense={m[2]/max(m[0],1e-9):.2f} (paper 0.75-0.86)"))
+    # claim checks: bounded margin + reuse-neutrality
+    assert m[2] / m[0] > 0.6, "TorR margin to dense baseline not bounded"
+    assert abs(m[2] - m[1]) < 5.0, "reuse is not accuracy-neutral"
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

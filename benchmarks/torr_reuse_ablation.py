@@ -1,0 +1,33 @@
+"""Reuse ablation: TorR (Alg. 1) vs no-reuse (SNN + naive HDC baseline).
+
+The paper's central claim: caching turns temporal coherence into latency/
+energy headroom. Rows report the cycle model on identical traces with the
+policy enabled vs thresholds that never fire.
+"""
+from __future__ import annotations
+
+from repro.configs.torr_edge import torr_edge, torr_edge_no_reuse
+from repro.perf.cycle_model import TASK_PROFILES, simulate_task
+
+
+def run(n_frames: int = 300) -> list[tuple]:
+    rows = []
+    for task in TASK_PROFILES:
+        on = simulate_task(task, "RT-60", n_frames, cfg=torr_edge("RT-60"))
+        off = simulate_task(task, "RT-60", n_frames,
+                            cfg=torr_edge_no_reuse("RT-60"))
+        speedup = off["median_ms"] / on["median_ms"]
+        e_save = 1 - on["energy_mj"] / off["energy_mj"]
+        rows.append((
+            f"torr_ablation/{task.replace(' ', '_')}",
+            round(speedup, 2),
+            (f"median {off['median_ms']:.1f}->{on['median_ms']:.1f}ms;"
+             f"E {off['energy_mj']:.0f}->{on['energy_mj']:.0f}mJ"
+             f" (-{100*e_save:.0f}%);P {off['power_w']:.2f}->{on['power_w']:.2f}W")))
+        assert speedup > 1.2, (task, speedup)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,57 @@
+"""Quickstart: TorR's cache-gated HDC pipeline in ~60 lines.
+
+Builds an item memory, streams temporally-coherent queries through the
+similarity-gated window step, and shows the controller switching between
+full / delta / bypass as scene dynamics change — the paper's core loop.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hdc, pipeline
+from repro.core.item_memory import random_item_memory
+from repro.core.types import PATH_NAMES, TorrConfig
+
+cfg = TorrConfig(D=4096, B=8, M=128, K=8, N_max=8, delta_budget=1024,
+                 feat_dim=256)
+key = jax.random.PRNGKey(0)
+im = random_item_memory(key, cfg)
+
+# precomputed reasoner weights for one task (paper: w_j = cos(g_P, h_j))
+g_P = hdc.random_hv(jax.random.PRNGKey(1), (cfg.D,))
+task_w = jnp.einsum("d,md->m", g_P.astype(jnp.int32),
+                    im.bipolar.astype(jnp.int32)).astype(jnp.float32) / cfg.D
+task_w = 1.0 + task_w
+
+state = pipeline.init_state(cfg, task_w)
+step = jax.jit(pipeline.torr_window_step, static_argnames="cfg")
+
+# a "scene": 4 objects whose queries drift slowly, then a scene cut
+rng = np.random.default_rng(0)
+z = rng.standard_normal((4, cfg.feat_dim))
+R = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (cfg.D, cfg.feat_dim))
+               / np.sqrt(cfg.feat_dim))
+boxes = jnp.zeros((cfg.N_max, 4))
+valid = jnp.array([True] * 4 + [False] * 4)
+
+print(f"{'win':>4} {'paths':24s} {'|Delta|':18s} {'banks':>5} {'rho':>24}")
+for w in range(12):
+    if w == 8:
+        z = rng.standard_normal((4, cfg.feat_dim))   # scene cut!
+    else:
+        z = z + 0.02 * rng.standard_normal(z.shape)   # gentle drift
+    q = hdc.sign_project(jnp.asarray(z), jnp.asarray(R))
+    q = jnp.concatenate([q, jnp.zeros((4, cfg.D), jnp.int8)])
+    qp = hdc.pack_bits(q)
+    queue = jnp.int32(6 if 4 <= w < 6 else 0)         # load spike at w=4,5
+    state, out, tel = step(state, im, qp, valid, boxes, queue, cfg)
+    paths = ",".join(PATH_NAMES[int(p)] for p in tel.path[:4])
+    deltas = ",".join(str(int(d)) for d in tel.delta_count[:4])
+    rhos = ",".join(f"{float(r):+.2f}" for r in tel.rho[:4])
+    note = "  <- scene cut" if w == 8 else ("  <- high load" if 4 <= w < 6 else "")
+    print(f"{w:>4} {paths:24s} {deltas:18s} {int(tel.banks):>5} {rhos}{note}")
+
+print("\nwindow 0: full scans (cold cache); drift: exact delta updates; "
+      "load spike: bypass; scene cut: full refresh.")

@@ -1,0 +1,81 @@
+"""Train the image->event contrastive bridge (paper Eq. 1-3).
+
+Synthesizes paired (image-embedding, event-window) data for a small class
+vocabulary, trains the spiking encoder against frozen CLIP-proxy targets
+with L = L_con + alpha * L_zs, and reports zero-shot accuracy — the
+paper's training phase, miniaturized for CPU.
+
+Run:  PYTHONPATH=src python examples/train_bridge.py [--steps 150]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bridge, encoder, events
+from repro.optim import adamw
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=150)
+ap.add_argument("--classes", type=int, default=8)
+ap.add_argument("--batch", type=int, default=16)
+ap.add_argument("--alpha", type=float, default=1.0)
+args = ap.parse_args()
+
+H = W = 16
+T_BINS, EMB = 4, 64
+ecfg = encoder.EncoderConfig(c1=8, c2=16, feat_dim=EMB)
+key = jax.random.PRNGKey(0)
+params = encoder.init_encoder(key, ecfg)
+
+# frozen proxies: image encoder sees class "images"; text bank is fixed
+f_img = bridge.make_frozen_proxy(jax.random.PRNGKey(1), args.classes, EMB)
+text_bank = jax.random.normal(jax.random.PRNGKey(2), (args.classes, EMB))
+
+# per-class event signature: a spatial blob whose events fire consistently
+rng = np.random.default_rng(0)
+centers = rng.integers(3, H - 3, (args.classes, 2))
+
+
+def sample_batch(step):
+    r = np.random.default_rng(step)
+    labels = r.integers(0, args.classes, args.batch)
+    vols = np.zeros((args.batch, T_BINS, H, W, 2), np.float32)
+    for i, c in enumerate(labels):
+        cy, cx = centers[c]
+        n_ev = 60
+        ys = np.clip(r.normal(cy, 1.5, n_ev).astype(int), 0, H - 1)
+        xs = np.clip(r.normal(cx, 1.5, n_ev).astype(int), 0, W - 1)
+        tb = r.integers(0, T_BINS, n_ev)
+        pol = (r.random(n_ev) < 0.5).astype(int)
+        np.add.at(vols[i], (tb, ys, xs, pol), 1.0)
+    img = jax.nn.one_hot(jnp.asarray(labels), args.classes)
+    return jnp.asarray(vols), f_img(img), jnp.asarray(labels)
+
+
+def loss_fn(params, vols, img_emb, labels):
+    ev_emb = encoder.encode_batch(params, vols, ecfg)
+    return bridge.bridge_loss(img_emb, ev_emb, text_bank, labels,
+                              alpha=args.alpha)
+
+
+ocfg = adamw.OptimConfig(lr=2e-3, warmup_steps=10, total_steps=args.steps,
+                         weight_decay=0.01)
+opt = adamw.init_opt_state(params)
+
+accs = []
+for s in range(args.steps):
+    vols, img_emb, labels = sample_batch(s)
+    (loss, metrics), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params, vols, img_emb, labels)
+    params, opt, om = adamw.apply_updates(params, grads, opt, ocfg)
+    accs.append(float(metrics["zs_acc"]))
+    if s % 25 == 0 or s == args.steps - 1:
+        print(f"step {s:4d}  L={float(loss):.3f}  L_con={float(metrics['l_con']):.3f} "
+              f"L_zs={float(metrics['l_zs']):.3f}  zs_acc={accs[-1]:.2f}")
+
+first, last = np.mean(accs[:10]), np.mean(accs[-10:])
+print(f"\nzero-shot accuracy: {first:.2f} -> {last:.2f}")
+assert last > first + 0.2, "bridge did not learn"
+print("bridge converged ✓ (event features aligned to CLIP-proxy space)")

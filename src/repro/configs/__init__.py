@@ -1,0 +1,11 @@
+"""Architecture registry: one config per assigned architecture (+ torr_edge).
+
+``get(name)`` returns the full published config; ``get_smoke(name)`` returns
+a reduced same-family config for CPU smoke tests.
+"""
+from .registry import ARCHS, SHAPES, get, get_smoke, input_specs, shape_for
+
+__all__ = ["ARCHS", "SHAPES", "get", "get_smoke", "input_specs", "shape_for"]
+from .torr_edge import torr_edge, torr_edge_no_reuse  # noqa: E402,F401
+
+__all__ += ["torr_edge", "torr_edge_no_reuse"]

@@ -1,0 +1,29 @@
+"""The paper's own workload: TorR edge deployment configuration.
+
+Not one of the 40 LM dry-run cells — this is the accelerator configuration
+the cycle model and the TOOD evaluation run (paper Sec. 5): D=8192 in 8
+banks, 1024-concept item memory, depth-8 query cache, 64 aligner lanes at
+1 GHz, with the RT-60/RT-30 QoS targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.types import TorrConfig
+
+
+def torr_edge(rt: str = "RT-60", **overrides) -> TorrConfig:
+    base = TorrConfig(
+        D=8192, B=8, M=1024, K=8, N_max=128,
+        delta_budget=2048, W=64, clock_hz=1.0e9,
+        fps_target=60.0 if rt == "RT-60" else 30.0,
+        tau_byp=0.95, tau_q=0.60, N_hi=8, q_hi=4,
+        feat_dim=512,
+    )
+    return dataclasses.replace(base, **overrides) if overrides else base
+
+
+def torr_edge_no_reuse(rt: str = "RT-60") -> TorrConfig:
+    """Ablation: thresholds that never fire => the SNN + naive-HDC baseline
+    (every window takes the full path)."""
+    return torr_edge(rt, tau_byp=2.0, tau_q=2.0)

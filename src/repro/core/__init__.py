@@ -1,0 +1,11 @@
+"""TorR core: the paper's algorithmic contribution as composable JAX modules."""
+from . import aligner, bridge, encoder, events, hdc, item_memory, pipeline, policy, query_cache, reasoner, types
+from .types import (PATH_BYPASS, PATH_DELTA, PATH_FULL, PATH_NAMES,
+                    TorrConfig, WindowTelemetry)
+
+__all__ = [
+    "aligner", "bridge", "encoder", "events", "hdc", "item_memory",
+    "pipeline", "policy", "query_cache", "reasoner", "types",
+    "TorrConfig", "WindowTelemetry",
+    "PATH_BYPASS", "PATH_DELTA", "PATH_FULL", "PATH_NAMES",
+]

@@ -1,0 +1,103 @@
+"""Associative cosine aligner: full-scan, delta-update and score readout.
+
+Functional (masked) reference implementations of the two hardware access
+patterns (paper Sec. 4.2/4.3). The Pallas kernels in ``repro.kernels`` are
+drop-in accelerated versions validated against these.
+
+Accumulators are *integer dot products* over the enabled dimensions; cosine
+is applied only at readout (the ASIC's "normalization shift by log2 D'").
+This makes Eq. 6's delta corrections exact in the integer domain.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .item_memory import ItemMemory, word_mask
+from .types import TorrConfig
+
+
+def full_dot(q_packed: jax.Array, im: ItemMemory, wmask: jax.Array) -> jax.Array:
+    """Integer dot <q, h_j> over enabled words for all M classes.
+
+    q_packed: uint32 [W]; im.packed: uint32 [M, W]; wmask: bool [W].
+    dot = d_eff - 2 * hamming, with hamming counted on enabled words only.
+    """
+    x = jnp.bitwise_xor(q_packed[None, :], im.packed)          # [M, W]
+    pc = jax.lax.population_count(x).astype(jnp.int32)         # [M, W]
+    pc = jnp.where(wmask[None, :], pc, 0)
+    d_eff = 32 * jnp.sum(wmask.astype(jnp.int32))
+    return d_eff - 2 * jnp.sum(pc, axis=-1)                    # [M]
+
+
+def delta_indices(
+    q_new_packed: jax.Array,
+    q_old_packed: jax.Array,
+    wmask: jax.Array,
+    budget: int,
+    D: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """PSU (Sec. 4.4): flipped dims between queries, within the delta budget.
+
+    Returns (idx [budget] int32, weight [budget] int32 in {-2,0,+2},
+    count [] int32 = true |Delta| over enabled words). Padding entries have
+    weight 0 and idx 0; if count > budget the caller must escalate to full
+    (TorR-on-TPU adaptation: static budget instead of a data-dependent FIFO).
+    """
+    xor = jnp.bitwise_xor(q_new_packed, q_old_packed)
+    xor = jnp.where(wmask, xor, jnp.uint32(0))
+    count = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    flip_bits = ((xor[:, None] >> shifts) & jnp.uint32(1)).reshape(D)   # [D] 0/1
+    (idx,) = jnp.nonzero(flip_bits, size=budget, fill_value=0)
+    idx = idx.astype(jnp.int32)
+    in_budget = jnp.arange(budget, dtype=jnp.int32) < count
+    # q_new bit at flipped idx: +1 bit -> new value +1 -> correction +2.
+    new_bits = (q_new_packed[idx // 32] >> (idx % 32).astype(jnp.uint32)) & jnp.uint32(1)
+    weight = jnp.where(new_bits == 1, 2, -2).astype(jnp.int32)
+    weight = jnp.where(in_budget, weight, 0)
+    return idx, weight, count
+
+
+def delta_correct(
+    acc: jax.Array, im: ItemMemory, idx: jax.Array, weight: jax.Array
+) -> jax.Array:
+    """Eq. 6: acc_j += sum_{i in Delta} (q_i^t - q_i^{t-1}) h_{j,i}.
+
+    acc: int32 [M]; gathers rows of the D-major item memory.
+    """
+    rows = im.dmajor[idx, :].astype(jnp.int32)                 # [budget, M]
+    return acc + jnp.einsum("k,km->m", weight, rows)
+
+
+def readout(acc: jax.Array, d_eff: jax.Array | int) -> jax.Array:
+    """Cosine scores from integer accumulators (normalization 'shift')."""
+    return acc.astype(jnp.float32) / jnp.asarray(d_eff, jnp.float32)
+
+
+def full_scores(
+    q_packed: jax.Array, im: ItemMemory, cfg: TorrConfig, banks: jax.Array | int
+) -> tuple[jax.Array, jax.Array]:
+    """Convenience: (acc int32 [M], cosine f32 [M]) for a full scan."""
+    wmask = word_mask(cfg, banks)
+    acc = full_dot(q_packed, im, wmask)
+    d_eff = jnp.asarray(banks, jnp.int32) * cfg.bank_dims
+    return acc, readout(acc, d_eff)
+
+
+def full_dot_mxu(q_bipolar: jax.Array, im: ItemMemory,
+                 dmask: jax.Array) -> jax.Array:
+    """Beyond-paper alternative: bipolar cosine as a bf16 MXU matmul.
+
+    The paper's XNOR-popcount path minimizes *traffic* (1 bit/dim); on TPU
+    the MXU's 197 TFLOP/s bf16 can beat the VPU popcount pipeline when the
+    item memory already resides in VMEM (compute-bound regime, large M·D).
+    Exact for D <= 2^24 (bf16 holds the ±1 products; accumulation is f32 on
+    the MXU). q_bipolar: int8 [..., D]; returns int32 dots [..., M].
+    """
+    q = jnp.where(dmask, q_bipolar, 0).astype(jnp.bfloat16)
+    h = im.bipolar.astype(jnp.bfloat16)
+    dots = jax.lax.dot_general(
+        q, h, (((q.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return jnp.round(dots).astype(jnp.int32)

@@ -1,0 +1,97 @@
+"""Image->event training bridge (paper Sec. 3.2, Eq. 2-3).
+
+Contrastive transfer that places event features near image features in CLIP
+space while preserving text alignment:
+
+    L_con = InfoNCE( f_img(I), f_evt(E_hat) ; tau_c )        (Eq. 2)
+    L_zs  = InfoNCE( f_evt(E_hat), f_text(T) over vocab ; tau_t )   (Eq. 3)
+    L     = L_con + alpha * L_zs
+
+The CLIP encoders are *frozen*; offline we stand in deterministic frozen
+proxy encoders (random MLPs) with the same interface — the bridge math,
+gradients and convergence behaviour are identical, only the semantic quality
+of the targets differs (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def _l2norm(x: jax.Array, eps: float = 1e-8) -> jax.Array:
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
+
+
+def info_nce(anchor: jax.Array, positives: jax.Array, temperature: float) -> jax.Array:
+    """Diagonal InfoNCE: anchor[i] should match positives[i]. [B, d] each."""
+    a = _l2norm(anchor)
+    p = _l2norm(positives)
+    logits = (a @ p.T) / temperature                     # [B, B]
+    labels = jnp.arange(a.shape[0])
+    return jnp.mean(
+        -jax.nn.log_softmax(logits, axis=-1)[labels, labels]
+    )
+
+
+def zero_shot_loss(
+    event_emb: jax.Array, text_bank: jax.Array, labels: jax.Array, temperature: float
+) -> jax.Array:
+    """Eq. 3: event embedding vs the text vocabulary bank [V, d]."""
+    e = _l2norm(event_emb)
+    t = _l2norm(text_bank)
+    logits = (e @ t.T) / temperature                     # [B, V]
+    return jnp.mean(-jnp.take_along_axis(
+        jax.nn.log_softmax(logits, axis=-1), labels[:, None], axis=1))
+
+
+def bridge_loss(
+    image_emb: jax.Array,
+    event_emb: jax.Array,
+    text_bank: jax.Array,
+    labels: jax.Array,
+    *,
+    tau_c: float = 0.07,
+    tau_t: float = 0.07,
+    alpha: float = 1.0,
+) -> tuple[jax.Array, dict]:
+    """L = L_con + alpha * L_zs, with a metrics dict for logging."""
+    l_con = info_nce(image_emb, event_emb, tau_c)
+    l_zs = zero_shot_loss(event_emb, text_bank, labels, tau_t)
+    loss = l_con + alpha * l_zs
+    # zero-shot top-1 accuracy as a convergence signal
+    logits = _l2norm(event_emb) @ _l2norm(text_bank).T
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"l_con": l_con, "l_zs": l_zs, "zs_acc": acc}
+
+
+# ---------------------------------------------------------------------------
+# Frozen proxy CLIP encoders (offline stand-ins, deterministic)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FrozenProxy:
+    w1: jax.Array
+    w2: jax.Array
+
+    def tree_flatten(self):
+        return ((self.w1, self.w2), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        h = jnp.tanh(x @ self.w1)
+        return jax.lax.stop_gradient(h @ self.w2)
+
+
+def make_frozen_proxy(key: jax.Array, in_dim: int, emb_dim: int, hidden: int = 256) -> FrozenProxy:
+    k1, k2 = jax.random.split(key)
+    return FrozenProxy(
+        w1=jax.random.normal(k1, (in_dim, hidden)) / jnp.sqrt(in_dim),
+        w2=jax.random.normal(k2, (hidden, emb_dim)) / jnp.sqrt(hidden),
+    )

@@ -1,0 +1,127 @@
+"""Event SNN encoder (paper Sec. 3.2, 'Event SNN encoder').
+
+A lightweight spiking backbone over aggregated event windows: two conv-LIF
+stages scanned over time bins, rate-coded readout, then a linear head to the
+feature space z_e in R^d. Spikes use a straight-through surrogate gradient
+(sigmoid derivative) so the contrastive bridge (Eq. 2-3) can train the SNN
+end-to-end against frozen CLIP targets.
+
+The per-proposal query hypervector is q = sign(R z_e) with a fixed random
+projection R (not trained), per the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hdc
+
+_SURROGATE_BETA = 4.0
+
+
+@jax.custom_vjp
+def spike(v: jax.Array) -> jax.Array:
+    return (v > 0.0).astype(v.dtype)
+
+
+def _spike_fwd(v):
+    return spike(v), v
+
+
+def _spike_bwd(v, g):
+    s = jax.nn.sigmoid(_SURROGATE_BETA * v)
+    return (g * _SURROGATE_BETA * s * (1.0 - s),)
+
+
+spike.defvjp(_spike_fwd, _spike_bwd)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EncoderParams:
+    conv1: jax.Array   # [3, 3, 2, c1]
+    conv2: jax.Array   # [3, 3, c1, c2]
+    head: jax.Array    # [c2, d]
+    head_b: jax.Array  # [d]
+
+    def tree_flatten(self):
+        return ((self.conv1, self.conv2, self.head, self.head_b), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    c1: int = 16
+    c2: int = 32
+    feat_dim: int = 512
+    tau: float = 0.7        # LIF leak
+    thresh: float = 0.5     # firing threshold
+
+
+def init_encoder(key: jax.Array, cfg: EncoderConfig) -> EncoderParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    he = lambda k, shape, fan_in: jax.random.normal(k, shape) * jnp.sqrt(2.0 / fan_in)
+    return EncoderParams(
+        conv1=he(k1, (3, 3, 2, cfg.c1), 18),
+        conv2=he(k2, (3, 3, cfg.c1, cfg.c2), 9 * cfg.c1),
+        head=he(k3, (cfg.c2, cfg.feat_dim), cfg.c2),
+        head_b=jnp.zeros((cfg.feat_dim,)),
+    )
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def encode(params: EncoderParams, vol: jax.Array, cfg: EncoderConfig) -> jax.Array:
+    """vol: [T_bins, H, W, 2] (one proposal window) -> z_e [d].
+
+    LIF membrane potentials persist across time bins; the readout is the
+    spike rate of the second stage, globally pooled.
+    """
+    T, H, W, _ = vol.shape
+    h1, w1 = -(-H // 2), -(-W // 2)
+    h2, w2 = -(-h1 // 2), -(-w1 // 2)
+
+    def step(carry, x_t):
+        v1, v2, rate = carry
+        c1 = _conv(x_t[None], params.conv1, 2)[0]            # [h1, w1, c1]
+        v1 = cfg.tau * v1 + c1
+        s1 = spike(v1 - cfg.thresh)
+        v1 = v1 - s1 * cfg.thresh                             # soft reset
+        c2 = _conv(s1[None], params.conv2, 2)[0]              # [h2, w2, c2]
+        v2 = cfg.tau * v2 + c2
+        s2 = spike(v2 - cfg.thresh)
+        v2 = v2 - s2 * cfg.thresh
+        return (v1, v2, rate + s2), None
+
+    v1 = jnp.zeros((h1, w1, params.conv1.shape[-1]))
+    v2 = jnp.zeros((h2, w2, params.conv2.shape[-1]))
+    rate = jnp.zeros_like(v2)
+    (v1, v2, rate), _ = jax.lax.scan(step, (v1, v2, rate), vol)
+    pooled = jnp.mean(rate / T, axis=(0, 1))                  # [c2]
+    return pooled @ params.head + params.head_b               # [d]
+
+
+encode_batch = jax.vmap(encode, in_axes=(None, 0, None))
+
+
+def make_projection(key: jax.Array, D: int, d: int) -> jax.Array:
+    """Fixed random projection R [D, d] for q = sign(R z_e)."""
+    return jax.random.normal(key, (D, d)) / jnp.sqrt(d)
+
+
+def query_hv(params: EncoderParams, vol: jax.Array, R: jax.Array,
+             cfg: EncoderConfig) -> jax.Array:
+    """Full encoder -> bipolar query path."""
+    return hdc.sign_project(encode(params, vol, cfg), R)

@@ -1,0 +1,120 @@
+"""Hyperdimensional computing primitives.
+
+Bipolar hypervectors live in {-1,+1}^D stored as int8; the packed form packs
+32 dimensions per uint32 word (dimension i -> word i//32, bit i%32, bit value
+1 <=> +1). All similarity identities used by the paper hold exactly in packed
+form:
+
+    <a, b>        = D - 2 * hamming(pack(a), pack(b))
+    cos(a, b)     = <a, b> / D          (bipolar vectors have norm sqrt(D))
+    rho           = 1 - 2|Delta|/D'     (Eq. 5)
+
+Packing is the TPU adaptation of the paper's bit-sliced item memory: it
+compresses alignment traffic 32x, which is the actual target of the ASIC
+design (bandwidth, not FLOPs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "random_hv", "bind", "bundle", "permute", "sign_project",
+    "pack_bits", "unpack_bits", "dot_bipolar", "cosine_bipolar",
+    "hamming_packed", "dot_packed", "cosine_packed",
+]
+
+
+def random_hv(key: jax.Array, shape, dtype=jnp.int8) -> jax.Array:
+    """I.i.d. Rademacher hypervectors in {-1,+1}^shape[-1]."""
+    bits = jax.random.bernoulli(key, 0.5, shape)
+    return jnp.where(bits, 1, -1).astype(dtype)
+
+
+def bind(*hvs: jax.Array) -> jax.Array:
+    """Hadamard binding (elementwise product), associative and self-inverse."""
+    out = hvs[0]
+    for h in hvs[1:]:
+        out = out * h
+    return out
+
+
+def bundle(hvs: jax.Array, key: jax.Array | None = None) -> jax.Array:
+    """Majority bundling over the leading axis with random tie-breaking."""
+    s = jnp.sum(hvs.astype(jnp.int32), axis=0)
+    if key is not None:
+        tie = random_hv(key, s.shape, dtype=jnp.int32)
+        s = jnp.where(s == 0, tie, s)
+    return jnp.where(s >= 0, 1, -1).astype(jnp.int8)
+
+
+def permute(hv: jax.Array, shift: int = 1) -> jax.Array:
+    """Cyclic permutation (role encoding)."""
+    return jnp.roll(hv, shift, axis=-1)
+
+
+def sign_project(z: jax.Array, R: jax.Array) -> jax.Array:
+    """q = sign(R z): dense feature -> bipolar hypervector (paper Sec. 3.2).
+
+    R is [D, d]; z is [..., d]. sign(0) is mapped to +1 so the output is
+    strictly bipolar.
+    """
+    y = jnp.einsum("...d,Dd->...D", z.astype(jnp.float32), R.astype(jnp.float32))
+    return jnp.where(y >= 0, 1, -1).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Packed (1 bit/dim) representation
+# ---------------------------------------------------------------------------
+
+def pack_bits(bipolar: jax.Array) -> jax.Array:
+    """Pack bipolar int8 [..., D] -> uint32 [..., D//32]. Bit=1 <=> +1."""
+    D = bipolar.shape[-1]
+    if D % 32:
+        raise ValueError(f"D={D} must be a multiple of 32")
+    bits = (bipolar > 0).astype(jnp.uint32)
+    bits = bits.reshape(*bipolar.shape[:-1], D // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(packed: jax.Array, D: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`."""
+    if D != packed.shape[-1] * 32:
+        raise ValueError("D mismatch")
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*packed.shape[:-1], D)
+    return jnp.where(bits == 1, 1, -1).astype(jnp.int8)
+
+
+def dot_bipolar(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact integer dot product of bipolar vectors."""
+    return jnp.sum(a.astype(jnp.int32) * b.astype(jnp.int32), axis=-1)
+
+
+def cosine_bipolar(a: jax.Array, b: jax.Array) -> jax.Array:
+    return dot_bipolar(a, b).astype(jnp.float32) / a.shape[-1]
+
+
+def hamming_packed(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Number of differing dimensions, from packed words (XOR + popcount)."""
+    x = jax.lax.population_count(jnp.bitwise_xor(a, b))
+    return jnp.sum(x.astype(jnp.int32), axis=-1)
+
+
+def dot_packed(a: jax.Array, b: jax.Array, d_eff: jax.Array | int | None = None) -> jax.Array:
+    """<a,b> over the first d_eff dims = d_eff - 2*hamming (XNOR-popcount kernel).
+
+    ``a``/``b`` are packed words already restricted (sliced or masked) to the
+    enabled banks; ``d_eff`` defaults to 32 * n_words.
+    """
+    if d_eff is None:
+        d_eff = a.shape[-1] * 32
+    return jnp.asarray(d_eff, jnp.int32) - 2 * hamming_packed(a, b)
+
+
+def cosine_packed(a: jax.Array, b: jax.Array, d_eff: jax.Array | int | None = None) -> jax.Array:
+    if d_eff is None:
+        d_eff = a.shape[-1] * 32
+    return dot_packed(a, b, d_eff).astype(jnp.float32) / jnp.asarray(d_eff, jnp.float32)

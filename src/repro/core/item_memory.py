@@ -1,0 +1,96 @@
+"""Banked, bit-sliced item memory (paper Sec. 4.1/4.3).
+
+The ASIC stores M concept hypervectors bit-sliced across B SRAM banks with
+per-bank enables realizing the effective dimension D'. On TPU we keep three
+coherent views, each matched to an access pattern:
+
+  * ``bipolar``  int8  [M, D]   — source of truth (training / prototypes)
+  * ``packed``   uint32 [M, D/32] — full-scan XNOR-popcount path. Banks are
+    contiguous 32-bit word ranges, so D' gating is a *prefix* of words:
+    words_eff = banks * bank_words. We mask (functional mode) or slice
+    (kernel specialization) that prefix.
+  * ``dmajor``   int8  [D, M]   — delta path: one flipped dimension i reads
+    the contiguous row dmajor[i, :], the TPU analogue of the ASIC's
+    column-broadcast to W class lanes.
+
+All views are derived from ``bipolar`` by :func:`build_item_memory`; they are
+plain pytree leaves so the structure shards/jits cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import hdc
+from .types import TorrConfig
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ItemMemory:
+    bipolar: jax.Array   # int8  [M, D]
+    packed: jax.Array    # uint32 [M, D//32]
+    dmajor: jax.Array    # int8  [D, M]
+
+    @property
+    def M(self) -> int:
+        return self.bipolar.shape[0]
+
+    @property
+    def D(self) -> int:
+        return self.bipolar.shape[1]
+
+    def tree_flatten(self):
+        return ((self.bipolar, self.packed, self.dmajor), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def build_item_memory(bipolar: jax.Array) -> ItemMemory:
+    """Derive all access-pattern views from bipolar codes [M, D]."""
+    return ItemMemory(
+        bipolar=bipolar.astype(jnp.int8),
+        packed=hdc.pack_bits(bipolar),
+        dmajor=jnp.transpose(bipolar).astype(jnp.int8),
+    )
+
+
+def random_item_memory(key: jax.Array, cfg: TorrConfig) -> ItemMemory:
+    """Random concept codes (the classic HDC item memory)."""
+    return build_item_memory(hdc.random_hv(key, (cfg.M, cfg.D)))
+
+
+def item_memory_from_prototypes(
+    feats: jax.Array, R: jax.Array, key: jax.Array | None = None
+) -> ItemMemory:
+    """Class prototypes: bundle sign-projected examples per class.
+
+    ``feats`` is [M, n_examples, d]; ``R`` the [D, d] projection. This is how
+    the item memory is *trained* from encoder features so that the associative
+    aligner realizes the CLIP-transferred semantics.
+    """
+    hv = hdc.sign_project(feats, R)            # [M, n, D]
+    M = hv.shape[0]
+    if key is None:
+        bundled = jnp.where(jnp.sum(hv.astype(jnp.int32), 1) >= 0, 1, -1).astype(jnp.int8)
+    else:
+        keys = jax.random.split(key, M)
+        bundled = jax.vmap(hdc.bundle)(hv, keys)
+    return build_item_memory(bundled)
+
+
+def word_mask(cfg: TorrConfig, banks: jax.Array | int) -> jax.Array:
+    """Boolean mask [D//32] of packed words enabled by ``banks`` banks."""
+    words_eff = jnp.asarray(banks, jnp.int32) * cfg.bank_words
+    return jnp.arange(cfg.words, dtype=jnp.int32) < words_eff
+
+
+def dim_mask(cfg: TorrConfig, banks: jax.Array | int) -> jax.Array:
+    """Boolean mask [D] of dimensions enabled by ``banks`` banks."""
+    d_eff = jnp.asarray(banks, jnp.int32) * cfg.bank_dims
+    return jnp.arange(cfg.D, dtype=jnp.int32) < d_eff

@@ -1,0 +1,159 @@
+"""TorR end-to-end window step (paper Fig. 3/4/5).
+
+One call processes one event window: for each of up to N_max proposal
+queries, the PSU finds the nearest cached query, Alg. 1 selects
+bypass / delta / full, the associative aligner produces class scores, the
+reasoner applies (or gates) task weights, and the query cache is refreshed.
+Proposals are processed sequentially (lax.scan) so later proposals can hit
+entries written earlier in the same window — matching the ASIC's per-window
+FSM — and the three paths are real `lax.switch` branches, so only the
+selected path executes.
+
+The returned :class:`WindowTelemetry` trace is the input to the
+cycle-accurate model (`repro.perf.cycle_model`), keeping the functional and
+timing models in lock-step by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import aligner as al
+from . import policy, query_cache, reasoner
+from .item_memory import ItemMemory, word_mask
+from .query_cache import CacheState
+from .types import PATH_BYPASS, TorrConfig, WindowTelemetry
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TorrState:
+    cache: CacheState
+    task_weights: jax.Array  # f32 [M] precomputed w_j for the active task
+
+    def tree_flatten(self):
+        return ((self.cache, self.task_weights), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def init_state(cfg: TorrConfig, task_w: jax.Array) -> TorrState:
+    return TorrState(cache=query_cache.init_cache(cfg), task_weights=task_w)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WindowOutput:
+    scores: jax.Array   # f32 [N_max, M] final task-weighted scores
+    best: jax.Array     # int32 [N_max] argmax class per proposal
+    boxes: jax.Array    # f32 [N_max, 4] passthrough proposal boxes
+
+    def tree_flatten(self):
+        return ((self.scores, self.best, self.boxes), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, wmask, high):
+    """Scan body over proposals for a fixed window context (all closures are
+    window-constant traced values)."""
+    d_eff = banks * cfg.bank_dims
+
+    def body(cache: CacheState, inp):
+        q_packed, valid = inp
+        idx, rho, _ham = query_cache.nearest(cache, q_packed, cfg, banks)
+        d_idx, d_weight, d_count = al.delta_indices(
+            q_packed, cache.packed[idx], wmask, cfg.delta_budget, cfg.D
+        )
+        tag_ok = cache.acc_banks[idx] == banks
+        action = policy.select_path(rho, d_count, tag_ok, high, cfg)
+
+        def bypass_branch(cache):
+            out = cache.out[idx]
+            return query_cache.touch(cache, idx), out, jnp.array(False)
+
+        def delta_branch(cache):
+            acc = al.delta_correct(cache.acc[idx], im, d_idx, d_weight)
+            s = al.readout(acc, d_eff)
+            out, active, key, margin = reasoner.gate_and_apply(
+                s, task_w, cache.out[idx], cache.topk_key[idx],
+                cache.margin[idx], cfg,
+            )
+            cache = query_cache.write_entry(
+                cache, idx, packed=q_packed, acc=acc, acc_banks=banks,
+                out=out, topk_key=key, margin=margin,
+            )
+            return cache, out, active
+
+        def full_branch(cache):
+            acc = al.full_dot(q_packed, im, wmask)
+            s = al.readout(acc, d_eff)
+            out, active, key, margin = reasoner.gate_and_apply(
+                s, task_w, cache.out[idx], cache.topk_key[idx],
+                cache.margin[idx], cfg,
+            )
+            slot = query_cache.lru_slot(cache)
+            cache = query_cache.write_entry(
+                cache, slot, packed=q_packed, acc=acc, acc_banks=banks,
+                out=out, topk_key=key, margin=margin,
+            )
+            return cache, out, active
+
+        # Invalid (padding) proposals take a free branch that touches nothing.
+        def pad_branch(cache):
+            return cache, jnp.zeros((cfg.M,), jnp.float32), jnp.array(False)
+
+        eff_action = jnp.where(valid, action, jnp.int32(3))
+        cache, out, active = jax.lax.switch(
+            eff_action, [bypass_branch, delta_branch, full_branch, pad_branch], cache
+        )
+        telem = (eff_action, jnp.where(valid, d_count, 0),
+                 jnp.where(valid, rho, 0.0), active)
+        return cache, (out, telem)
+
+    return body
+
+
+def torr_window_step(
+    state: TorrState,
+    im: ItemMemory,
+    q_packed_all: jax.Array,   # uint32 [N_max, D//32] proposal query HVs
+    valid: jax.Array,          # bool [N_max]
+    boxes: jax.Array,          # f32 [N_max, 4]
+    queue_depth: jax.Array,    # int32 []
+    cfg: TorrConfig,
+) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
+    """Process one window; returns (new_state, detections, telemetry)."""
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    high = policy.high_load(n_valid, queue_depth, cfg)
+    banks = policy.select_banks(n_valid, queue_depth, cfg)
+    wmask = word_mask(cfg, banks)
+
+    body = _proposal_body(cfg, im, state.task_weights, banks, wmask, high)
+    cache, (outs, telem) = jax.lax.scan(body, state.cache, (q_packed_all, valid))
+
+    actions, d_counts, rhos, active = telem
+    # padding actions (3) are reported as bypass with zero cost
+    path = jnp.where(actions == 3, PATH_BYPASS, actions)
+    telemetry = WindowTelemetry(
+        path=path.astype(jnp.int32),
+        delta_count=d_counts.astype(jnp.int32),
+        banks=banks,
+        rho=rhos.astype(jnp.float32),
+        n_valid=n_valid,
+        reasoner_active=jnp.logical_and(active, valid),
+    )
+    out = WindowOutput(
+        scores=outs,
+        best=jnp.argmax(outs, axis=-1).astype(jnp.int32),
+        boxes=boxes,
+    )
+    return TorrState(cache=cache, task_weights=state.task_weights), out, telemetry

@@ -1,0 +1,91 @@
+"""Algorithm 1: similarity-gated path policy + FPS/QoS bank gating.
+
+The controller is a pure function of (rho, |Delta|, N, q) and static
+thresholds, so it lowers to a handful of scalar ops and stays off the
+critical path — mirroring the window-latched register file of Sec. 4.6.
+
+TPU adaptations (recorded in DESIGN.md):
+  * delta additionally requires |Delta| <= delta_budget (static-shape budget
+    replaces the ASIC's data-dependent FIFO) and an accumulator whose D' tag
+    matches the current bank mask (exactness of Eq. 6).
+  * D' selection solves the cycle model of Sec. 4.3 for the largest bank
+    count whose worst-case window latency fits the FPS budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import PATH_BYPASS, PATH_DELTA, PATH_FULL, TorrConfig
+
+
+def high_load(n_objects: jax.Array, queue_depth: jax.Array, cfg: TorrConfig) -> jax.Array:
+    """H(N, q) = (N >= N_hi) or (q >= q_hi)."""
+    return jnp.logical_or(n_objects >= cfg.N_hi, queue_depth >= cfg.q_hi)
+
+
+def select_path(
+    rho: jax.Array,
+    delta_count: jax.Array,
+    acc_tag_ok: jax.Array,
+    high: jax.Array,
+    cfg: TorrConfig,
+) -> jax.Array:
+    """Alg. 1 lines 2-8, with the TPU delta-feasibility guards."""
+    delta_ok = jnp.logical_and(
+        rho >= cfg.tau_q,
+        jnp.logical_and(delta_count <= cfg.delta_budget, acc_tag_ok),
+    )
+    bypass = jnp.logical_and(rho >= cfg.tau_byp, high)
+    return jnp.where(
+        bypass, PATH_BYPASS, jnp.where(delta_ok, PATH_DELTA, PATH_FULL)
+    ).astype(jnp.int32)
+
+
+def window_cycles(
+    n_full: jax.Array, n_delta: jax.Array, banks: jax.Array, cfg: TorrConfig
+) -> jax.Array:
+    """Cycle estimate per Sec. 4.3: full = D'*ceil(M/W), delta = |Dmax|*ceil(M/W).
+
+    A small fixed per-proposal overhead models PSU + reasoner + sort
+    (each pipelined, ~M/W plus constant).
+    """
+    mw = -(-cfg.M // cfg.W)  # ceil(M/W)
+    d_eff = banks * cfg.bank_dims
+    per_full = d_eff * mw
+    per_delta = cfg.delta_budget * mw
+    overhead = (n_full + n_delta) * (mw + 64)
+    return n_full * per_full + n_delta * per_delta + overhead
+
+
+def select_banks(
+    n_objects: jax.Array, queue_depth: jax.Array, cfg: TorrConfig
+) -> jax.Array:
+    """QoS bank gating: largest banks whose worst case (all-full) fits budget.
+
+    Worst case assumes every proposal takes the full path; queue depth adds
+    pressure by shrinking the effective budget (the window must drain
+    backlog). Always returns at least 1 bank.
+    """
+    budget = cfg.cycles_per_window_budget / (1.0 + queue_depth.astype(jnp.float32))
+    n = jnp.maximum(n_objects, 1)
+    candidates = jnp.arange(1, cfg.B + 1, dtype=jnp.int32)
+    worst = jax.vmap(lambda b: window_cycles(n, jnp.int32(0), b, cfg))(candidates)
+    fits = worst.astype(jnp.float32) <= budget
+    best = jnp.max(jnp.where(fits, candidates, 1))
+    return best.astype(jnp.int32)
+
+
+def decide(
+    rho: jax.Array,
+    delta_count: jax.Array,
+    acc_tag_ok: jax.Array,
+    n_objects: jax.Array,
+    queue_depth: jax.Array,
+    cfg: TorrConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """(action, banks) per Alg. 1 line 9's combined return."""
+    high = high_load(n_objects, queue_depth, cfg)
+    banks = select_banks(n_objects, queue_depth, cfg)
+    action = select_path(rho, delta_count, acc_tag_ok, high, cfg)
+    return action, banks

@@ -1,0 +1,120 @@
+"""Depth-K query cache with per-entry per-class accumulators (paper Fig. 4).
+
+Each entry carries everything the three execution paths need:
+
+  * the packed query hypervector (for the PSU's nearest-match + XOR),
+  * the integer per-class accumulator and the D' tag it was computed under
+    (delta corrections are only exact against the same enabled-bank set),
+  * the cached *final* output scores (for aggressive bypass),
+  * the aligner top-k key + margin of the last window (reasoner gating),
+  * age / validity bookkeeping for LRU refresh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import hdc
+from .item_memory import word_mask
+from .types import TorrConfig
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CacheState:
+    packed: jax.Array     # uint32 [K, D//32] cached queries
+    acc: jax.Array        # int32  [K, M] per-class dot accumulators
+    acc_banks: jax.Array  # int32  [K] D' tag (enabled banks) for acc
+    out: jax.Array        # f32    [K, M] cached final (post-reasoner) scores
+    topk_key: jax.Array   # int32  [K, top_k] aligner top-k indices last window
+    margin: jax.Array     # f32    [K] aligner top-1/top-2 margin last window
+    age: jax.Array        # int32  [K]
+    valid: jax.Array      # bool   [K]
+
+    def tree_flatten(self):
+        return (
+            (self.packed, self.acc, self.acc_banks, self.out, self.topk_key,
+             self.margin, self.age, self.valid),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def init_cache(cfg: TorrConfig) -> CacheState:
+    K = cfg.K
+    return CacheState(
+        packed=jnp.zeros((K, cfg.words), jnp.uint32),
+        acc=jnp.zeros((K, cfg.M), jnp.int32),
+        acc_banks=jnp.zeros((K,), jnp.int32),
+        out=jnp.zeros((K, cfg.M), jnp.float32),
+        topk_key=jnp.full((K, cfg.top_k), -1, jnp.int32),
+        margin=jnp.zeros((K,), jnp.float32),
+        age=jnp.full((K,), jnp.iinfo(jnp.int32).max // 2, jnp.int32),
+        valid=jnp.zeros((K,), bool),
+    )
+
+
+def nearest(
+    cache: CacheState, q_packed: jax.Array, cfg: TorrConfig, banks: jax.Array | int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Nearest cached query over enabled words.
+
+    Returns (idx [] int32, rho [] f32 per Eq. 5, hamming [] int32).
+    Invalid entries are pushed to rho = -inf; if no entry is valid the caller
+    sees rho = -inf and takes the full path.
+    """
+    wmask = word_mask(cfg, banks)
+    xor = jnp.bitwise_xor(cache.packed, q_packed[None, :])       # [K, W]
+    pc = jax.lax.population_count(xor).astype(jnp.int32)
+    pc = jnp.where(wmask[None, :], pc, 0)
+    ham = jnp.sum(pc, axis=-1)                                    # [K]
+    d_eff = (jnp.asarray(banks, jnp.int32) * cfg.bank_dims).astype(jnp.float32)
+    rho = 1.0 - 2.0 * ham.astype(jnp.float32) / d_eff             # Eq. 5
+    rho = jnp.where(cache.valid, rho, -jnp.inf)
+    idx = jnp.argmax(rho)
+    return idx.astype(jnp.int32), rho[idx], ham[idx]
+
+
+def lru_slot(cache: CacheState) -> jax.Array:
+    """Slot to evict: first invalid entry, else the oldest."""
+    score = jnp.where(cache.valid, cache.age, jnp.iinfo(jnp.int32).max)
+    return jnp.argmax(score).astype(jnp.int32)
+
+
+def write_entry(
+    cache: CacheState,
+    slot: jax.Array,
+    *,
+    packed: jax.Array,
+    acc: jax.Array,
+    acc_banks: jax.Array,
+    out: jax.Array,
+    topk_key: jax.Array,
+    margin: jax.Array,
+) -> CacheState:
+    """Write/refresh one entry and rejuvenate it; everyone else ages."""
+    age = cache.age + 1
+    age = age.at[slot].set(0)
+    return CacheState(
+        packed=cache.packed.at[slot].set(packed),
+        acc=cache.acc.at[slot].set(acc),
+        acc_banks=cache.acc_banks.at[slot].set(jnp.asarray(acc_banks, jnp.int32)),
+        out=cache.out.at[slot].set(out),
+        topk_key=cache.topk_key.at[slot].set(topk_key),
+        margin=cache.margin.at[slot].set(margin),
+        age=age,
+        valid=cache.valid.at[slot].set(True),
+    )
+
+
+def touch(cache: CacheState, slot: jax.Array) -> CacheState:
+    """Bypass hit: rejuvenate the entry without modifying its contents."""
+    age = cache.age + 1
+    age = age.at[slot].set(0)
+    return dataclasses.replace(cache, age=age)

@@ -1,0 +1,141 @@
+"""HDC graph reasoner (paper Sec. 3.2 / 4.5).
+
+Task knowledge lives in relation hypervectors {r_l} (used-for, part-of, ...).
+A k-hop path P = (l1..lk) composes g_P = t (*) r_l1 (*) ... (*) r_lk by
+Hadamard binding; the reasoner weight for concept j is w_j = cos(g_P, h_j)
+and the final score is s_hat_j = s_j * w_j.
+
+For fixed prompts the weights are precomputed once (``precompute_weights``);
+online prompt changes reuse the same similarity kernel by treating g_P as a
+query (Sec. 4.5). Reasoner *gating*: when the aligner's top-k key and margin
+match the cached window, the multiply is skipped and the cached output is
+forwarded.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import hdc
+from .item_memory import ItemMemory, dim_mask
+from .types import TorrConfig
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TaskGraph:
+    relations: jax.Array  # int8 [n_relations, D]
+    text_hv: jax.Array    # int8 [n_tasks, D] prompt hypervectors t
+
+    def tree_flatten(self):
+        return ((self.relations, self.text_hv), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def init_task_graph(key: jax.Array, cfg: TorrConfig, n_tasks: int) -> TaskGraph:
+    k1, k2 = jax.random.split(key)
+    return TaskGraph(
+        relations=hdc.random_hv(k1, (cfg.n_relations, cfg.D)),
+        text_hv=hdc.random_hv(k2, (n_tasks, cfg.D)),
+    )
+
+
+def compose_path(
+    graph: TaskGraph, task_id: jax.Array | int, path_ids: jax.Array
+) -> jax.Array:
+    """g_P = t (*) r_{l1} (*) ... (*) r_{lk}.
+
+    ``path_ids`` is int32 [max_hops]; entries < 0 are padding (bind with the
+    identity +1 vector), allowing variable-hop paths under static shapes.
+    """
+    t = graph.text_hv[task_id].astype(jnp.int32)
+
+    def hop(g, rid):
+        r = jnp.where(rid >= 0, graph.relations[jnp.maximum(rid, 0)].astype(jnp.int32), 1)
+        return g * r, None
+
+    g, _ = jax.lax.scan(hop, t, path_ids)
+    return g.astype(jnp.int8)
+
+
+def task_weights(
+    g_P: jax.Array, im: ItemMemory, cfg: TorrConfig, banks: jax.Array | int
+) -> jax.Array:
+    """w_j = cos(g_P, h_j) over enabled dims, f32 [M]."""
+    dmask = dim_mask(cfg, banks)
+    g = jnp.where(dmask, g_P.astype(jnp.int32), 0)
+    dots = jnp.einsum("d,md->m", g, im.bipolar.astype(jnp.int32))
+    d_eff = jnp.sum(dmask.astype(jnp.int32)).astype(jnp.float32)
+    return dots.astype(jnp.float32) / d_eff
+
+
+def precompute_weights(
+    graph: TaskGraph,
+    im: ItemMemory,
+    cfg: TorrConfig,
+    task_paths: jax.Array,
+) -> jax.Array:
+    """Offline weights for fixed tasks: [n_tasks, M] at full D.
+
+    ``task_paths`` is int32 [n_tasks, max_hops] with -1 padding.
+    """
+    n_tasks = graph.text_hv.shape[0]
+
+    def one(tid):
+        g = compose_path(graph, tid, task_paths[tid])
+        return task_weights(g, im, cfg, cfg.B)
+
+    return jax.vmap(one)(jnp.arange(n_tasks))
+
+
+def online_weights(
+    graph: TaskGraph, im: ItemMemory, cfg: TorrConfig,
+    task_id: jax.Array, path_ids: jax.Array, banks: jax.Array | int,
+) -> jax.Array:
+    """Online prompt change (paper Sec. 4.5): recompute w_j at run time by
+    treating g_P as a query through the same similarity kernel the aligner
+    uses (XNOR-popcount over the packed item memory)."""
+    from . import hdc
+    from .item_memory import word_mask
+
+    g = compose_path(graph, task_id, path_ids)
+    gp = hdc.pack_bits(g)
+    wmask = word_mask(cfg, banks)
+    xor = jnp.bitwise_xor(gp[None, :], im.packed)            # [M, W]
+    pc = jnp.where(wmask[None, :],
+                   jax.lax.population_count(xor).astype(jnp.int32), 0)
+    d_eff = jnp.asarray(banks, jnp.int32) * cfg.bank_dims
+    dots = d_eff - 2 * jnp.sum(pc, axis=-1)
+    return dots.astype(jnp.float32) / d_eff.astype(jnp.float32)
+
+
+def topk_key_margin(scores: jax.Array, cfg: TorrConfig) -> tuple[jax.Array, jax.Array]:
+    """Aligner top-k indices and top-1/top-2 margin used for gating."""
+    vals, idx = jax.lax.top_k(scores, cfg.top_k)
+    margin = vals[0] - vals[1]
+    return idx.astype(jnp.int32), margin
+
+
+def gate_and_apply(
+    scores: jax.Array,
+    weights: jax.Array,
+    cached_out: jax.Array,
+    cached_key: jax.Array,
+    cached_margin: jax.Array,
+    cfg: TorrConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sec. 4.5 gating. Returns (out [M], reasoner_active, new_key, new_margin)."""
+    key, margin = topk_key_margin(scores, cfg)
+    match = jnp.logical_and(
+        jnp.all(key == cached_key),
+        jnp.abs(margin - cached_margin) <= cfg.margin_eps,
+    )
+    reasoned = scores * weights
+    out = jnp.where(match, cached_out, reasoned)
+    return out, jnp.logical_not(match), key, margin

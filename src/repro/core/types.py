@@ -1,0 +1,111 @@
+"""Shared configuration/state types for the TorR core.
+
+Everything here is a static (hashable) config or a JAX pytree. The config
+mirrors the paper's deployment-time knobs: dimension D, bank count B (so the
+effective dimension D' is a multiple of D/B), similarity thresholds
+(tau_byp, tau_q), load thresholds (N_hi, q_hi), the delta budget, lane count
+W and clock — the last two parameterize the cycle model of paper Sec. 4.7.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TorrConfig:
+    """Static TorR configuration (hashable; safe as a jit static arg)."""
+
+    # --- HDC geometry -----------------------------------------------------
+    D: int = 8192            # full hypervector dimension
+    B: int = 8               # item-memory banks (D' = k * D/B, k in 1..B)
+    M: int = 128             # number of concept hypervectors in item memory
+    feat_dim: int = 512      # encoder feature dim d (z_e in R^d)
+
+    # --- cache / reuse ----------------------------------------------------
+    K: int = 8               # query-cache depth
+    N_max: int = 16          # max proposals (queries) per window
+    delta_budget: int = 1024 # static |Delta| budget (TPU adaptation; multiple of 128)
+
+    # --- Alg. 1 thresholds --------------------------------------------------
+    tau_byp: float = 0.95    # bypass similarity threshold
+    tau_q: float = 0.60      # delta-vs-full similarity threshold
+    N_hi: int = 8            # high-load object count
+    q_hi: int = 4            # high-load queue depth
+
+    # --- reasoner ----------------------------------------------------------
+    n_relations: int = 16    # relation hypervectors (used-for, part-of, ...)
+    max_hops: int = 3        # max k-hop relation path length
+    top_k: int = 5           # top-k key width for reasoner gating
+    margin_eps: float = 0.02 # margin tolerance for reasoner gating
+
+    # --- hardware model (paper Sec. 4.3 / 4.7, TSMC 28nm @ 1 GHz) ----------
+    W: int = 64              # class lanes in the associative aligner
+    clock_hz: float = 1.0e9  # 1 GHz
+    accum_bits: int = 8      # accumulator precision knob (int8; int4 has no TPU analogue)
+
+    # --- QoS ---------------------------------------------------------------
+    fps_target: float = 60.0
+
+    def __post_init__(self):
+        if self.D % (self.B * 32) != 0:
+            raise ValueError(f"D={self.D} must be divisible by 32*B={32 * self.B}")
+        if self.delta_budget % 8 != 0:
+            raise ValueError("delta_budget must be a multiple of 8")
+
+    @property
+    def words(self) -> int:
+        """Total packed uint32 words per hypervector."""
+        return self.D // 32
+
+    @property
+    def bank_dims(self) -> int:
+        """Dimensions per bank (D/B)."""
+        return self.D // self.B
+
+    @property
+    def bank_words(self) -> int:
+        return self.bank_dims // 32
+
+    def d_eff(self, banks: jax.Array | int) -> jax.Array | int:
+        """Effective dimension D' for a given number of enabled banks."""
+        return banks * self.bank_dims
+
+    @property
+    def cycles_per_window_budget(self) -> float:
+        return self.clock_hz / self.fps_target
+
+
+# Path encodings shared by the policy, pipeline and cycle model.
+PATH_BYPASS = 0
+PATH_DELTA = 1
+PATH_FULL = 2
+PATH_NAMES = ("bypass", "delta", "full")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WindowTelemetry:
+    """Per-window execution trace (feeds the cycle-accurate model)."""
+
+    path: jax.Array        # [N_max] int32, PATH_* per proposal
+    delta_count: jax.Array # [N_max] int32, |Delta| per proposal
+    banks: jax.Array       # [] int32, enabled banks this window
+    rho: jax.Array         # [N_max] f32, similarity to nearest cached query
+    n_valid: jax.Array     # [] int32, actual proposals this window
+    reasoner_active: jax.Array  # [N_max] bool, reasoner ran (not gated)
+
+    def tree_flatten(self):
+        return (
+            (self.path, self.delta_count, self.banks, self.rho, self.n_valid,
+             self.reasoner_active),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for TorR's compute hot-spots, with jnp oracles.
+
+Kernels (each: <name>.py = pl.pallas_call + BlockSpec; ops.py = jit'd
+wrappers; ref.py = pure-jnp oracles):
+  * xnor_popcount_sim — full-scan bipolar cosine (bit-packed, VPU popcount)
+  * delta_update      — Eq. 6 sparse accumulator corrections (scalar-prefetch
+                        index streaming = the Delta-FIFO's TPU analogue)
+  * sign_project      — fused q = sign(R z) (MXU matmul + int8 quantize)
+"""
+from . import ops, ref
+from .delta_update import delta_update
+from .sign_project import sign_project
+from .xnor_popcount_sim import packed_hamming
+
+__all__ = ["ops", "ref", "delta_update", "sign_project", "packed_hamming"]

@@ -1,0 +1,66 @@
+"""Delta-update kernel: sparse accumulator corrections (paper Eq. 6, Sec 4.3).
+
+The ASIC pops flipped-bit indices from a Delta-FIFO and touches only those
+item-memory columns. On TPU the FIFO becomes a *scalar-prefetched index
+array* (static delta-budget length): the grid's fast dimension walks the
+budget, and the index_map uses the prefetched index to fetch exactly the
+flipped row of the D-major item memory — so only O(|Delta| * M) bytes move,
+never O(D * M). Padding entries carry weight 0 (and index 0), preserving
+exactness.
+
+Grid: (class-tiles, budget); per step the kernel adds
+    weight[k] * dmajor[idx[k], m_tile]
+into the persistent accumulator block, initialized from acc_in at k == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, w_ref, acc_in_ref, dmaj_ref, out_ref):
+    del idx_ref
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = acc_in_ref[...]
+
+    out_ref[...] += w_ref[k] * dmaj_ref[0, :].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def delta_update(
+    acc: jax.Array,      # int32 [M] persistent per-class accumulators
+    dmajor: jax.Array,   # int8  [D, M] D-major item memory
+    idx: jax.Array,      # int32 [budget] flipped dims (0-padded)
+    weight: jax.Array,   # int32 [budget] in {-2, 0, +2}
+    *,
+    tm: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """acc + sum_k weight[k] * dmajor[idx[k], :], via sparse row streaming."""
+    (M,) = acc.shape
+    budget = idx.shape[0]
+    tm = min(tm, M)
+    assert M % tm == 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(M // tm, budget),
+        in_specs=[
+            pl.BlockSpec((tm,), lambda m, k, idx, w: (m,)),
+            pl.BlockSpec((1, tm), lambda m, k, idx, w: (idx[k], m)),
+        ],
+        out_specs=pl.BlockSpec((tm,), lambda m, k, idx, w: (m,)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.int32),
+        interpret=interpret,
+    )(idx, weight, acc, dmajor)

@@ -1,0 +1,89 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework uses. Each chooses the
+kernel when shapes are kernel-friendly and transparently falls back to the
+oracle otherwise (ragged shapes, tiny trailing dims), so callers never see a
+shape constraint. ``interpret`` defaults to True because this container runs
+on CPU; on TPU pass interpret=False (the BlockSpecs are TPU-shaped).
+
+Bank gating contract: ``banks`` is a *static* int here. The controller's
+per-window bank choice is latched on the host (exactly like the ASIC's
+window-latched registers, Sec. 4.6) and dispatches one of <= B specialized
+executables; the functionally-equivalent traced-banks path lives in
+``repro.core.aligner`` for fully-jitted pipelines.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .delta_update import delta_update as _delta_kernel
+from .sign_project import sign_project as _sign_kernel
+from .xnor_popcount_sim import packed_hamming as _ham_kernel
+
+
+def packed_similarity(
+    q_packed: jax.Array,     # uint32 [N, W_total]
+    im_packed: jax.Array,    # uint32 [M, W_total]
+    *,
+    banks: int,
+    bank_words: int,
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-scan scores under D' = 32 * banks * bank_words enabled dims.
+
+    Returns (acc int32 [N, M], cosine f32 [N, M]).
+    """
+    words_eff = banks * bank_words
+    d_eff = 32 * words_eff
+    q = q_packed[:, :words_eff]
+    h = im_packed[:, :words_eff]
+    M = im_packed.shape[0]
+    if use_kernel and words_eff % 128 == 0 and M % 8 == 0:
+        tm = M if M <= 128 else 128
+        while M % tm:
+            tm //= 2
+        ham = _ham_kernel(q, h, tm=tm, tw=128, interpret=interpret)
+    else:
+        ham = ref.packed_hamming_ref(q, h)
+    acc = d_eff - 2 * ham
+    return acc, acc.astype(jnp.float32) / d_eff
+
+
+def delta_update(
+    acc: jax.Array,       # int32 [M]
+    dmajor: jax.Array,    # int8 [D, M]
+    idx: jax.Array,       # int32 [budget]
+    weight: jax.Array,    # int32 [budget]
+    *,
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Sparse Eq. 6 correction; falls back to the oracle off-tile."""
+    M = acc.shape[0]
+    if use_kernel and M % 8 == 0:
+        tm = M if M <= 128 else 128
+        while M % tm:
+            tm //= 2
+        return _delta_kernel(acc, dmajor, idx, weight, tm=tm, interpret=interpret)
+    return ref.delta_update_ref(acc, dmajor, idx, weight)
+
+
+def sign_project(
+    z: jax.Array,   # f32 [N, d]
+    R: jax.Array,   # f32 [D, d]
+    *,
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Fused bipolar projection; falls back to the oracle off-tile."""
+    N, _ = z.shape
+    D, _ = R.shape
+    if use_kernel and D % 128 == 0 and N % 8 == 0:
+        td = 256 if D % 256 == 0 else 128
+        return _sign_kernel(z, R, tn=8, td=td, interpret=interpret)
+    return ref.sign_project_ref(z, R)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for every Pallas kernel (shape/dtype-exact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def packed_hamming_ref(q_packed: jax.Array, im_packed: jax.Array) -> jax.Array:
+    """int32 [N, M] hamming distances from packed uint32 words."""
+    x = jnp.bitwise_xor(q_packed[:, None, :], im_packed[None, :, :])
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def delta_update_ref(
+    acc: jax.Array, dmajor: jax.Array, idx: jax.Array, weight: jax.Array
+) -> jax.Array:
+    """int32 [M]: acc + sum_k weight[k] * dmajor[idx[k], :]."""
+    rows = dmajor[idx, :].astype(jnp.int32)
+    return acc + jnp.einsum("k,km->m", weight, rows)
+
+
+def sign_project_ref(z: jax.Array, R: jax.Array) -> jax.Array:
+    """int8 [N, D] = sign(z @ R.T), sign(0) -> +1."""
+    y = z.astype(jnp.float32) @ R.astype(jnp.float32).T
+    return jnp.where(y >= 0.0, 1, -1).astype(jnp.int8)

@@ -1,0 +1,67 @@
+"""XNOR-popcount associative similarity kernel (paper Sec. 4.2/4.3, full path).
+
+TPU adaptation of the ASIC's shared bipolar-cosine micro-kernel: hypervectors
+are packed 32 dims/word; XOR + population_count on the VPU gives the hamming
+distance, and dot = d_eff - 2*hamming. Bank gating (D') is realized by
+*static word-count specialization* — the wrapper slices the enabled prefix of
+words, so each D' compiles to a kernel that genuinely reads less memory
+(the TPU analogue of SRAM bank enables).
+
+Grid: (queries, class-tiles, word-tiles), word dim fastest so each (n, m)
+output block accumulates hamming counts across word tiles in VMEM.
+
+Block shapes: item-memory tile (TM, TW) uint32 in VMEM; TW is a multiple of
+128 (lane width), TM a multiple of 8 (sublane). The M x TW tile is broadcast
+against one query row — the analogue of the ASIC's column broadcast to W
+class lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, im_ref, ham_ref):
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        ham_ref[...] = jnp.zeros_like(ham_ref)
+
+    x = jnp.bitwise_xor(q_ref[0, :][None, :], im_ref[...])      # [TM, TW]
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    ham_ref[...] += jnp.sum(pc, axis=1)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tw", "interpret"))
+def packed_hamming(
+    q_packed: jax.Array,    # uint32 [N, W_eff]  (already sliced to enabled words)
+    im_packed: jax.Array,   # uint32 [M, W_eff]
+    *,
+    tm: int = 128,
+    tw: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Hamming distance of every query to every class: int32 [N, M]."""
+    N, W = q_packed.shape
+    M, W2 = im_packed.shape
+    assert W == W2, (W, W2)
+    tm = min(tm, M)
+    tw = min(tw, W)
+    assert M % tm == 0 and W % tw == 0, (M, tm, W, tw)
+
+    grid = (N, M // tm, W // tw)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tw), lambda n, m, w: (n, w)),
+            pl.BlockSpec((tm, tw), lambda n, m, w: (m, w)),
+        ],
+        out_specs=pl.BlockSpec((1, tm), lambda n, m, w: (n, m)),
+        out_shape=jax.ShapeDtypeStruct((N, M), jnp.int32),
+        interpret=interpret,
+    )(q_packed, im_packed)

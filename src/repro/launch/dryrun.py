@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`) so the
+XLA_FLAGS above take effect before jax initializes. Produces one JSON per
+cell under experiments/dryrun/ with memory analysis, cost analysis and the
+three roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+    python -m repro.launch.dryrun --arch all --shape all          # sweep
+    python -m repro.launch.dryrun ... --multi-pod                 # 2x16x16
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs.registry import ARCHS, SHAPES, get, shape_for
+from ..perf import roofline
+from ..runtime import steps
+from .mesh import make_production_mesh
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path = OUT_DIR, variant: str = "baseline",
+             cfg_override=None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}__{variant}"
+    out_path = out_dir / f"{cell_id}.json"
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    shape = shape_for(arch, shape_name)
+    if shape is None:
+        rec = {"cell": cell_id, "status": "SKIP",
+               "reason": "full-attention arch; long_500k requires "
+                         "sub-quadratic attention (see DESIGN.md)"}
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    cfg = cfg_override or get(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    try:
+        lowered, meta = steps.lower_cell(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rl = roofline.analyze(
+            compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+            chips=chips, model_flops=roofline.model_flops_for(cfg, shape))
+        rec = {
+            "cell": cell_id, "status": "OK", "mode": meta["mode"],
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            **rl.to_dict(),
+        }
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        rec = {"cell": cell_id, "status": "FAIL",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out-dir", default=str(OUT_DIR))
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides for §Perf variants, e.g. "
+                         "--set serve_quant=int8 --set attn_remat=True")
+    args = ap.parse_args()
+
+    cfg_override = None
+    if args.set:
+        import dataclasses
+        kv = {}
+        for item in args.set:
+            k, v = item.split("=", 1)
+            kv[k] = (v == "True" if v in ("True", "False")
+                     else int(v) if v.lstrip("-").isdigit() else v)
+
+        def make_override(arch):
+            return dataclasses.replace(get(arch), **kv)
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    rc = 0
+    for a in archs:
+        for s in shapes:
+            rec = run_cell(a, s, args.multi_pod,
+                           pathlib.Path(args.out_dir), args.variant,
+                           cfg_override=make_override(a) if args.set else None)
+            status = rec["status"]
+            extra = ""
+            if status == "OK":
+                extra = (f" bottleneck={rec['bottleneck']}"
+                         f" t=({rec['t_compute']:.3e},{rec['t_memory']:.3e},"
+                         f"{rec['t_collective']:.3e})s"
+                         f" compile={rec['compile_s']}s")
+            elif status == "FAIL":
+                extra = " " + rec["error"][:200]
+                rc = 1
+            print(f"[dryrun] {rec['cell']}: {status}{extra}", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,99 @@
+"""Training launcher: end-to-end driver with checkpoint/restart.
+
+Runs a real training loop on whatever devices exist (CPU here; the same
+code jits against the production mesh on a fleet). Supports fault injection
+(--fault-at) to demonstrate supervised recovery, gradient compression on a
+DP axis, and elastic restore from a checkpoint taken on a different mesh.
+
+Example (smoke-size, a few hundred steps):
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+        --smoke --steps 300 --batch 8 --seq 128 --ckpt /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs import get, get_smoke
+from ..data.tokens import TokenStream
+from ..models import transformer as tf
+from ..optim import adamw
+from ..runtime import sharding as shd
+from ..runtime.fault import SupervisorConfig, TrainSupervisor
+from ..runtime.steps import make_train_step
+from .mesh import make_host_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fault-at", type=int, default=None)
+    ap.add_argument("--data-axis", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
+    mesh = make_host_mesh(args.data_axis, args.model_axis)
+    opt_cfg = adamw.OptimConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                                total_steps=args.steps)
+
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.device_put(params, shd.params_sharding(params, mesh))
+    opt_state = adamw.init_opt_state(params)
+    stream = TokenStream(cfg, args.batch, args.seq)
+
+    raw_step = make_train_step(cfg, opt_cfg)
+    jstep = jax.jit(raw_step, donate_argnums=(0, 1))
+
+    ckpt = CheckpointManager(args.ckpt, keep_last=3)
+    state = {"params": params, "opt": opt_state}
+    start = 0
+    if args.resume and ckpt.latest_step() is not None:
+        state, start = ckpt.restore(state)
+        print(f"[train] resumed from step {start}")
+
+    losses = []
+
+    def step_fn(state, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, metrics = jstep(state["params"], state["opt"], batch)
+        losses.append(float(metrics["loss"]))
+        return {"params": p, "opt": o}
+
+    def data_stream(step):
+        return stream.stream(step)
+
+    sup = TrainSupervisor(step_fn, ckpt,
+                          SupervisorConfig(ckpt_every=args.ckpt_every))
+    t0 = time.time()
+    state, end = sup.run(state, data_stream, args.steps, start_step=start,
+                         fault_at=args.fault_at)
+    dt = time.time() - t0
+    k = max(1, min(10, len(losses)))
+    print(f"[train] arch={cfg.name} steps={end} restarts={sup.restarts} "
+          f"loss_first10={np.mean(losses[:k]):.4f} "
+          f"loss_last10={np.mean(losses[-k:]):.4f} "
+          f"({dt:.1f}s, {dt/max(len(losses),1)*1e3:.0f} ms/step)")
+    if len(losses) > 20:
+        assert np.mean(losses[-10:]) < np.mean(losses[:10]), \
+            "loss did not improve"
+        print("[train] loss improved ✓")
+
+
+if __name__ == "__main__":
+    main()

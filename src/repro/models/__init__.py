@@ -1,0 +1,6 @@
+"""Model zoo: composable decoder families for the assigned architectures."""
+from . import attention, config, layers, mla, moe, recurrent, transformer
+from .config import ModelConfig
+
+__all__ = ["attention", "config", "layers", "mla", "moe", "recurrent",
+           "transformer", "ModelConfig"]

@@ -1,0 +1,71 @@
+"""Common layers: RMSNorm, RoPE, gated MLPs, embeddings, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables [*pos_shape, head_dim//2], f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; cos/sin: [..., seq, head_dim//2]."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+def gated_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+              activation: str) -> jax.Array:
+    """SwiGLU / GeGLU feed-forward."""
+    g = x @ w_gate
+    u = x @ w_up
+    act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g, approximate=True)
+    return (act * u) @ w_down
+
+
+def softcap(logits: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape, dtype, fan_in: int | None = None) -> jax.Array:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def stacked(keys, fn):
+    """vmap an init over the leading (layer) axis."""
+    return jax.vmap(fn)(keys)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """Mean token-level CE; logits [..., V] f32-cast internally."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

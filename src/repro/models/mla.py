@@ -1,0 +1,197 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+KV activations are down-projected to a compact latent c_kv (kv_lora_rank)
+plus a shared RoPE key slice; per-head keys/values are up-projected from the
+latent. The KV *cache* stores only [B, S, kv_lora_rank + rope_head_dim] —
+the paper-critical memory saving.
+
+Decode uses the absorbed formulation: W_UK is folded into the query
+(q_lat = W_UK^T q_nope) and W_UV is applied after attending over latents, so
+per-step FLOPs scale with kv_lora_rank instead of n_heads * head_dim and the
+cache is read exactly once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, rmsnorm, rope_freqs
+
+NEG_INF = -2.0e38
+
+
+def init_mla_params(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], (d, cfg.q_lora_rank), dtype)
+        p["q_norm_lora"] = jnp.zeros((cfg.q_lora_rank,), dtype)
+        p["wq_b"] = dense_init(ks[1], (cfg.q_lora_rank, H * (dn + dr)), dtype)
+    else:
+        p["wq"] = dense_init(ks[0], (d, H * (dn + dr)), dtype)
+    p["wkv_a"] = dense_init(ks[2], (d, r + dr), dtype)          # latent + rope key
+    p["kv_norm_lora"] = jnp.zeros((r,), dtype)
+    p["wk_b"] = dense_init(ks[3], (r, H * dn), dtype)           # W_UK
+    p["wv_b"] = dense_init(ks[4], (r, H * dv), dtype)           # W_UV
+    p["wo"] = dense_init(ks[5], (H * dv, d), dtype)
+    return p
+
+
+def _queries(p: dict, x: jax.Array, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        q = rmsnorm(x @ p["wq_a"], p["q_norm_lora"], cfg.rmsnorm_eps) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, H, dn + dr)
+    return q[..., :dn], q[..., dn:]                              # nope, rope
+
+
+def _latent(p: dict, x: jax.Array, cfg: ModelConfig, pos: jax.Array):
+    """c_kv (normalized latent) and rotated shared rope key."""
+    B, S, _ = x.shape
+    kv = x @ p["wkv_a"]
+    c = rmsnorm(kv[..., : cfg.kv_lora_rank], p["kv_norm_lora"], cfg.rmsnorm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank:].reshape(B, S, 1, cfg.rope_head_dim)
+    cos, sin = rope_freqs(cfg.rope_head_dim, cfg.rope_theta, pos)
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0]               # [B,S,dr]
+    return c, k_rope
+
+
+def mla_train(p: dict, x: jax.Array, cfg: ModelConfig,
+              latent: tuple | None = None) -> jax.Array:
+    """Full-sequence causal MLA (non-absorbed: materialize per-head k, v)."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    pos = jnp.arange(S)
+    q_nope, q_rope = _queries(p, x, cfg)
+    cos, sin = rope_freqs(dr, cfg.rope_theta, pos)
+    q_rope = apply_rope(q_rope, cos, sin)
+    c, k_rope = _latent(p, x, cfg, pos) if latent is None else latent
+    k_nope = (c @ p["wk_b"]).reshape(B, S, H, dn)
+    v = (c @ p["wv_b"]).reshape(B, S, H, dv)
+
+    scale = (dn + dr) ** -0.5
+    C = min(cfg.attn_chunk, S)
+    n_chunks = S // C
+    qn = jnp.moveaxis(q_nope.reshape(B, n_chunks, C, H, dn), 1, 0)
+    qr = jnp.moveaxis(q_rope.reshape(B, n_chunks, C, H, dr), 1, 0)
+    key_pos = jnp.arange(S)
+
+    def chunk_body(_, inp):
+        qn_c, qr_c, ci = inp
+        s = (jnp.einsum("bqhd,bkhd->bhqk", qn_c.astype(jnp.bfloat16),
+                        k_nope.astype(jnp.bfloat16))
+             + jnp.einsum("bqhd,bkd->bhqk", qr_c.astype(jnp.bfloat16),
+                          k_rope.astype(jnp.bfloat16))).astype(jnp.float32) * scale
+        qpos = ci * C + jnp.arange(C)
+        keep = key_pos[None, :] <= qpos[:, None]
+        s = jnp.where(keep[None, None, :, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - jax.lax.stop_gradient(m))
+        pr = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(v.dtype)
+        return None, jnp.einsum("bhqk,bkhd->bqhd", pr, v)
+
+    if cfg.attn_remat:
+        chunk_body = jax.checkpoint(chunk_body)
+    _, o = jax.lax.scan(chunk_body, None, (qn, qr, jnp.arange(n_chunks)))
+    o = jnp.moveaxis(o, 0, 1).reshape(B, S, H * dv)
+    return o @ p["wo"]
+
+
+def mla_prefill(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Training-style attention + returns the latent cache [B,S,r+dr]."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    c, k_rope = _latent(p, x, cfg, pos)
+    out = mla_train(p, x, cfg, latent=(c, k_rope))
+    return out, jnp.concatenate([c, k_rope], axis=-1)
+
+
+def _quant_rows(x: jax.Array, axis: int = -1):
+    """Symmetric int8 quantization along ``axis`` with f32 scales."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True) \
+        / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.squeeze(axis).astype(jnp.float32)
+
+
+def _int8_dot(a_f: jax.Array, b_q: jax.Array, spec: str):
+    """Quantize the small side and contract in int8 (MXU int8 path).
+
+    a_f: float [..., K]; b_q: int8. Returns (int32 dot, a_scale)."""
+    a_q, a_s = _quant_rows(a_f)
+    out = jnp.einsum(spec, a_q.astype(jnp.int32), b_q.astype(jnp.int32))
+    return out, a_s
+
+
+def mla_decode(p: dict, x: jax.Array, cache, pos: jax.Array,
+               cfg: ModelConfig):
+    """Absorbed one-token decode against the latent cache.
+
+    cache: [B, S_max, r + dr] (bf16), or a dict {"q": int8 [B,S,r+dr],
+    "s": f32 [B,S]} when cfg.serve_quant == "int8" — the beyond-paper
+    quantized-cache serving mode: scores contract in int8 and per-position
+    scales are folded in after the dot, so the big cache operand is read at
+    1 byte/element.
+    """
+    B = x.shape[0]
+    H, dn, dr, dv, r = (cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    q_nope, q_rope = _queries(p, x, cfg)                   # [B,1,H,*]
+    cos, sin = rope_freqs(dr, cfg.rope_theta, pos[None])
+    q_rope = apply_rope(q_rope, cos, sin)
+    c_new, k_rope_new = _latent(p, x, cfg, pos[None])
+    new_entry = jnp.concatenate([c_new, k_rope_new[:, :, None, :].reshape(B, 1, dr)], -1)
+    quant = isinstance(cache, dict)
+    S_max = (cache["q"] if quant else cache).shape[1]
+    slot = jnp.minimum(pos, S_max - 1)
+
+    wk_b = p["wk_b"].reshape(r, H, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b)  # absorb W_UK
+    q_full = jnp.concatenate([q_lat, q_rope[:, 0]], axis=-1)  # [B,H,r+dr]
+    scale = (dn + dr) ** -0.5
+    keep = jnp.arange(S_max) <= pos
+
+    if quant:
+        eq, es = _quant_rows(new_entry)                     # [B,1,*], [B,1]
+        cache = {
+            "q": jax.lax.dynamic_update_slice(cache["q"], eq, (0, slot, 0)),
+            "s": jax.lax.dynamic_update_slice(cache["s"], es, (0, slot)),
+        }
+        s_i32, q_s = _int8_dot(q_full, cache["q"], "bhr,bsr->bhs")
+        s = (s_i32.astype(jnp.float32) * q_s[..., None]
+             * cache["s"][:, None, :]) * scale
+        s = jnp.where(keep[None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - m)
+        pr = e / jnp.sum(e, axis=-1, keepdims=True)         # f32 [B,H,S]
+        pr_scaled = pr * cache["s"][:, None, :]             # fold cache scales
+        o_i32, p_s = _int8_dot(pr_scaled, cache["q"][..., :r], "bhs,bsr->bhr")
+        o_lat = o_i32.astype(jnp.float32) * p_s[..., None]
+    else:
+        cache = jax.lax.dynamic_update_slice(cache, new_entry, (0, slot, 0))
+        c_all = cache[..., :r]
+        k_rope_all = cache[..., r:]
+        s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.bfloat16),
+                        c_all.astype(jnp.bfloat16))
+             + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.bfloat16),
+                          k_rope_all.astype(jnp.bfloat16))
+             ).astype(jnp.float32) * scale
+        s = jnp.where(keep[None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - m)
+        pr = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(c_all.dtype)
+        o_lat = jnp.einsum("bhs,bsr->bhr", pr, c_all)       # attend over latents
+
+    wv_b = p["wv_b"].reshape(r, H, dv)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(x.dtype), wv_b)  # absorb W_UV
+    o = o.reshape(B, 1, H * dv)
+    return o @ p["wo"], cache

@@ -1,0 +1,171 @@
+"""Token-choice top-k MoE with capacity-based dispatch (DeepSeek V2/V3 style).
+
+Routing: softmax router -> per-token top-k experts, renormalized gates.
+Dispatch: token-order priority; each expert accepts up to
+C = ceil(T * k / E * capacity_factor) tokens, the rest are dropped (their
+gate mass is simply lost, standard for capacity MoE). Dispatch/combine are
+gather/scatter-free on the hot path: we build a slot->token index table and
+use one gather in, one gather out — a formulation the SPMD partitioner
+handles with all-gather on the token axis (baseline; the EP-local shard_map
+variant is a §Perf hillclimb).
+
+Shared experts (DeepSeek) are a dense gated MLP fused as one wide block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def init_moe_params(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": jax.vmap(lambda k: dense_init(k, (d, f), dtype))(
+            jax.random.split(ks[1], E)),
+        "w_up": jax.vmap(lambda k: dense_init(k, (d, f), dtype))(
+            jax.random.split(ks[2], E)),
+        "w_down": jax.vmap(lambda k: dense_init(k, (f, d), dtype, fan_in=f))(
+            jax.random.split(ks[3], E)),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_gate"] = dense_init(ks[4], (d, fs), dtype)
+        p["shared_up"] = dense_init(ks[5], (d, fs), dtype)
+        p["shared_down"] = dense_init(ks[6], (fs, d), dtype, fan_in=fs)
+    return p
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.moe_top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn_ep(p: dict, x: jax.Array, cfg: ModelConfig, mesh) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel dispatch via shard_map (beyond-paper §Perf variant).
+
+    The baseline pjit formulation routes over *global* token indices, which
+    the SPMD partitioner implements with token all-gathers across the data
+    axis (O(T*d) bytes per MoE layer). Here routing/dispatch/combine run
+    *locally* per (data x model) shard: every device routes its local tokens,
+    computes only its local experts, and a single psum over 'model' combines
+    expert contributions — the same wire cost as the TP all-reduce the layer
+    already pays, removing the dispatch collectives entirely.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    ba = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    msize = mesh.shape["model"]
+    E = cfg.n_experts
+    assert E % msize == 0
+    E_loc = E // msize
+
+    def local_fn(router, w_gate, w_up, w_down, shared, x_loc):
+        B, S, d = x_loc.shape
+        T = B * S
+        k = cfg.moe_top_k
+        C = capacity(T, cfg)
+        xf = x_loc.reshape(T, d)
+        logits = xf.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, ids = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), axis=0)
+        aux = E * jnp.sum(me * ce)
+
+        my = jax.lax.axis_index("model")
+        ids_flat = ids.reshape(T * k)
+        local = (ids_flat // E_loc) == my
+        ids_local = jnp.where(local, ids_flat % E_loc, E_loc)
+        onehot = jax.nn.one_hot(ids_local, E_loc + 1, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        pos_flat = jnp.sum(pos * onehot, axis=-1)
+        keep = local & (pos_flat < C)
+        dest = jnp.where(keep, ids_local * C + pos_flat, E_loc * C)
+        token_of_choice = jnp.arange(T * k, dtype=jnp.int32) // k
+        slot_token = jnp.zeros((E_loc * C + 1,), jnp.int32).at[dest].set(token_of_choice)
+        slot_used = jnp.zeros((E_loc * C + 1,), x_loc.dtype).at[dest].set(1)
+        slot_token, slot_used = slot_token[:-1], slot_used[:-1]
+
+        x_disp = (xf[slot_token] * slot_used[:, None]).reshape(E_loc, C, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_disp, w_gate)) * \
+            jnp.einsum("ecd,edf->ecf", x_disp, w_up)
+        y_e = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(E_loc * C, d)
+        y_choice = y_e[jnp.minimum(dest, E_loc * C - 1)]
+        y_choice *= (keep[:, None] * gate_vals.reshape(T * k)[:, None]
+                     ).astype(y_choice.dtype)
+        y = jnp.sum(y_choice.reshape(T, k, d), axis=1)
+
+        if shared is not None:
+            sg, su, sd = shared      # column-sharded over 'model'
+            y = y + (jax.nn.silu(xf @ sg) * (xf @ su)) @ sd
+        y = jax.lax.psum(y, "model")    # combine experts + shared partials
+        return y.reshape(B, S, d).astype(x_loc.dtype), aux
+
+    shared = None
+    shared_specs = None
+    if cfg.n_shared_experts:
+        shared = (p["shared_gate"], p["shared_up"], p["shared_down"])
+        shared_specs = (P(None, "model"), P(None, "model"), P("model", None))
+
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P("model", None, None), P("model", None, None),
+                  P("model", None, None), shared_specs, P(ba, None, None)),
+        out_specs=(P(ba, None, None), P()),
+        check_rep=False)
+    return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], shared, x)
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, mesh=None) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y [B, S, d], aux_loss [])."""
+    if cfg.moe_groups and mesh is not None:
+        return moe_ffn_ep(p, x, cfg, mesh)
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.moe_top_k
+    C = capacity(T, cfg)
+    xf = x.reshape(T, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"]               # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, k)                    # [T, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance aux (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- capacity assignment, token-major priority over the k choices -----
+    ids_flat = ids.reshape(T * k)                               # choice (t, j) at t*k+j
+    onehot = jax.nn.one_hot(ids_flat, E, dtype=jnp.int32)       # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot                   # position within expert
+    pos_flat = jnp.sum(pos * onehot, axis=-1)                   # [T*k]
+    keep = pos_flat < C
+    dest = jnp.where(keep, ids_flat * C + pos_flat, E * C)      # drop -> scratch slot
+
+    token_of_choice = jnp.arange(T * k, dtype=jnp.int32) // k
+    slot_token = jnp.zeros((E * C + 1,), jnp.int32).at[dest].set(token_of_choice)
+    slot_used = jnp.zeros((E * C + 1,), x.dtype).at[dest].set(1)
+    slot_token, slot_used = slot_token[:-1], slot_used[:-1]
+
+    x_disp = xf[slot_token] * slot_used[:, None]                # [E*C, d]
+    x_disp = x_disp.reshape(E, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_disp, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", x_disp, p["w_up"])
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, d)
+
+    y_choice = y_e[jnp.minimum(dest, E * C - 1)]                # [T*k, d]
+    y_choice *= (keep[:, None] * gate_vals.reshape(T * k)[:, None]).astype(y_choice.dtype)
+    y = jnp.sum(y_choice.reshape(T, k, d), axis=1)
+
+    if cfg.n_shared_experts:
+        y = y + (jax.nn.silu(xf @ p["shared_gate"]) * (xf @ p["shared_up"])) @ p["shared_down"]
+    return y.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,414 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM cells.
+
+RG-LRU is a diagonal linear recurrence with input-dependent gates
+    a_t = exp(-c * softplus(Lambda) * r_t),
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+so training uses jax.lax.associative_scan (log-depth, MXU-free but fully
+parallel); decode is a single fused step.
+
+mLSTM (matrix-memory LSTM) uses *chunkwise-parallel* evaluation: within a
+chunk the contribution is an attention-like matmul with cumulative-gate
+weights; across chunks a small scan propagates the stabilized state
+(C~ = C * exp(-m), n~ = n * exp(-m), m). This is exact (same recurrence, all
+exponents stabilized by the running max m) and keeps the FLOPs on the MXU —
+the TPU-native adaptation of the recurrence.
+
+sLSTM has a nonlinear h_{t-1} dependency (block-diagonal recurrent matrix),
+so it scans sequentially by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+_LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def init_rglru_params(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_gate_in": dense_init(ks[0], (d, w), dtype),     # gelu branch
+        "w_in": dense_init(ks[1], (d, w), dtype),          # recurrent branch
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), dtype, fan_in=cfg.conv_width),
+        "wa": dense_init(ks[3], (w, w), dtype),            # recurrence gate
+        "wx": dense_init(ks[4], (w, w), dtype),            # input gate
+        "lam": jnp.asarray(jax.random.uniform(ks[5], (w,), jnp.float32, 2.0, 5.0)),
+        "w_out": dense_init(ks[6], (w, d), dtype),
+    }
+
+
+def _causal_conv_train(v: jax.Array, conv_w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. v: [B, S, w]."""
+    out = jnp.zeros_like(v)
+    W = conv_w.shape[0]
+    for j in range(W):
+        shifted = jnp.pad(v, ((0, 0), (j, 0), (0, 0)))[:, : v.shape[1]]
+        out = out + shifted * conv_w[W - 1 - j]
+    return out
+
+
+def _rglru_gates(p: dict, v: jax.Array, cfg: ModelConfig):
+    r = jax.nn.sigmoid((v @ p["wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((v @ p["wx"]).astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"]) * r          # [B, ., w]
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with a = exp(log_a); clamp for fp safety
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * v.astype(jnp.float32)
+
+
+def rglru_train(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full Griffin recurrent block over [B, S, d] (parallel scan)."""
+    u = jax.nn.gelu((x @ p["w_gate_in"]), approximate=True)
+    v = _causal_conv_train(x @ p["w_in"], p["conv_w"])
+    a, b = _rglru_gates(p, v, cfg)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(x.dtype)
+    return (u * y) @ p["w_out"]
+
+
+def rglru_prefill(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Like rglru_train but also returns the decode state at the last step."""
+    u = jax.nn.gelu((x @ p["w_gate_in"]), approximate=True)
+    v_pre = x @ p["w_in"]
+    v = _causal_conv_train(v_pre, p["conv_w"])
+    a, b = _rglru_gates(p, v, cfg)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (u * h.astype(x.dtype)) @ p["w_out"]
+    cw = cfg.conv_width - 1
+    state = {"h": h[:, -1], "conv": v_pre[:, -cw:]}
+    return y, state
+
+
+def rglru_init_state(cfg: ModelConfig, B: int, dtype) -> dict:
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros((B, w), jnp.float32),
+        "conv": jnp.zeros((B, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig):
+    """One-step Griffin block. x: [B, 1, d]."""
+    u = jax.nn.gelu(x @ p["w_gate_in"], approximate=True)[:, 0]
+    v_new = (x @ p["w_in"])[:, 0]                            # [B, w]
+    hist = jnp.concatenate([state["conv"], v_new[:, None]], axis=1)
+    v = jnp.einsum("bcw,cw->bw", hist, p["conv_w"])
+    a, b = _rglru_gates(p, v, cfg)
+    h = a * state["h"] + b
+    y = (u * h.astype(x.dtype)) @ p["w_out"]
+    return y[:, None], {"h": h, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (chunkwise parallel)
+# ---------------------------------------------------------------------------
+
+def init_mlstm_params(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    din = int(d * cfg.mlstm_proj_factor)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], (d, din), dtype),
+        "w_z": dense_init(ks[1], (d, din), dtype),           # gate branch
+        "conv_w": dense_init(ks[2], (cfg.conv_width, din), dtype, fan_in=cfg.conv_width),
+        # per-head (block-diagonal) qkv, as in the xLSTM paper
+        "wq": jax.vmap(lambda k: dense_init(k, (din // H, din // H), dtype))(
+            jax.random.split(ks[3], H)),
+        "wk": jax.vmap(lambda k: dense_init(k, (din // H, din // H), dtype))(
+            jax.random.split(ks[4], H)),
+        "wv": jax.vmap(lambda k: dense_init(k, (din // H, din // H), dtype))(
+            jax.random.split(ks[5], H)),
+        "w_if": dense_init(ks[6], (din, 2 * H), jnp.float32),  # i/f gate logits
+        "gn_scale": jnp.ones((din,), dtype),
+        "w_down": dense_init(ks[7], (din, d), dtype, fan_in=din),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, ig, fg, chunk: int):
+    """Exact chunkwise mLSTM. q,k,v: [B,S,H,dh]; ig,fg: [B,S,H] log-gates.
+
+    Returns h [B,S,H,dh] and final (C~, n~, m).
+    """
+    B, S, H, dh = q.shape
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    scale = dh ** -0.5
+    q = q.astype(jnp.float32) * scale
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    def reshape_c(t):
+        return jnp.moveaxis(t.reshape(B, nc, L, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc = reshape_c(q), reshape_c(k), reshape_c(v)
+    igc, fgc = reshape_c(ig), reshape_c(fg)                  # [nc,B,L,H]
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+
+    def chunk_body(carry, inp):
+        Cp, np_, mp = carry
+        qq, kk, vv, ii, ff = inp                             # [B,L,H,*]
+        b = jnp.cumsum(ff, axis=1)                           # [B,L,H] cumulative log-f
+        u = ii - b                                           # i_s - b_s
+        g = jnp.maximum(mp[:, None, :], jax.lax.cummax(u, axis=1))  # [B,L,H]
+        m_t = b + g
+        # intra-chunk attention-like term
+        a_log = u[:, None, :, :] - g[:, :, None, :]          # [B,t,s,H]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        w_ts = jnp.where(mask[None, :, :, None], jnp.exp(a_log), 0.0)
+        qk = jnp.einsum("bthd,bshd->btsh", qq, kk)
+        A = qk * w_ts                                        # [B,t,s,H]
+        intra = jnp.einsum("btsh,bshd->bthd", A, vv)
+        # inter-chunk (initial state) term
+        inter_scale = jnp.exp(mp[:, None, :] - g)            # [B,L,H]
+        qC = jnp.einsum("bthd,bhde->bthe", qq, Cp)
+        num = intra + qC * inter_scale[..., None]
+        den = jnp.einsum("btsh->bth", A) + \
+              jnp.einsum("bthd,bhd->bth", qq, np_) * inter_scale
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state to end of chunk
+        gL = g[:, -1, :]                                     # [B,H]
+        wL = jnp.exp(u - gL[:, None, :])                     # w_s = exp(i_s - b_s - g_L), [B,L,H]
+        kw = kk * wL[..., None]
+        C_new = jnp.exp(mp - gL)[..., None, None] * Cp + \
+            jnp.einsum("bshd,bshe->bhde", kw, vv)
+        n_new = jnp.exp(mp - gL)[..., None] * np_ + jnp.einsum("bshd->bhd", kw)
+        m_new = b[:, -1, :] + gL
+        return (C_new, n_new, m_new), h
+
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_body, (C0, n0, m0), (qc, kc, vc, igc, fgc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dh)
+    return h, (Cf, nf, mf)
+
+
+def mlstm_train(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full mLSTM block over [B, S, d]."""
+    y, _ = _mlstm_block_apply(p, x, cfg)
+    return y
+
+
+def _mlstm_block_apply(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Shared mLSTM block body; returns (y, final_state)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    xm = x @ p["w_up"]
+    z = x @ p["w_z"]
+    xc = jax.nn.silu(_causal_conv_train(xm, p["conv_w"]))
+    din = xm.shape[-1]
+    dh = din // H
+    xch = xc.reshape(B, S, H, dh)
+    xmh = xm.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", xch, p["wq"])
+    k = jnp.einsum("bshd,hde->bshe", xch, p["wk"])
+    v = jnp.einsum("bshd,hde->bshe", xmh, p["wv"])
+    gates = (xm.astype(jnp.float32) @ p["w_if"]).reshape(B, S, H, 2)
+    ig = gates[..., 0]
+    fg = jax.nn.log_sigmoid(gates[..., 1])
+    h, (Cf, nf, mf) = _mlstm_chunk_scan(q, k, v, ig, fg, cfg.mlstm_chunk)
+    hg = h.reshape(B, S, H, dh)
+    mu = jnp.mean(hg, axis=-1, keepdims=True)
+    var = jnp.var(hg, axis=-1, keepdims=True)
+    hn = ((hg - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, din)
+    hn = (hn * p["gn_scale"]).astype(x.dtype)
+    y = (hn * jax.nn.silu(z)) @ p["w_down"]
+    cw = cfg.conv_width - 1
+    state = {"C": Cf, "n": nf, "m": mf, "conv": xm[:, -cw:]}
+    return y, state
+
+
+def mlstm_prefill(p: dict, x: jax.Array, cfg: ModelConfig):
+    return _mlstm_block_apply(p, x, cfg)
+
+
+def slstm_prefill(p: dict, x: jax.Array, cfg: ModelConfig):
+    """sLSTM block over [B,S,d] returning (y, final cell state)."""
+    B, S, d = x.shape
+    xg = x @ p["w_ifzo"]
+
+    def step(st, x_t):
+        st = _slstm_cell(p, x_t, st, cfg)
+        return st, st["h"]
+
+    st0 = slstm_init_state(cfg, B)
+    st_f, hs = jax.lax.scan(step, st0, jnp.moveaxis(xg, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)
+    H = cfg.n_heads
+    dh = d // H
+    hg = h.reshape(B, S, H, dh)
+    mu = jnp.mean(hg, -1, keepdims=True)
+    var = jnp.var(hg, -1, keepdims=True)
+    h = ((hg - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, d)
+    h = (h * p["gn_scale"]).astype(x.dtype)
+    y = (jax.nn.silu(h @ p["w_up_gate"]) * (h @ p["w_up"])) @ p["w_down"]
+    return y, st_f
+
+
+def mlstm_init_state(cfg: ModelConfig, B: int, dtype) -> dict:
+    din = int(cfg.d_model * cfg.mlstm_proj_factor)
+    H = cfg.n_heads
+    dh = din // H
+    return {
+        "C": jnp.zeros((B, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((B, H, dh), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((B, cfg.conv_width - 1, din), dtype),
+    }
+
+
+def mlstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig):
+    """One-step mLSTM block. x: [B, 1, d]."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    xm = (x @ p["w_up"])[:, 0]
+    z = (x @ p["w_z"])[:, 0]
+    hist = jnp.concatenate([state["conv"], xm[:, None]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bcw,cw->bw", hist, p["conv_w"]))
+    din = xm.shape[-1]
+    dh = din // H
+    xch = xc.reshape(B, H, dh)
+    xmh = xm.reshape(B, H, dh)
+    q = jnp.einsum("bhd,hde->bhe", xch, p["wq"]).astype(jnp.float32) * dh ** -0.5
+    k = jnp.einsum("bhd,hde->bhe", xch, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bhd,hde->bhe", xmh, p["wv"]).astype(jnp.float32)
+    gates = (xm.astype(jnp.float32) @ p["w_if"]).reshape(B, H, 2)
+    ig = gates[..., 0]
+    fg = jax.nn.log_sigmoid(gates[..., 1])
+    m_new = jnp.maximum(fg + state["m"], ig)
+    i_s = jnp.exp(ig - m_new)
+    f_s = jnp.exp(fg + state["m"] - m_new)
+    C = f_s[..., None, None] * state["C"] + i_s[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, din)
+    mu = jnp.mean(h.reshape(B, H, dh), -1, keepdims=True)
+    var = jnp.var(h.reshape(B, H, dh), -1, keepdims=True)
+    h = ((h.reshape(B, H, dh) - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, din)
+    h = (h * p["gn_scale"]).astype(x.dtype)
+    y = (h * jax.nn.silu(z)) @ p["w_down"]
+    return y[:, None], {"C": C, "n": n, "m": m_new, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential by construction)
+# ---------------------------------------------------------------------------
+
+def _round_mult(x: float, m: int = 128) -> int:
+    return max(m, int(-(-x // m) * m))
+
+
+def init_slstm_params(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dup = _round_mult(d * cfg.slstm_proj_factor, 128 if d >= 128 else 16)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_ifzo": dense_init(ks[0], (d, 4 * d), dtype),
+        "r_ifzo": jax.vmap(lambda k: dense_init(k, (dh, 4 * dh), jnp.float32))(
+            jax.random.split(ks[1], H)),                     # block-diag recurrent
+        "b_ifzo": jnp.zeros((4 * d,), jnp.float32),
+        "gn_scale": jnp.ones((d,), dtype),
+        "w_up_gate": dense_init(ks[2], (d, dup), dtype),
+        "w_up": dense_init(ks[3], (d, dup), dtype),
+        "w_down": dense_init(ks[4], (dup, d), dtype, fan_in=dup),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, B: int) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    return {
+        "c": jnp.zeros((B, d), jnp.float32),
+        "n": jnp.zeros((B, d), jnp.float32),
+        "h": jnp.zeros((B, d), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+    }
+
+
+def _slstm_cell(p: dict, x_t: jax.Array, st: dict, cfg: ModelConfig):
+    """x_t: [B, d] pre-activation input projections applied outside."""
+    B, d = st["h"].shape[0], cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    hr = st["h"].reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hr, p["r_ifzo"]).reshape(B, 4 * d)
+    pre = x_t.astype(jnp.float32) + rec + p["b_ifzo"]
+    it, ft, zt, ot = jnp.split(pre, 4, axis=-1)
+    ith = it.reshape(B, H, dh)
+    fth = ft.reshape(B, H, dh)
+    # exponential gating with per-head stabilizer (max over head dims)
+    lf = jax.nn.log_sigmoid(fth)
+    m_new = jnp.maximum(jnp.max(lf, -1) + st["m"], jnp.max(ith, -1))
+    i_s = jnp.exp(ith - m_new[..., None]).reshape(B, d)
+    f_s = jnp.exp(lf + st["m"][..., None] - m_new[..., None]).reshape(B, d)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    c = f_s * st["c"] + i_s * z
+    n = f_s * st["n"] + i_s
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_train(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full sLSTM block over [B, S, d] (sequential scan over S)."""
+    B, S, d = x.shape
+    xg = x @ p["w_ifzo"]                                     # [B,S,4d]
+
+    def step(st, x_t):
+        st = _slstm_cell(p, x_t, st, cfg)
+        return st, st["h"]
+
+    st0 = slstm_init_state(cfg, B)
+    _, hs = jax.lax.scan(step, st0, jnp.moveaxis(xg, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                               # [B,S,d]
+    H = cfg.n_heads
+    dh = d // H
+    hg = h.reshape(B, S, H, dh)
+    mu = jnp.mean(hg, -1, keepdims=True)
+    var = jnp.var(hg, -1, keepdims=True)
+    h = ((hg - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, d)
+    h = (h * p["gn_scale"]).astype(x.dtype)
+    return (jax.nn.silu(h @ p["w_up_gate"]) * (h @ p["w_up"])) @ p["w_down"]
+
+
+def slstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig):
+    """One-step sLSTM block. x: [B, 1, d]."""
+    xg = (x @ p["w_ifzo"])[:, 0]
+    st = _slstm_cell(p, xg, state, cfg)
+    B, d = st["h"].shape
+    H = cfg.n_heads
+    dh = d // H
+    hg = st["h"].reshape(B, H, dh)
+    mu = jnp.mean(hg, -1, keepdims=True)
+    var = jnp.var(hg, -1, keepdims=True)
+    h = ((hg - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, d)
+    h = (h * p["gn_scale"]).astype(x.dtype)
+    y = (jax.nn.silu(h @ p["w_up_gate"]) * (h @ p["w_up"])) @ p["w_down"]
+    return y[:, None], st

@@ -1,0 +1,641 @@
+"""Model assembly for all assigned families.
+
+Layers are *stacked along a group axis* and applied with lax.scan — this
+keeps the HLO size O(1) in depth (compile-tractable at 100 layers / 512
+devices) and matches how production JAX frameworks (MaxText et al.) stack
+weights. Heterogeneous stacks (hybrid 2:1 patterns, VLM cross-attn every
+k-th layer, MoE dense prefix, xLSTM sLSTM interleave) are handled by
+scanning over *pattern groups*: each group holds one stacked param set per
+pattern position.
+
+Public API:
+    init_params(key, cfg)                         -> params
+    forward_train(params, batch, cfg)             -> (loss, metrics)
+    init_cache(cfg, B, S_max)                     -> decode cache
+    prefill(params, batch, cfg)                   -> (cache, last_logits)
+    decode_step(params, cache, tokens, pos, cfg)  -> (cache, logits)
+
+``batch`` is a dict: tokens [B,S] (audio: [B,S,n_codebooks]); vlm adds
+vision [B,Nv,vision_dim]; labels for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import recurrent as rec
+from .config import ModelConfig
+from .layers import cross_entropy, dense_init, gated_mlp, rmsnorm
+
+Params = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_policy == "full":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Group structure
+# ---------------------------------------------------------------------------
+
+def group_layout(cfg: ModelConfig) -> tuple[int, tuple[str, ...]]:
+    """(n_groups, pattern positions) for the scanned group axis."""
+    if cfg.family in ("dense", "audio"):
+        return cfg.n_layers, ("self",)
+    if cfg.family == "moe":
+        # dense prefix handled separately; groups cover the MoE layers
+        return cfg.n_layers - cfg.first_k_dense, ("moe",)
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_every
+        assert cfg.n_layers % k == 0
+        return cfg.n_layers // k, tuple(["self"] * (k - 1) + ["cross"])
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        assert cfg.n_layers % len(pat) == 0
+        return cfg.n_layers // len(pat), pat
+    if cfg.family == "ssm":
+        k = cfg.slstm_every
+        assert cfg.n_layers % k == 0
+        return cfg.n_layers // k, tuple(["mlstm"] * (k - 1) + ["slstm"])
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Per-position init
+# ---------------------------------------------------------------------------
+
+def _init_position(key, kind: str, cfg: ModelConfig, dt) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict = {"ln1": jnp.zeros((d,), dt)}
+    if kind == "self":
+        if cfg.attn_kind == "mla":
+            p["attn"] = mla_mod.init_mla_params(ks[0], cfg, dt)
+        else:
+            p["attn"] = attn.init_attn_params(ks[0], cfg, dt)
+        p["ln2"] = jnp.zeros((d,), dt)
+        p["mlp"] = _init_mlp(ks[1], cfg, dt)
+    elif kind == "cross":
+        p["attn"] = attn.init_attn_params(ks[0], cfg, dt, cross=True)
+        p["gate"] = jnp.zeros((1,), dt)          # llama-vision tanh gate
+        p["ln2"] = jnp.zeros((d,), dt)
+        p["mlp"] = _init_mlp(ks[1], cfg, dt)
+    elif kind == "moe":
+        p["attn"] = mla_mod.init_mla_params(ks[0], cfg, dt)
+        p["ln2"] = jnp.zeros((d,), dt)
+        p["moe"] = moe_mod.init_moe_params(ks[1], cfg, dt)
+    elif kind == "local_attn":
+        p["attn"] = attn.init_attn_params(ks[0], cfg, dt)
+        p["ln2"] = jnp.zeros((d,), dt)
+        p["mlp"] = _init_mlp(ks[1], cfg, dt)
+    elif kind == "rglru":
+        p["rec"] = rec.init_rglru_params(ks[0], cfg, dt)
+        p["ln2"] = jnp.zeros((d,), dt)
+        p["mlp"] = _init_mlp(ks[1], cfg, dt)
+    elif kind == "mlstm":
+        p["cell"] = rec.init_mlstm_params(ks[0], cfg, dt)
+    elif kind == "slstm":
+        p["cell"] = rec.init_slstm_params(ks[0], cfg, dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_mlp(key, cfg: ModelConfig, dt) -> dict:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": dense_init(ks[0], (d, f), dt),
+        "w_up": dense_init(ks[1], (d, f), dt),
+        "w_down": dense_init(ks[2], (f, d), dt, fan_in=f),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    n_groups, pattern = group_layout(cfg)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+
+    if cfg.family == "audio":
+        embed = jax.vmap(lambda k: dense_init(k, (cfg.vocab, d), dt))(
+            jax.random.split(keys[0], cfg.n_codebooks))
+    else:
+        embed = dense_init(keys[0], (cfg.vocab, d), dt)
+    params: dict = {"embed": embed, "final_norm": jnp.zeros((d,), dt)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], (d, cfg.vocab * max(cfg.n_codebooks, 1)), dt)
+    elif cfg.family == "audio":
+        params["unembed"] = dense_init(keys[1], (d, cfg.vocab * cfg.n_codebooks), dt)
+
+    group_keys = jax.random.split(keys[2], n_groups)
+    groups = {}
+    for i, kind in enumerate(pattern):
+        pos_name = f"{kind}_{i}"
+        groups[pos_name] = jax.vmap(
+            lambda k, kind=kind: _init_position(k, kind, cfg, dt)
+        )(jax.vmap(lambda k, i=i: jax.random.fold_in(k, i))(group_keys))
+    params["groups"] = groups
+
+    if cfg.family == "moe" and cfg.first_k_dense:
+        pre_keys = jax.random.split(keys[3], cfg.first_k_dense)
+        moe_cfg_dense = cfg
+        params["dense_prefix"] = jax.vmap(
+            lambda k: _init_position(k, "self", moe_cfg_dense, dt)
+        )(pre_keys)
+
+    if cfg.family == "moe" and cfg.mtp_depth:
+        # MTP: projection + one dense block + shared embed/unembed
+        mtp = {
+            "proj": dense_init(keys[4], (2 * d, d), dt),
+            "block": _init_position(keys[5], "self", cfg, dt),
+            "ln": jnp.zeros((d,), dt),
+        }
+        params["mtp"] = mtp
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Train-mode position application
+# ---------------------------------------------------------------------------
+
+def _apply_position_train(p: dict, kind: str, x, cfg: ModelConfig, extra,
+                          mesh=None) -> tuple[jax.Array, jax.Array]:
+    """Returns (x', aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(x, p["ln1"], cfg.rmsnorm_eps)
+    if kind == "self":
+        o = (mla_mod.mla_train(p["attn"], h, cfg) if cfg.attn_kind == "mla"
+             else attn.attn_train(p["attn"], h, cfg))
+        x = x + o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        x = x + gated_mlp(h2, **p["mlp"], activation=cfg.activation)
+    elif kind == "cross":
+        o = attn.cross_attn(p["attn"], h, extra["vision"], cfg)
+        x = x + jnp.tanh(p["gate"]) * o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        x = x + gated_mlp(h2, **p["mlp"], activation=cfg.activation)
+    elif kind == "moe":
+        o = mla_mod.mla_train(p["attn"], h, cfg)
+        x = x + o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        y, aux = moe_mod.moe_ffn(p["moe"], h2, cfg, mesh=mesh)
+        x = x + y
+    elif kind == "local_attn":
+        o = attn.attn_train(p["attn"], h, cfg)
+        x = x + o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        x = x + gated_mlp(h2, **p["mlp"], activation=cfg.activation)
+    elif kind == "rglru":
+        x = x + rec.rglru_train(p["rec"], h, cfg)
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        x = x + gated_mlp(h2, **p["mlp"], activation=cfg.activation)
+    elif kind == "mlstm":
+        x = x + rec.mlstm_train(p["cell"], h, cfg)
+    elif kind == "slstm":
+        x = x + rec.slstm_train(p["cell"], h, cfg)
+    return x, aux
+
+
+def _embed_tokens(params, batch, cfg: ModelConfig):
+    if cfg.family == "audio":
+        # sum of codebook embeddings; tokens [B, S, ncb]
+        x = jnp.sum(jax.vmap(
+            lambda emb, t: emb[t], in_axes=(0, 2), out_axes=2
+        )(params["embed"], batch["tokens"]), axis=2)
+    else:
+        x = params["embed"][batch["tokens"]]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _logits_chunked(params, x, cfg: ModelConfig, labels, mask=None):
+    """CE over the vocab without materializing [B, S, V] f32: scan S-chunks."""
+    B, S, d = x.shape
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    C = min(512, S)
+    nc = S // C
+    xs = jnp.moveaxis(x.reshape(B, nc, C, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, C, *labels.shape[2:]), 1, 0)
+
+    def body(tot, inp):
+        xc, lc = inp
+        logits = xc @ unembed
+        if cfg.family == "audio":
+            logits = logits.reshape(B, C, cfg.n_codebooks, cfg.vocab)
+        return tot + cross_entropy(logits, lc) * (1.0 / nc), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return tot
+
+
+def forward_train(params: Params, batch: dict, cfg: ModelConfig, mesh=None):
+    """Next-token LM loss (audio: per-codebook CE; vlm: text CE).
+
+    ``mesh`` is only needed for shard_map-based layer variants
+    (cfg.moe_groups expert parallelism); None keeps the pure-pjit path."""
+    x = _embed_tokens(params, batch, cfg)
+    extra = {k: batch[k] for k in ("vision",) if k in batch}
+    aux_total = jnp.zeros((), jnp.float32)
+
+    n_groups, pattern = group_layout(cfg)
+
+    if cfg.family == "moe" and cfg.first_k_dense:
+        def pre_body(h, gp):
+            h, aux = _apply_position_train(gp, "self", h, cfg, extra)
+            return h, aux
+        pre_fn = _remat(pre_body, cfg)
+        x, _ = jax.lax.scan(pre_fn, x, params["dense_prefix"])
+
+    def group_body(carry, gp):
+        h, aux_sum = carry
+        for i, kind in enumerate(pattern):
+            h, aux = _apply_position_train(gp[f"{kind}_{i}"], kind, h, cfg,
+                                           extra, mesh=mesh)
+            aux_sum = aux_sum + aux
+        return (h, aux_sum), None
+
+    group_fn = _remat(group_body, cfg)
+    (x, aux_total), _ = jax.lax.scan(group_fn, (x, aux_total), params["groups"])
+
+    x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+    labels = batch["labels"]
+    loss = _logits_chunked(params, x, cfg, labels)
+
+    metrics = {"lm_loss": loss, "aux_loss": aux_total}
+    if cfg.family == "moe":
+        loss = loss + 0.001 * aux_total
+    if cfg.family == "moe" and cfg.mtp_depth and "labels_mtp" in batch:
+        # MTP: predict t+2 from [h_t ; emb(t_{t+1})]
+        emb_next = params["embed"][batch["tokens_next"]]
+        h_in = jnp.concatenate([x, emb_next.astype(x.dtype)], axis=-1) @ params["mtp"]["proj"]
+        h_mtp, _ = _apply_position_train(params["mtp"]["block"], "self", h_in, cfg, extra)
+        h_mtp = rmsnorm(h_mtp, params["mtp"]["ln"], cfg.rmsnorm_eps)
+        mtp_loss = _logits_chunked(params, h_mtp, cfg, batch["labels_mtp"])
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int) -> dict:
+    """Per-group stacked decode state. Shapes depend on family."""
+    dt = _dtype(cfg)
+    n_groups, pattern = group_layout(cfg)
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    quant = cfg.serve_quant == "int8"
+
+    def kv(S, G=n_groups):
+        if quant:
+            return {
+                "kq": jnp.zeros((G, B, S, cfg.n_kv_heads, cfg.head_dim), jnp.int8),
+                "ks": jnp.zeros((G, B, S, cfg.n_kv_heads), jnp.float32),
+                "vq": jnp.zeros((G, B, S, cfg.n_kv_heads, cfg.head_dim), jnp.int8),
+                "vs": jnp.zeros((G, B, S, cfg.n_kv_heads), jnp.float32),
+            }
+        return (jnp.zeros((G, B, S, cfg.n_kv_heads, cfg.head_dim), dt),
+                jnp.zeros((G, B, S, cfg.n_kv_heads, cfg.head_dim), dt))
+
+    def ckv(S, G):
+        if quant:
+            return {"q": jnp.zeros((G, B, S, cfg.mla_cache_dim), jnp.int8),
+                    "s": jnp.zeros((G, B, S), jnp.float32)}
+        return jnp.zeros((G, B, S, cfg.mla_cache_dim), dt)
+
+    if cfg.family in ("dense", "audio"):
+        cache["kv"] = kv(S_max)
+    elif cfg.family == "moe":
+        cache["ckv"] = ckv(S_max, n_groups)
+        if cfg.first_k_dense:
+            cache["ckv_prefix"] = ckv(S_max, cfg.first_k_dense)
+    elif cfg.family == "vlm":
+        n_self = len(pattern) - 1
+        cache["kv"] = (
+            jnp.zeros((n_groups, n_self, B, S_max, cfg.n_kv_heads, cfg.head_dim), dt),
+            jnp.zeros((n_groups, n_self, B, S_max, cfg.n_kv_heads, cfg.head_dim), dt))
+        cache["cross_kv"] = (
+            jnp.zeros((n_groups, B, cfg.n_vision_tokens, cfg.n_kv_heads, cfg.head_dim), dt),
+            jnp.zeros((n_groups, B, cfg.n_vision_tokens, cfg.n_kv_heads, cfg.head_dim), dt))
+    elif cfg.family == "hybrid":
+        W = min(cfg.sliding_window or S_max, S_max)
+        n_rec = sum(1 for k in pattern if k == "rglru")
+        cache["rec"] = {
+            "h": jnp.zeros((n_groups, n_rec, B, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((n_groups, n_rec, B, cfg.conv_width - 1, cfg.lru_width), dt),
+        }
+        cache["kv"] = (
+            jnp.zeros((n_groups, B, W, cfg.n_kv_heads, cfg.head_dim), dt),
+            jnp.zeros((n_groups, B, W, cfg.n_kv_heads, cfg.head_dim), dt))
+    elif cfg.family == "ssm":
+        din = int(cfg.d_model * cfg.mlstm_proj_factor)
+        H = cfg.n_heads
+        dh = din // H
+        n_m = len(pattern) - 1
+        cache["mlstm"] = {
+            "C": jnp.zeros((n_groups, n_m, B, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((n_groups, n_m, B, H, dh), jnp.float32),
+            "m": jnp.full((n_groups, n_m, B, H), -1e30, jnp.float32),
+            "conv": jnp.zeros((n_groups, n_m, B, cfg.conv_width - 1, din), dt),
+        }
+        d = cfg.d_model
+        cache["slstm"] = {
+            "c": jnp.zeros((n_groups, B, d), jnp.float32),
+            "n": jnp.zeros((n_groups, B, d), jnp.float32),
+            "h": jnp.zeros((n_groups, B, d), jnp.float32),
+            "m": jnp.full((n_groups, B, cfg.n_heads), -1e30, jnp.float32),
+        }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def _apply_position_decode(p, kind, x, pcache, pos, cfg: ModelConfig):
+    """x: [B,1,d]. Returns (x', pcache')."""
+    h = rmsnorm(x, p["ln1"], cfg.rmsnorm_eps)
+    if kind in ("self", "local_attn"):
+        if cfg.attn_kind == "mla":
+            o, new = mla_mod.mla_decode(p["attn"], h, pcache, pos, cfg)
+        else:
+            ring = kind == "local_attn" or (
+                cfg.sliding_window is not None and cfg.family == "hybrid")
+            o, new = attn.attn_decode(p["attn"], h, pcache, pos, cfg, ring=ring)
+        x = x + o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        x = x + gated_mlp(h2, **p["mlp"], activation=cfg.activation)
+        return x, new
+    if kind == "cross":
+        o = attn.cross_attn_decode(p["attn"], h, pcache, cfg)
+        x = x + jnp.tanh(p["gate"]) * o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        x = x + gated_mlp(h2, **p["mlp"], activation=cfg.activation)
+        return x, pcache
+    if kind == "moe":
+        o, new = mla_mod.mla_decode(p["attn"], h, pcache, pos, cfg)
+        x = x + o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        y, _ = moe_mod.moe_ffn(p["moe"], h2, cfg)
+        return x + y, new
+    if kind == "rglru":
+        o, new = rec.rglru_decode(p["rec"], h, pcache, cfg)
+        x = x + o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        x = x + gated_mlp(h2, **p["mlp"], activation=cfg.activation)
+        return x, new
+    if kind == "mlstm":
+        o, new = rec.mlstm_decode(p["cell"], h, pcache, cfg)
+        return x + o, new
+    if kind == "slstm":
+        o, new = rec.slstm_decode(p["cell"], h, pcache, cfg)
+        return x + o, new
+    raise ValueError(kind)
+
+
+def _group_cache_slices(cache: dict, cfg: ModelConfig):
+    """Rearrange the cache dict into per-group xs for lax.scan."""
+    n_groups, pattern = group_layout(cfg)
+    if cfg.family in ("dense", "audio"):
+        return {"self_0": cache["kv"]}
+    if cfg.family == "moe":
+        return {"moe_0": cache["ckv"]}
+    if cfg.family == "vlm":
+        xs = {}
+        for i in range(len(pattern) - 1):
+            xs[f"self_{i}"] = jax.tree.map(lambda t, i=i: t[:, i], cache["kv"])
+        xs[f"cross_{len(pattern)-1}"] = cache["cross_kv"]
+        return xs
+    if cfg.family == "hybrid":
+        xs = {}
+        ri = 0
+        for i, kind in enumerate(pattern):
+            if kind == "rglru":
+                xs[f"rglru_{i}"] = jax.tree.map(lambda t, ri=ri: t[:, ri], cache["rec"])
+                ri += 1
+            else:
+                xs[f"local_attn_{i}"] = cache["kv"]
+        return xs
+    if cfg.family == "ssm":
+        xs = {}
+        for i in range(len(pattern) - 1):
+            xs[f"mlstm_{i}"] = jax.tree.map(lambda t, i=i: t[:, i], cache["mlstm"])
+        xs[f"slstm_{len(pattern)-1}"] = cache["slstm"]
+        return xs
+    raise ValueError(cfg.family)
+
+
+def _rebuild_cache(cache: dict, new_xs: dict, cfg: ModelConfig, pos) -> dict:
+    n_groups, pattern = group_layout(cfg)
+    out = dict(cache)
+    out["pos"] = pos + 1
+    if cfg.family in ("dense", "audio"):
+        out["kv"] = new_xs["self_0"]
+    elif cfg.family == "moe":
+        out["ckv"] = new_xs["moe_0"]
+    elif cfg.family == "vlm":
+        ks = [new_xs[f"self_{i}"] for i in range(len(pattern) - 1)]
+        out["kv"] = jax.tree.map(lambda *t: jnp.stack(t, axis=1), *ks)
+    elif cfg.family == "hybrid":
+        recs = [new_xs[f"rglru_{i}"] for i, k in enumerate(pattern) if k == "rglru"]
+        out["rec"] = jax.tree.map(lambda *t: jnp.stack(t, axis=1), *recs)
+        attn_key = next(f"local_attn_{i}" for i, k in enumerate(pattern)
+                        if k == "local_attn")
+        out["kv"] = new_xs[attn_key]
+    elif cfg.family == "ssm":
+        ms = [new_xs[f"mlstm_{i}"] for i in range(len(pattern) - 1)]
+        out["mlstm"] = jax.tree.map(lambda *t: jnp.stack(t, axis=1), *ms)
+        out["slstm"] = new_xs[f"slstm_{len(pattern)-1}"]
+    return out
+
+
+def decode_step(params: Params, cache: dict, tokens: jax.Array, cfg: ModelConfig,
+                return_hidden: bool = False):
+    """One decode step for a batch. tokens: [B] (audio [B, ncb])."""
+    pos = cache["pos"]
+    batch = {"tokens": tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]}
+    x = _embed_tokens(params, batch, cfg)
+    xs = _group_cache_slices(cache, cfg)
+    _, pattern = group_layout(cfg)
+
+    if cfg.family == "moe" and cfg.first_k_dense:
+        def pre_body(h, gp_and_c):
+            gp, c = gp_and_c
+            h, new = _apply_position_decode(gp, "self", h, c, pos, cfg)
+            return h, new
+        x, new_pre = jax.lax.scan(
+            pre_body, x, (params["dense_prefix"], cache["ckv_prefix"]))
+
+    def group_body(h, inp):
+        gp, cs = inp
+        new_cs = {}
+        for i, kind in enumerate(pattern):
+            name = f"{kind}_{i}"
+            h, new_cs[name] = _apply_position_decode(
+                gp[name], kind, h, cs[name], pos, cfg)
+        return h, new_cs
+
+    x, new_xs = jax.lax.scan(group_body, x, (params["groups"], xs))
+    cache = _rebuild_cache(cache, new_xs, cfg, pos)
+    if cfg.family == "moe" and cfg.first_k_dense:
+        cache["ckv_prefix"] = new_pre
+
+    x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = (x[:, 0] @ unembed).astype(jnp.float32)
+    if cfg.family == "audio":
+        logits = logits.reshape(-1, cfg.n_codebooks, cfg.vocab)
+    if return_hidden:
+        return cache, logits, x[:, 0]
+    return cache, logits
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def _apply_position_prefill(p, kind, x, pos_len, cfg: ModelConfig, extra):
+    """Returns (x', pcache). Like train but collecting decode state."""
+    h = rmsnorm(x, p["ln1"], cfg.rmsnorm_eps)
+    if kind in ("self", "local_attn"):
+        if cfg.attn_kind == "mla":
+            o, ckv = mla_mod.mla_prefill(p["attn"], h, cfg)
+            new = ckv
+        else:
+            o, kv_ = attn.attn_prefill(p["attn"], h, cfg)
+            new = kv_
+        x = x + o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        x = x + gated_mlp(h2, **p["mlp"], activation=cfg.activation)
+        return x, new
+    if kind == "cross":
+        o = attn.cross_attn(p["attn"], h, extra["vision"], cfg)
+        x = x + jnp.tanh(p["gate"]) * o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        x = x + gated_mlp(h2, **p["mlp"], activation=cfg.activation)
+        return x, attn.cross_attn_kv(p["attn"], extra["vision"], cfg)
+    if kind == "moe":
+        o, ckv = mla_mod.mla_prefill(p["attn"], h, cfg)
+        x = x + o
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        y, _ = moe_mod.moe_ffn(p["moe"], h2, cfg)
+        return x + y, ckv
+    if kind == "rglru":
+        y, st = rec.rglru_prefill(p["rec"], h, cfg)
+        x = x + y
+        h2 = rmsnorm(x, p["ln2"], cfg.rmsnorm_eps)
+        x = x + gated_mlp(h2, **p["mlp"], activation=cfg.activation)
+        return x, st
+    if kind == "mlstm":
+        y, st = rec.mlstm_prefill(p["cell"], h, cfg)
+        return x + y, st
+    if kind == "slstm":
+        y, st = rec.slstm_prefill(p["cell"], h, cfg)
+        return x + y, st
+    raise ValueError(kind)
+
+
+def _to_ring(kv: jax.Array, W: int, S: int) -> jax.Array:
+    """Rearrange the last min(S, W) cache rows into ring-buffer slot order.
+
+    kv: [..., B, S, Hkv, dh] -> [..., B, W, Hkv, dh] with row for absolute
+    position p stored at slot p % W (matching attn_decode's ring writes).
+    """
+    n = min(S, W)
+    tail = kv[..., S - n:, :, :]                     # last n positions
+    slots = (jnp.arange(S - n, S) % W).astype(jnp.int32)
+    out_shape = kv.shape[:-3] + (W,) + kv.shape[-2:]
+    out = jnp.zeros(out_shape, kv.dtype)
+    return out.at[..., slots, :, :].set(tail)
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig,
+            s_max: int | None = None):
+    """Process a full prompt; returns (cache, last-position logits).
+
+    ``s_max``: decode-cache capacity (>= prompt length); defaults to the
+    prompt length + 64 so generation can continue after prefill."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape[:2]
+    x = _embed_tokens(params, batch, cfg)
+    extra = {k: batch[k] for k in ("vision",) if k in batch}
+    _, pattern = group_layout(cfg)
+
+    if cfg.family == "moe" and cfg.first_k_dense:
+        def pre_body(h, gp):
+            h, new = _apply_position_prefill(gp, "self", h, S, cfg, extra)
+            return h, new
+        x, pre_caches = jax.lax.scan(pre_body, x, params["dense_prefix"])
+
+    def group_body(h, gp):
+        outs = {}
+        for i, kind in enumerate(pattern):
+            name = f"{kind}_{i}"
+            h, outs[name] = _apply_position_prefill(gp[name], kind, h, S, cfg, extra)
+        return h, outs
+
+    x, collected = jax.lax.scan(group_body, x, params["groups"])
+
+    # hybrid local attention uses ring caches of width W: rearrange
+    if cfg.family == "hybrid":
+        W = cfg.sliding_window or S
+        for i, kind in enumerate(pattern):
+            if kind == "local_attn":
+                name = f"local_attn_{i}"
+                collected[name] = jax.tree.map(
+                    lambda t: _to_ring(t, W, S), collected[name])
+        cache_S = W
+    else:
+        # leave decode headroom: a cache sized exactly S cannot extend
+        cache_S = s_max if s_max is not None else S + 64
+        assert cache_S >= S
+        if cache_S > S:
+            def pad_seq(t):
+                # collected self_/moe_ caches are [G, B, S, ...] (kv tuples
+                # and MLA latents alike): the sequence axis is always 2
+                pad = [(0, 0)] * t.ndim
+                pad[2] = (0, cache_S - S)
+                return jnp.pad(t, pad)
+            if cfg.family in ("dense", "audio", "moe", "vlm"):
+                for name in list(collected):
+                    if name.startswith(("self_", "moe_")):
+                        collected[name] = jax.tree.map(pad_seq, collected[name])
+    cache = _rebuild_cache(
+        init_cache(cfg, B, cache_S), collected, cfg, jnp.asarray(S - 1, jnp.int32))
+    if cfg.family == "moe" and cfg.first_k_dense:
+        if cache_S > S:
+            pre_caches = jax.tree.map(pad_seq, pre_caches)
+        cache["ckv_prefix"] = pre_caches
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.rmsnorm_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = (x[:, 0] @ unembed).astype(jnp.float32)
+    if cfg.family == "audio":
+        logits = logits.reshape(-1, cfg.n_codebooks, cfg.vocab)
+    return cache, logits

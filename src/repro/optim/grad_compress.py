@@ -1,0 +1,92 @@
+"""Gradient compression for cross-pod reduction: int8 QSGD + error feedback.
+
+At multi-pod scale the 'pod' axis rides the slowest links (DCI), so the
+gradient all-reduce there is the byte budget that matters. We compress with
+per-tensor-scaled int8 quantization (4x vs f32, 2x vs bf16) and keep the
+quantization *residual* in an error-feedback accumulator, which restores
+convergence to the uncompressed trajectory (Karimireddy et al.-style EF).
+
+``compressed_psum`` runs inside shard_map on the compression axis: quantize
+-> all_gather(int8 + scales) -> dequantize-sum locally. With k pods that
+moves k*(n/4) f32-equivalent bytes instead of the ~2n of a ring all-reduce;
+for k=2 pods it is a strict win and numerically transparent under EF.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grad: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback compress one tensor. Returns (q, scale, new_err)."""
+    corrected = grad.astype(jnp.float32) + err
+    q, s = quantize_int8(corrected)
+    new_err = corrected - dequantize_int8(q, s)
+    return q, s, new_err
+
+
+def compressed_psum(grad: jax.Array, err: jax.Array, axis: str):
+    """int8 all-gather-sum over ``axis`` (call inside shard_map)."""
+    q, s, new_err = ef_compress(grad, err)
+    qs = jax.lax.all_gather(q, axis)            # [k, ...] int8
+    ss = jax.lax.all_gather(s, axis)            # [k]
+    summed = jnp.tensordot(ss, qs.astype(jnp.float32), axes=([0], [0]))
+    return summed.astype(grad.dtype), new_err
+
+
+def tree_compressed_psum(grads, err_state, axis: str):
+    """Tree version; err_state mirrors grads (f32)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e, _ = jax.tree_util.tree_flatten(err_state)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        sg, ne = compressed_psum(g, e, axis)
+        out_g.append(sg)
+        out_e.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def make_dp_compressed_train_step(loss_fn, opt_update, mesh, axis: str = "data"):
+    """Data-parallel train step with explicit compressed gradient reduce.
+
+    Runs the whole step under shard_map over ``axis``: per-shard grads via
+    local value_and_grad, int8+EF all-gather-sum across the axis, optimizer
+    applied identically on every shard. Params replicated over ``axis``.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    def local_step(params, err, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        grads, err = tree_compressed_psum(grads, err, axis)
+        n = jax.lax.psum(1, axis)
+        grads = jax.tree.map(lambda g: g / n, grads)
+        params, opt_state, om = opt_update(params, grads, opt_state)
+        return params, err, opt_state, {**metrics, **om, "loss": loss}
+
+    batch_spec = P(axis)
+    rep = P()
+    return shard_map(
+        local_step, mesh=mesh,
+        in_specs=(rep, rep, rep, batch_spec),
+        out_specs=(rep, rep, rep, rep),
+        check_rep=False)

@@ -1,0 +1,505 @@
+"""Static analyzer for optimized HLO text with loop trip-count scaling.
+
+``compiled.cost_analysis()`` counts a while (lax.scan) body ONCE, which
+undercounts layer-scanned models by ~n_layers. This analyzer parses the
+optimized HLO, builds the computation call graph (while bodies carry
+``backend_config={"known_trip_count":{"n":...}}``), and propagates execution
+multiplicity so that:
+
+  * FLOPs   = sum over dot/convolution ops of 2*prod(out)*prod(contracted),
+              times multiplicity (dots inside fusion computations included);
+  * bytes   = HBM-traffic proxy: sum of (operand + output) bytes of top-level
+              ops in executed computations. Ops *inside* fusion computations
+              are excluded (a fusion is one kernel; its interior never
+              round-trips HBM) — the fusion op itself is counted;
+  * collectives = per-kind moved bytes (max of operand/output), times
+              multiplicity.
+
+All quantities are per-device (the SPMD module is the per-device program);
+multiply by device count for global terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_KIND_RE = re.compile(r"^([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*(\(?[a-z0-9]+\[[0-9,]*\][^,)]*)")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def _split_type(rhs: str) -> tuple[str | None, str]:
+    """Split 'TYPE kind(args...)' where TYPE is 'dtype[..]{..}' or a tuple
+    '(t1, t2, ...)' possibly containing '/*index=N*/' comments."""
+    rhs = rhs.lstrip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1], rhs[i + 1:].lstrip()
+        return None, ""
+    sp = rhs.find(" ")
+    if sp < 0:
+        return None, ""
+    return rhs[:sp], rhs[sp + 1:].lstrip()
+
+
+def _split_operands(arg_str: str) -> tuple[list[str], str]:
+    """Split 'op(...)rest' argument text into operand names and attr tail."""
+    depth = 0
+    for i, ch in enumerate(arg_str):
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            if depth == 0:
+                operands = arg_str[:i]
+                tail = arg_str[i + 1:]
+                names = re.findall(r"%([\w\.\-]+)", operands)
+                return names, tail
+            depth -= 1
+    return re.findall(r"%([\w\.\-]+)", arg_str), ""
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape_str: str
+    kind: str
+    operands: list
+    tail: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict                      # param name -> shape str
+    ops: list                         # list[Op]
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("{" in line) and ("->" in line):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                params = {p: s for p, s in _PARAM_RE.findall(m.group(2))}
+                cur = Computation(m.group(1), params, [])
+                comps[cur.name] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        shape_str, rest = _split_type(rhs)
+        if shape_str is None:
+            continue
+        km = _KIND_RE.match(rest)
+        if not km:
+            continue
+        kind, arg_str = km.groups()
+        operands, tail = _split_operands(arg_str)
+        cur.ops.append(Op(name, shape_str, kind, operands, tail))
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    """2 * prod(output) * prod(contracting dims of lhs)."""
+    out_elems, _ = _shape_elems_bytes(op.shape_str)
+    lhs_shape = shapes.get(op.operands[0], "") if op.operands else ""
+    m = _SHAPE_RE.search(lhs_shape)
+    if not m:
+        return 0.0
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.tail)
+    contracted = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(dims):
+                contracted *= dims[i]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(op: Op, shapes: dict) -> float:
+    out_elems, _ = _shape_elems_bytes(op.shape_str)
+    rhs_shape = shapes.get(op.operands[1], "") if len(op.operands) > 1 else ""
+    m = _SHAPE_RE.search(rhs_shape)
+    if not m:
+        return 0.0
+    kdims = [int(d) for d in m.group(2).split(",") if d]
+    # kernel = spatial... x in_ch x out_ch; flops per output elem = 2*prod/out_ch
+    if not kdims:
+        return 0.0
+    per_out = 2 * max(1, math.prod(kdims) // max(kdims[-1], 1))
+    return float(out_elems * per_out)
+
+
+_SKIP_BYTES_KINDS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+}
+
+# Ops that materialize buffers in HBM on a TPU-grade compiler. Elementwise
+# chains (add/mul/convert/select/...) fuse into producers/consumers and are
+# counted as free; a `fusion` op counts only if its computation transitively
+# contains an anchor (e.g. CPU-wrapped reduce), since a pure-elementwise
+# fusion would melt into its neighbors on TPU.
+_ANCHOR_KINDS = {
+    "dot", "convolution", "reduce", "reduce-window", "sort", "scatter",
+    "gather", "dynamic-slice", "dynamic-update-slice", "concatenate",
+    "custom-call", "rng", "rng-bit-generator", "cholesky", "triangular-solve",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "pad", "reverse",
+}
+
+# Ops that read only a slice-sized window of their operand.
+_SLICER_KINDS = {"dynamic-slice", "slice", "gather"}
+
+# Pure dtype/layout plumbing: a fusion whose interior contains only these is
+# a CPU-backend artifact (e.g. oneDNN requires f32 operands, so XLA-CPU
+# materializes f32 copies of bf16 weights before every dot). A TPU compile
+# consumes bf16 natively, so such fusions carry no HBM traffic of their own.
+_PLUMBING_KINDS = {"convert", "bitcast", "copy", "parameter", "transpose",
+                   "reshape", "broadcast", "tuple", "get-tuple-element"}
+
+
+def _is_plumbing_comp(comp: "Computation") -> bool:
+    return all(op.kind in _PLUMBING_KINDS for op in comp.ops)
+
+
+def _is_slicing_plumbing_comp(comp: "Computation") -> bool:
+    """Slice + dtype/layout plumbing only (e.g. `w[i]` layer-weight slicing
+    followed by a CPU-backend f32 convert). On TPU both melt into the
+    consuming dot: the fusion itself carries no traffic and consumers charge
+    the slice-sized source-dtype bytes."""
+    allowed = _PLUMBING_KINDS | _SLICER_KINDS | {"constant"}
+    return all(op.kind in allowed for op in comp.ops) and any(
+        op.kind in _SLICER_KINDS for op in comp.ops)
+
+
+def _slicer_output_bytes(comp: "Computation") -> int:
+    return sum(_shape_elems_bytes(op.shape_str)[1]
+               for op in comp.ops if op.kind in _SLICER_KINDS)
+
+
+def _resolve_operand_bytes(name: str, shapes: dict, defs: dict,
+                           comps: dict | None, depth: int = 0) -> int:
+    """Bytes actually read for an operand: walk back through dtype/layout
+    plumbing (convert/bitcast/copy chains and pure-plumbing fusions) and
+    charge the smallest shape on the chain — a bf16 weight converted to f32
+    for a CPU dot is read once as bf16 on TPU."""
+    best = _shape_elems_bytes(shapes.get(name, ""))[1]
+    cur = name
+    while depth < 6 and cur in defs:
+        op = defs[cur]
+        if op.kind in ("convert", "bitcast", "copy", "reshape", "transpose"):
+            if not op.operands:
+                break
+            cur = op.operands[0]
+        elif op.kind == "fusion" and comps is not None:
+            m = re.search(r"calls=%([\w\.\-]+)", op.tail)
+            callee = comps.get(m.group(1)) if m else None
+            if callee is None:
+                break
+            if _is_slicing_plumbing_comp(callee):
+                # consumer reads only the slice window, at source dtype
+                b = _slicer_output_bytes(callee)
+                return min(best, b) if b else best
+            if not _is_plumbing_comp(callee) or len(op.operands) != 1:
+                break
+            cur = op.operands[0]
+        else:
+            break
+        depth += 1
+        b = _shape_elems_bytes(shapes.get(cur, ""))[1]
+        if b:
+            best = min(best, b)
+    return best
+
+
+def _op_traffic(op: Op, shapes: dict, comps: dict | None,
+                defs: dict | None = None) -> float:
+    """HBM traffic of one top-level op, with in-place/slice semantics.
+
+    * slicers read+write only the slice (2x output bytes);
+    * dynamic-update-slice updates in place (2x update bytes);
+    * scatter moves 2x updates (+ indices);
+    * fusion charges its output write plus, per fusion parameter, either the
+      slice-sized reads (if every interior consumer is a slicer) or the full
+      parameter bytes — this models XLA fusing `w[i]` weight slicing into
+      consumers without charging the whole scanned weight stack.
+    """
+    _, out_b = _shape_elems_bytes(op.shape_str)
+    kind = op.kind
+
+    defs = defs or {}
+
+    def operand_bytes(i):
+        if i < len(op.operands) and op.operands[i] in shapes:
+            return _resolve_operand_bytes(op.operands[i], shapes, defs, comps)
+        return 0
+
+    if kind in _SLICER_KINDS:
+        return 2.0 * out_b
+    if kind == "dynamic-update-slice":
+        return 2.0 * operand_bytes(1)
+    if kind == "scatter":
+        n = len(op.operands)
+        upd = operand_bytes(n - 1)
+        idx = operand_bytes(1) if n >= 3 else 0
+        return 2.0 * upd + idx
+    if kind == "fusion" and comps is not None:
+        m = re.search(r"calls=%([\w\.\-]+)", op.tail)
+        comp = comps.get(m.group(1)) if m else None
+        if comp is not None:
+            interior = dict(comp.params)
+            defs = {}
+            for o in comp.ops:
+                interior[o.name] = o.shape_str
+                defs[o.name] = o
+
+            def resolve(name, depth=0):
+                """Follow bitcast/copy/convert/reshape chains to a source."""
+                while depth < 8 and name in defs and defs[name].kind in (
+                        "bitcast", "copy", "convert", "reshape", "transpose"):
+                    if not defs[name].operands:
+                        break
+                    name = defs[name].operands[0]
+                    depth += 1
+                return name
+
+            dus_ops = [o for o in comp.ops
+                       if o.kind == "dynamic-update-slice"]
+            dus_buffer_srcs = {resolve(o.operands[0]) for o in dus_ops
+                               if o.operands}
+            charge = 0.0
+            if dus_ops:
+                # in-place stacking: traffic = read+write of the updated
+                # window only (the buffer itself is aliased, not copied)
+                for o in dus_ops:
+                    if len(o.operands) > 1 and o.operands[1] in interior:
+                        charge += 2.0 * _shape_elems_bytes(
+                            interior[o.operands[1]])[1]
+            else:
+                charge = float(out_b)
+            for pname, pshape in comp.params.items():
+                if pname in dus_buffer_srcs:
+                    continue  # aliased in-place buffer, charged via updates
+                consumers = [o for o in comp.ops if pname in o.operands]
+                if consumers and all(c.kind in _SLICER_KINDS
+                                     for c in consumers):
+                    charge += sum(_shape_elems_bytes(c.shape_str)[1]
+                                  for c in consumers)
+                else:
+                    charge += _shape_elems_bytes(pshape)[1]
+            return charge
+    in_b = sum(operand_bytes(i) for i in range(len(op.operands)))
+    return float(out_b + in_b)
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float
+    bytes_traffic: float            # anchor-op (TPU-fusion-aware) traffic
+    bytes_traffic_pessimistic: float  # every top-level op counted
+    collective_bytes: dict
+    collective_counts: dict
+
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def analyze_text(text: str) -> Analysis:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return Analysis(0.0, 0.0, 0.0, {}, {})
+
+    # --- pass 1: which computations transitively contain anchor ops -------
+    fusion_callees: dict[str, list] = {}
+    has_own_anchor: dict[str, bool] = {}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        callees = []
+        own = False
+        for op in comp.ops:
+            base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if base in _ANCHOR_KINDS:
+                own = True
+            if op.kind == "fusion":
+                for am in re.finditer(r"calls=%([\w\.\-]+)", op.tail):
+                    callees.append(am.group(1))
+        fusion_callees[cname] = callees
+        has_own_anchor[cname] = own
+
+    anchor_memo: dict[str, bool] = {}
+
+    def comp_has_anchor(cname: str) -> bool:
+        if cname in anchor_memo:
+            return anchor_memo[cname]
+        anchor_memo[cname] = False  # cycle guard
+        result = has_own_anchor.get(cname, False) or any(
+            comp_has_anchor(c) for c in fusion_callees.get(cname, ()))
+        anchor_memo[cname] = result
+        return result
+
+    # --- pass 2: per-computation raw costs + call edges --------------------
+    comp_cost = {}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        shapes = dict(comp.params)
+        defs = {}
+        for op in comp.ops:
+            shapes[op.name] = op.shape_str
+            defs[op.name] = op
+        flops = 0.0
+        traffic = 0.0
+        traffic_pess = 0.0
+        coll_bytes = defaultdict(float)
+        coll_counts = defaultdict(int)
+        edges = []  # (callee, multiplier, via_fusion)
+        for op in comp.ops:
+            kind = op.kind
+            if kind in ("dot", "dot-general"):
+                flops += _dot_flops(op, shapes)
+            elif kind == "convolution":
+                flops += _conv_flops(op, shapes)
+            if kind == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.tail)
+                if tm:
+                    trip = int(tm.group(1))
+                for attr in ("condition", "body"):
+                    am = re.search(attr + r"=%([\w\.\-]+)", op.tail)
+                    if am:
+                        edges.append((am.group(1), trip, False))
+            elif kind == "conditional":
+                bm = re.search(r"branch_computations=\{([^}]*)\}", op.tail)
+                if bm:
+                    for callee in re.findall(r"%([\w\.\-]+)", bm.group(1)):
+                        edges.append((callee, 1, False))
+                for attr in ("true_computation", "false_computation"):
+                    am = re.search(attr + r"=%([\w\.\-]+)", op.tail)
+                    if am:
+                        edges.append((am.group(1), 1, False))
+            elif kind in ("fusion", "reduce", "reduce-window", "sort", "map",
+                          "scatter", "select-and-scatter", "reduce-scatter",
+                          "all-reduce", "custom-call", "call"):
+                for am in re.finditer(
+                        r"(?:calls|to_apply)=%([\w\.\-]+)", op.tail):
+                    edges.append((am.group(1), 1, kind == "fusion"))
+
+            if kind in _SKIP_BYTES_KINDS:
+                continue
+            _, out_b = _shape_elems_bytes(op.shape_str)
+            in_b = 0
+            for o in op.operands:
+                if o in shapes:
+                    _, b = _shape_elems_bytes(shapes[o])
+                    in_b += b
+            traffic_pess += out_b + in_b
+            base = kind[:-6] if kind.endswith("-start") else kind
+            is_anchor = base in _ANCHOR_KINDS or (
+                kind == "fusion" and any(
+                    comp_has_anchor(am.group(1))
+                    and not _is_slicing_plumbing_comp(comps[am.group(1)])
+                    for am in re.finditer(r"calls=%([\w\.\-]+)", op.tail)))
+            if is_anchor:
+                traffic += _op_traffic(op, shapes, comps, defs)
+            if base in _COLLECTIVE_KINDS:
+                coll_bytes[base] += max(out_b, in_b)
+                coll_counts[base] += 1
+        comp_cost[cname] = dict(flops=flops, traffic=traffic,
+                                traffic_pess=traffic_pess,
+                                coll_bytes=coll_bytes,
+                                coll_counts=coll_counts, edges=edges)
+
+    # --- pass 3: propagate multiplicity over the call DAG ------------------
+    flops_mult = defaultdict(float)    # counts flops + collectives
+    traffic_mult = defaultdict(float)  # counts HBM traffic (no fusion interiors)
+
+    def visit(cname, mult, traffic_on):
+        if cname not in comp_cost or mult == 0:
+            return
+        flops_mult[cname] += mult
+        if traffic_on:
+            traffic_mult[cname] += mult
+        for callee, k, via_fusion in comp_cost[cname]["edges"]:
+            visit(callee, mult * k, traffic_on and not via_fusion)
+
+    import sys
+    old = sys.getrecursionlimit()
+    sys.setrecursionlimit(100000)
+    try:
+        visit(entry.name, 1.0, True)
+    finally:
+        sys.setrecursionlimit(old)
+
+    flops = 0.0
+    traffic = 0.0
+    traffic_pess = 0.0
+    coll_b = defaultdict(float)
+    coll_c = defaultdict(float)
+    for cname, cost in comp_cost.items():
+        fm = flops_mult.get(cname, 0.0)
+        tm = traffic_mult.get(cname, 0.0)
+        flops += fm * cost["flops"]
+        traffic += tm * cost["traffic"]
+        traffic_pess += tm * cost["traffic_pess"]
+        for k, v in cost["coll_bytes"].items():
+            coll_b[k] += fm * v
+        for k, v in cost["coll_counts"].items():
+            coll_c[k] += fm * v
+    return Analysis(flops, traffic, traffic_pess, dict(coll_b), dict(coll_c))

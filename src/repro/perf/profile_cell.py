@@ -1,0 +1,134 @@
+"""Dry-run profiler: per-op traffic/FLOPs attribution from optimized HLO.
+
+This is the 'profile' of the CPU-only workflow: since there is no wall-clock
+TPU trace, optimization targets come from ranking ops by modeled HBM traffic
+and FLOPs (trip-count-scaled). Usage:
+
+    python -m repro.perf.profile_cell --hlo /tmp/cell.hlo --top 25
+    python -m repro.perf.profile_cell --arch deepseek-v3-671b \
+        --shape decode_32k --top 25        # lowers + compiles first
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from collections import defaultdict
+
+from . import hlo_analyze as ha
+
+
+def profile_text(text: str, top: int = 25):
+    comps = ha.parse_hlo(text)
+    entry = comps["__entry__"]
+
+    comp_edges = {}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        edges = []
+        for op in comp.ops:
+            if op.kind == "while":
+                trip = 1
+                tm = ha._TRIP_RE.search(op.tail)
+                if tm:
+                    trip = int(tm.group(1))
+                for attr in ("condition", "body"):
+                    am = re.search(attr + r"=%([\w\.\-]+)", op.tail)
+                    if am:
+                        edges.append((am.group(1), trip))
+        comp_edges[cname] = edges
+
+    mult = defaultdict(float)
+
+    def visit(c, m):
+        mult[c] += m
+        for callee, k in comp_edges.get(c, []):
+            visit(callee, m * k)
+
+    visit(entry.name, 1.0)
+
+    # anchor detection (as in analyze_text)
+    fusion_callees, own = {}, {}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        cs, o = [], False
+        for op in comp.ops:
+            base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if base in ha._ANCHOR_KINDS:
+                o = True
+            if op.kind == "fusion":
+                cs += [am.group(1) for am in
+                       re.finditer(r"calls=%([\w\.\-]+)", op.tail)]
+        fusion_callees[cname], own[cname] = cs, o
+    memo = {}
+
+    def has_anchor(c):
+        if c in memo:
+            return memo[c]
+        memo[c] = False
+        memo[c] = own.get(c, False) or any(has_anchor(x)
+                                           for x in fusion_callees.get(c, []))
+        return memo[c]
+
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__" or mult.get(cname, 0) == 0:
+            continue
+        shapes = dict(comp.params)
+        defs = {}
+        for op in comp.ops:
+            shapes[op.name] = op.shape_str
+            defs[op.name] = op
+        for op in comp.ops:
+            base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            is_anchor = base in ha._ANCHOR_KINDS or (
+                op.kind == "fusion" and any(
+                    has_anchor(am.group(1))
+                    and not ha._is_slicing_plumbing_comp(comps[am.group(1)])
+                    for am in re.finditer(r"calls=%([\w\.\-]+)", op.tail)))
+            flops = 0.0
+            if base in ("dot", "dot-general"):
+                flops = ha._dot_flops(op, shapes) * mult[cname]
+            traffic = (ha._op_traffic(op, shapes, comps, defs) * mult[cname]
+                       if is_anchor else 0.0)
+            if traffic or flops:
+                meta = re.search(r'op_name="([^"]*)"', op.tail)
+                rows.append((traffic, flops, op.kind, op.name,
+                             op.shape_str[:48],
+                             (meta.group(1) if meta else "")[:70]))
+    return sorted(rows, key=lambda r: -r[0])[:top], sorted(
+        rows, key=lambda r: -r[1])[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    if args.hlo:
+        text = open(args.hlo).read()
+    else:
+        from ..configs.registry import SHAPES, get
+        from ..launch.mesh import make_production_mesh
+        from ..runtime import steps
+        cfg = get(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        lowered, _ = steps.lower_cell(cfg, SHAPES[args.shape], mesh)
+        text = lowered.compile().as_text()
+
+    by_traffic, by_flops = profile_text(text, args.top)
+    print(f"== top {args.top} by per-device HBM traffic ==")
+    for t, f, kind, name, shape, meta in by_traffic:
+        print(f"{t/1e9:10.2f} GB {kind:18s} {shape:48s} {meta}")
+    print(f"\n== top {args.top} by per-device FLOPs ==")
+    for t, f, kind, name, shape, meta in by_flops:
+        print(f"{f/1e12:10.3f} TF {kind:18s} {shape:48s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Target hardware: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis`` on a partitioned executable reports *per-device* flops /
+bytes; we scale by device count to get global HLO terms (so the division by
+chips above recovers per-chip time). Collective bytes are not in
+cost_analysis: we parse the optimized HLO and sum the (per-device) output
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, times the device count — i.e. total bytes crossing the
+fabric under a ring schedule (per-chip link time ~= local bytes / link_bw).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+LINK_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes appearing in a result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_local(hlo_text: str) -> dict:
+    """Per-device output bytes of each collective kind in optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if " = " not in stripped:
+            continue
+        lhs, rhs = stripped.split(" = ", 1)
+        op = rhs.split("(", 1)[0].strip()
+        # ops look like: bf16[8,128]{1,0} all-reduce(...), or tuple results
+        m = re.match(r"^((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+([a-z0-9\-\.]+)",
+                     rhs)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        opbase = opname.split(".")[0]
+        # normalize e.g. all-reduce-start
+        for coll in _COLLECTIVES:
+            if opbase == coll or opbase == coll + "-start":
+                out[coll] += _shape_bytes(shape_str)
+                counts[coll] += 1
+                break
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_global: float
+    bytes_global: float
+    coll_bytes_global: float
+    coll_breakdown: dict
+    model_flops: float
+    memory_per_device: dict
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_global / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_global / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_global / (self.chips * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.flops_global if self.flops_global else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the peak implied by the dominant term if compute-bound
+        at the model's useful FLOPs: MODEL_FLOPS / (chips*peak) / t_bound."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.t_bound if self.t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_global": self.flops_global,
+            "bytes_global": self.bytes_global,
+            "coll_bytes_global": self.coll_bytes_global,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "memory_per_device": self.memory_per_device,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float) -> Roofline:
+    """Roofline terms from the compiled executable.
+
+    FLOPs / traffic / collectives come from the trip-count-aware HLO static
+    analyzer (xla's cost_analysis counts while bodies once — see
+    hlo_analyze); memory figures from compiled.memory_analysis().
+    """
+    from . import hlo_analyze
+
+    hlo = compiled.as_text()
+    an = hlo_analyze.analyze_text(hlo)
+    flops_local = an.flops
+    bytes_local = an.bytes_traffic
+    coll = dict(an.collective_bytes)
+    counts = dict(an.collective_counts)
+    counts["bytes_pessimistic_global"] = an.bytes_traffic_pessimistic
+    coll_local = an.total_collective_bytes()
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0) or 0),
+        }
+    except Exception:  # pragma: no cover - backend-dependent
+        mem = {}
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_global=flops_local * chips,
+        bytes_global=bytes_local * chips,
+        coll_bytes_global=coll_local * chips,
+        coll_breakdown={k: v * chips for k, v in coll.items()} | {
+            "counts": counts},
+        model_flops=model_flops,
+        memory_per_device=mem,
+    )
+
+
+def model_flops_for(cfg, shape: dict) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed.
+
+    decode: D = global_batch (one token each). train: forward+backward = 6ND.
+    prefill/decode (inference): 2*N*D forward-only.
+    """
+    n_active = cfg.active_param_count()
+    tokens = shape["global_batch"] * (shape["seq_len"] if shape["mode"] in
+                                      ("train", "prefill") else 1)
+    mult = 6.0 if shape["mode"] == "train" else 2.0
+    return mult * n_active * tokens

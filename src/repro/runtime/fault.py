@@ -1,0 +1,128 @@
+"""Fault tolerance: supervised training loop, straggler watchdog, elastic
+restart.
+
+The container is single-host, so hardware failure is *simulated* — but the
+recovery machinery is real: the supervisor catches a step-time fault (any
+exception, including an injected one), restores the newest checkpoint
+(possibly onto a different mesh — elastic), fast-forwards the data stream
+deterministically, and resumes. Tests kill training mid-run and assert
+bit-continuation.
+
+Straggler mitigation: on a synchronous fleet a slow host delays every
+collective. The watchdog tracks a robust step-time median; a step exceeding
+``straggler_factor`` x median raises a StragglerEvent, and the policy either
+(a) records-and-continues (jitter absorption — TorR's own headroom
+philosophy), or (b) after ``max_consecutive``, triggers a checkpoint +
+elastic restart excluding the slow host (here: a re-mesh callback).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+
+
+class InjectedFault(RuntimeError):
+    """Simulated node failure."""
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    median: float
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    ckpt_every: int = 20
+    max_restarts: int = 5
+    straggler_factor: float = 3.0
+    straggler_window: int = 32
+    max_consecutive_stragglers: int = 3
+
+
+class StragglerWatchdog:
+    def __init__(self, cfg: SupervisorConfig):
+        self.cfg = cfg
+        self.times: list[float] = []
+        self.consecutive = 0
+        self.events: list[StragglerEvent] = []
+
+    def observe(self, step: int, dt: float) -> str:
+        """Returns 'ok' | 'straggler' | 'evict'."""
+        med = float(np.median(self.times)) if self.times else dt
+        self.times.append(dt)
+        if len(self.times) > self.cfg.straggler_window:
+            self.times.pop(0)
+        if self.times and dt > self.cfg.straggler_factor * med and \
+                len(self.times) > 4:
+            self.consecutive += 1
+            self.events.append(StragglerEvent(step, dt, med))
+            if self.consecutive >= self.cfg.max_consecutive_stragglers:
+                self.consecutive = 0
+                return "evict"
+            return "straggler"
+        self.consecutive = 0
+        return "ok"
+
+
+class TrainSupervisor:
+    """Run a step function with checkpoint/restart under injected faults.
+
+    ``state`` is any pytree (params, opt state, ...). ``data_stream(start)``
+    must be deterministic and resumable from an arbitrary step — the
+    skip-ahead contract every production loader implements.
+    """
+
+    def __init__(self, step_fn: Callable, ckpt: CheckpointManager,
+                 cfg: SupervisorConfig = SupervisorConfig(),
+                 on_evict: Callable | None = None):
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.watchdog = StragglerWatchdog(cfg)
+        self.on_evict = on_evict
+        self.restarts = 0
+
+    def run(self, state, data_stream: Callable[[int], Iterator],
+            n_steps: int, start_step: int = 0,
+            fault_at: int | None = None, shardings=None):
+        step = start_step
+        while step < n_steps:
+            try:
+                stream = data_stream(step)
+                for batch in stream:
+                    if step >= n_steps:
+                        break
+                    t0 = time.perf_counter()
+                    if fault_at is not None and step == fault_at:
+                        fault_at = None  # fire once
+                        raise InjectedFault(f"simulated node loss @ step {step}")
+                    state = self.step_fn(state, batch)
+                    dt = time.perf_counter() - t0
+                    verdict = self.watchdog.observe(step, dt)
+                    if verdict == "evict" and self.on_evict is not None:
+                        self.ckpt.save(step + 1, state)
+                        state, shardings = self.on_evict(state)
+                    step += 1
+                    if step % self.cfg.ckpt_every == 0:
+                        self.ckpt.save(step, state)
+            except InjectedFault:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    step = start_step  # cold restart
+                    continue
+                state, step = self.ckpt.restore(state, shardings=shardings)
+            else:
+                break
+        self.ckpt.save(step, state)
+        return state, step

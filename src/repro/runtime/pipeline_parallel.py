@@ -1,0 +1,87 @@
+"""GPipe-style pipeline parallelism over the 'pod' axis.
+
+The production mesh's `pod` axis defaults to outer data-parallel; this
+module offers the alternative: each pod holds a contiguous slice of the
+layer stack and microbatches stream through via `ppermute`. The schedule is
+the classic scan over T = n_micro + n_stages − 1 ticks; because the whole
+loop is jax-differentiable (ppermute has a transpose rule), `jax.grad`
+through the pipelined forward yields the reverse-pipeline backward without
+hand-written VJPs.
+
+This is layer-granular (the stage function applies `layers_per_stage`
+scanned layer groups), so it composes with the in-stage TP/DP sharding:
+mesh ('pod'=stages, 'data', 'model').
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(
+    stage_fn: Callable,       # (stage_params, x) -> x
+    stage_params,             # pytree, leaves [n_stages, ...] (stage-major)
+    x: jax.Array,             # [n_micro, micro_batch, ...] global microbatches
+    mesh: Mesh,
+    axis: str = "pod",
+) -> jax.Array:
+    """Run x through n_stages pipeline stages; returns outputs [n_micro, ...].
+
+    ``stage_params`` leaves carry a leading stage dim sharded over ``axis``;
+    ``x`` microbatches are replicated across ``axis`` (each stage sees the
+    stream; only stage 0 consumes, only the last emits).
+    """
+    n_stages = mesh.shape[axis]
+
+    def local(params, xs):
+        # params: stage-local pytree (leading dim 1) ; xs: [n_micro, mb, ...]
+        params = jax.tree.map(lambda t: t[0], params)
+        stage = jax.lax.axis_index(axis)
+        n_micro = xs.shape[0]
+        T = n_micro + n_stages - 1
+        buf = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (when valid); others use recv
+            x_in = jnp.where(stage == 0, xs[jnp.clip(t, 0, n_micro - 1)], buf)
+            y = stage_fn(params, x_in)
+            # valid iff this stage is processing a real microbatch at tick t
+            mb_idx = t - stage
+            valid = (mb_idx >= 0) & (mb_idx < n_micro)
+            y = jnp.where(valid, y, jnp.zeros_like(y))
+            # last stage writes output; others forward to the next stage
+            outs = jax.lax.cond(
+                (stage == n_stages - 1) & valid,
+                lambda o: o.at[jnp.clip(mb_idx, 0, n_micro - 1)].set(y),
+                lambda o: o, outs)
+            buf = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (buf, outs), None
+
+        (buf, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(T))
+        # only the last stage wrote real outputs (zeros elsewhere): a psum
+        # over the stage axis broadcasts them to every pod, replicated out
+        return jax.lax.psum(outs, axis)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_rep=False)
+    return fn(stage_params, x)
+
+
+def split_stages(params, n_stages: int):
+    """Reshape layer-stacked params [L, ...] -> [n_stages, L/n_stages, ...]."""
+    def reshape(t):
+        L = t.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return t.reshape(n_stages, L // n_stages, *t.shape[1:])
+    return jax.tree.map(reshape, params)

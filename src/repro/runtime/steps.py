@@ -1,0 +1,102 @@
+"""Jitted step builders: train / prefill / decode, with sharding plumbing.
+
+These are the functions the launcher jits against the production mesh and
+the dry-run lowers with ShapeDtypeStruct inputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as tf
+from ..models.config import ModelConfig
+from ..optim import adamw
+from . import sharding as shd
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptimConfig, mesh=None):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return tf.forward_train(p, batch, cfg, mesh=mesh)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, om = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, tokens):
+        return tf.decode_step(params, cache, tokens, cfg)
+
+    return decode_step
+
+
+def make_prefill(cfg: ModelConfig, s_max: int | None = None):
+    def prefill_step(params, batch):
+        return tf.prefill(params, batch, cfg, s_max=s_max)
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers (shared by dryrun and the launchers)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: tf.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def lower_cell(cfg: ModelConfig, shape: dict, mesh, *,
+               opt_cfg: adamw.OptimConfig | None = None,
+               donate: bool = True):
+    """Build + lower the step for one (arch x shape x mesh) cell.
+
+    Returns (lowered, meta) where meta records the abstract shapes used.
+    """
+    from ..configs.registry import input_specs  # local to avoid cycle
+
+    mode = shape["mode"]
+    params_abs = abstract_params(cfg)
+    p_shard = shd.params_sharding(params_abs, mesh)
+    batch_abs = input_specs(cfg, shape)
+    b_shard = shd.batch_sharding(batch_abs, mesh)
+
+    if mode == "train":
+        opt_cfg = opt_cfg or adamw.OptimConfig()
+        step = make_train_step(cfg, opt_cfg,
+                               mesh=mesh if cfg.moe_groups else None)
+        opt_abs = jax.eval_shape(adamw.init_opt_state, params_abs)
+        o_shard = shd.params_sharding(opt_abs, mesh)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        lowered = fn.lower(params_abs, opt_abs, batch_abs)
+        return lowered, {"mode": mode}
+
+    if mode == "prefill":
+        # dry-run cells lower with cache capacity == prompt length so the
+        # roofline terms measure exactly the assigned shape
+        step = make_prefill(cfg, s_max=shape["seq_len"])
+        fn = jax.jit(step, in_shardings=(p_shard, b_shard))
+        lowered = fn.lower(params_abs, batch_abs)
+        return lowered, {"mode": mode}
+
+    # decode: one token against an S-long cache
+    B, S = shape["global_batch"], shape["seq_len"]
+    cache_abs = jax.eval_shape(lambda: tf.init_cache(cfg, B, S))
+    c_shard = shd.cache_sharding(cache_abs, mesh)
+    step = make_decode_step(cfg)
+    fn = jax.jit(
+        step,
+        in_shardings=(p_shard, c_shard, b_shard["tokens"]),
+        donate_argnums=(1,) if donate else (),
+    )
+    lowered = fn.lower(params_abs, cache_abs, batch_abs["tokens"])
+    return lowered, {"mode": mode}

@@ -1,0 +1,110 @@
+"""TorR HDC reranker as an LM serving layer (DESIGN.md §Arch-applicability).
+
+Attaches the paper's associative aligner + graph reasoner to a decoder's
+serve step: the pre-unembed hidden state is sign-projected to a query
+hypervector, scored against a concept item memory, task-weighted
+(s_hat = s * w), and folded into the logits as a bias. The query cache works
+across *decode steps of the same sequence*: when consecutive hidden states
+are similar (rho >= tau), cached concept scores are reused — the paper's
+bypass path, measured by the returned telemetry.
+
+For small vocabularies (MusicGen's 2048-entry codebooks) concepts map 1:1
+to tokens; for large vocabularies an [M, V]-sparse concept->token map
+projects concept scores onto the vocabulary.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hdc
+from ..core.item_memory import ItemMemory, random_item_memory
+from ..core.types import TorrConfig
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RerankerParams:
+    R: jax.Array          # [D, d_model] projection
+    task_w: jax.Array     # [M] reasoner weights for the active task
+    concept_map: jax.Array | None   # [M, V] or None (identity, M == V)
+    alpha: jax.Array      # [] logit-bias scale
+
+    def tree_flatten(self):
+        return ((self.R, self.task_w, self.concept_map, self.alpha), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RerankerState:
+    prev_q: jax.Array     # uint32 [B, D//32] previous step's query
+    prev_s: jax.Array     # f32 [B, M] cached task-weighted scores
+    valid: jax.Array      # bool [B]
+
+    def tree_flatten(self):
+        return ((self.prev_q, self.prev_s, self.valid), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def init_reranker(key: jax.Array, cfg: TorrConfig, d_model: int, vocab: int,
+                  alpha: float = 1.0) -> tuple[RerankerParams, ItemMemory]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    im = random_item_memory(k1, cfg)
+    R = jax.random.normal(k2, (cfg.D, d_model)) / jnp.sqrt(d_model)
+    # reasoner weights: g_P vs item memory (random task graph offline)
+    g = hdc.random_hv(k3, (cfg.D,))
+    task_w = jnp.einsum("d,md->m", g.astype(jnp.int32),
+                        im.bipolar.astype(jnp.int32)).astype(jnp.float32) / cfg.D
+    task_w = 1.0 + task_w  # multiplicative-style weighting around 1
+    concept_map = None
+    if vocab != cfg.M:
+        concept_map = (jax.random.normal(k4, (cfg.M, vocab)) *
+                       (jax.random.uniform(k4, (cfg.M, vocab)) < 0.02))
+    return RerankerParams(R, task_w, concept_map, jnp.float32(alpha)), im
+
+
+def init_state(cfg: TorrConfig, B: int) -> RerankerState:
+    return RerankerState(
+        prev_q=jnp.zeros((B, cfg.words), jnp.uint32),
+        prev_s=jnp.zeros((B, cfg.M), jnp.float32),
+        valid=jnp.zeros((B,), bool),
+    )
+
+
+def rerank_step(params: RerankerParams, state: RerankerState, im: ItemMemory,
+                hidden: jax.Array, logits: jax.Array, cfg: TorrConfig,
+                tau: float = 0.9):
+    """One decode step. hidden: [B, d_model]; logits: [B, V].
+
+    Returns (logits', state', telemetry{rho, bypassed}).
+    """
+    q = hdc.sign_project(hidden.astype(jnp.float32), params.R)
+    qp = hdc.pack_bits(q)                                   # [B, W]
+    ham = jnp.sum(jax.lax.population_count(
+        jnp.bitwise_xor(qp, state.prev_q)).astype(jnp.int32), axis=-1)
+    rho = jnp.where(state.valid, 1.0 - 2.0 * ham / cfg.D, -1.0)
+    bypass = rho >= tau                                     # [B]
+
+    # full path: XNOR-popcount scores vs item memory (Eq. 4) + reasoner
+    dots = cfg.D - 2 * jnp.sum(jax.lax.population_count(
+        jnp.bitwise_xor(qp[:, None, :], im.packed[None, :, :])
+    ).astype(jnp.int32), axis=-1)                           # [B, M]
+    s_full = dots.astype(jnp.float32) / cfg.D * params.task_w[None, :]
+    s = jnp.where(bypass[:, None], state.prev_s, s_full)
+
+    bias = s if params.concept_map is None else s @ params.concept_map
+    logits = logits + params.alpha * bias
+    new_state = RerankerState(prev_q=qp, prev_s=s,
+                              valid=jnp.ones_like(state.valid))
+    return logits, new_state, {"rho": rho, "bypassed": bypass}

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# keep tests on 1 CPU device; multi-device tests spawn subprocesses
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,103 @@
+"""Beyond-paper features: MXU aligner, online reasoner weights, int8 serving,
+EP MoE equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aligner, hdc, reasoner
+from repro.core.item_memory import dim_mask, random_item_memory, word_mask
+from repro.core.types import TorrConfig
+
+CFG = TorrConfig(D=2048, B=8, M=64, n_relations=8)
+
+
+def test_mxu_aligner_matches_popcount():
+    im = random_item_memory(jax.random.PRNGKey(0), CFG)
+    q = hdc.random_hv(jax.random.PRNGKey(1), (4, CFG.D))
+    qp = hdc.pack_bits(q)
+    for banks in (2, 8):
+        wm = word_mask(CFG, banks)
+        dm = dim_mask(CFG, banks)
+        pop = jnp.stack([aligner.full_dot(qp[i], im, wm) for i in range(4)])
+        mxu = aligner.full_dot_mxu(q, im, dm)
+        np.testing.assert_array_equal(np.asarray(pop), np.asarray(mxu))
+
+
+def test_online_weights_match_precomputed():
+    g = reasoner.init_task_graph(jax.random.PRNGKey(2), CFG, n_tasks=3)
+    im = random_item_memory(jax.random.PRNGKey(3), CFG)
+    paths = jnp.array([[1, -1, -1], [0, 2, -1], [3, 4, 5]])
+    pre = reasoner.precompute_weights(g, im, CFG, paths)
+    for t in range(3):
+        online = reasoner.online_weights(g, im, CFG, jnp.int32(t), paths[t],
+                                         CFG.B)
+        np.testing.assert_allclose(np.asarray(online), np.asarray(pre[t]),
+                                   atol=1e-6)
+
+
+def test_int8_serving_decode_close_to_bf16():
+    from repro.configs import get_smoke
+    from repro.models import transformer as tf
+    cfg0 = dataclasses.replace(get_smoke("qwen3-14b"), remat_policy="full")
+    cfgq = dataclasses.replace(cfg0, serve_quant="int8")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg0)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg0.vocab, (2, 10)), jnp.int32)
+    cb = tf.init_cache(cfg0, 2, 16)
+    cq = tf.init_cache(cfgq, 2, 16)
+    for t in range(10):
+        cb, lb = tf.decode_step(params, cb, toks[:, t], cfg0)
+        cq, lq = tf.decode_step(params, cq, toks[:, t], cfgq)
+    err = float(jnp.max(jnp.abs(jax.nn.softmax(lb) - jax.nn.softmax(lq))))
+    assert err < 0.05, err
+
+
+def test_quant_cache_structure():
+    from repro.configs import get_smoke
+    from repro.models import transformer as tf
+    cfg = dataclasses.replace(get_smoke("deepseek-v3-671b"),
+                              serve_quant="int8")
+    cache = tf.init_cache(cfg, 2, 32)
+    assert cache["ckv"]["q"].dtype == jnp.int8
+    assert cache["ckv"]["s"].dtype == jnp.float32
+    assert cache["ckv_prefix"]["q"].dtype == jnp.int8
+
+
+def test_ep_moe_equivalence_subprocess():
+    import os
+    import subprocess
+    import sys
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = ModelConfig(name="t", family="moe", d_model=32, n_experts=8,
+                  moe_top_k=2, moe_d_ff=16, n_shared_experts=1,
+                  capacity_factor=8.0)
+p = moe_mod.init_moe_params(jax.random.PRNGKey(3), cfg, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(4), (4, 8, 32))
+y0, _ = moe_mod.moe_ffn(p, x, cfg)
+xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
+def spec(k):
+    if k.startswith("w_"): return P("model", None, None)
+    if k in ("shared_gate", "shared_up"): return P(None, "model")
+    if k == "shared_down": return P("model", None)
+    return P()
+ps = jax.device_put(p, {k: NamedSharding(mesh, spec(k)) for k in p})
+y1, _ = jax.jit(lambda p, x: moe_mod.moe_ffn_ep(p, x, cfg, mesh))(ps, xs)
+np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-4)
+print("EP_EQ_OK")
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "EP_EQ_OK" in out.stdout

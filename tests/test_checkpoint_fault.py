@@ -1,0 +1,105 @@
+"""Checkpointing + fault tolerance + straggler watchdog."""
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.fault import (StragglerWatchdog, SupervisorConfig,
+                                 TrainSupervisor)
+
+
+def test_roundtrip_and_keep_last():
+    d = tempfile.mkdtemp()
+    try:
+        cm = CheckpointManager(d, keep_last=2)
+        tree = {"a": jnp.arange(12.0).reshape(3, 4),
+                "b": {"c": jnp.ones((5,), jnp.int32)}}
+        for s in (10, 20, 30):
+            cm.save(s, tree)
+        assert cm.all_steps() == [20, 30]
+        restored, step = cm.restore(tree)
+        assert step == 30
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+        assert restored["b"]["c"].dtype == jnp.int32
+    finally:
+        shutil.rmtree(d)
+
+
+def test_resave_same_step_is_idempotent():
+    d = tempfile.mkdtemp()
+    try:
+        cm = CheckpointManager(d, keep_last=3)
+        cm.save(5, {"x": jnp.zeros(3)})
+        cm.save(5, {"x": jnp.ones(3)})
+        restored, _ = cm.restore({"x": jnp.zeros(3)})
+        np.testing.assert_array_equal(np.asarray(restored["x"]), np.ones(3))
+    finally:
+        shutil.rmtree(d)
+
+
+def test_supervisor_resumes_identically():
+    def mk_stream(start):
+        def gen():
+            i = start
+            while True:
+                yield jnp.float32(i)
+                i += 1
+        return gen()
+
+    def step_fn(state, batch):
+        return {"w": state["w"] + batch * batch, "n": state["n"] + 1}
+
+    def run(fault_at):
+        d = tempfile.mkdtemp()
+        try:
+            sup = TrainSupervisor(step_fn, CheckpointManager(d, keep_last=3),
+                                  SupervisorConfig(ckpt_every=7))
+            st, step = sup.run({"w": jnp.float32(0), "n": jnp.int32(0)},
+                               mk_stream, 40, fault_at=fault_at)
+            return float(st["w"]), int(st["n"]), sup.restarts
+        finally:
+            shutil.rmtree(d)
+
+    w0, n0, r0 = run(None)
+    w1, n1, r1 = run(23)
+    assert (w0, n0) == (w1, n1)
+    assert (r0, r1) == (0, 1)
+
+
+def test_supervisor_survives_repeated_faults():
+    def mk_stream(start):
+        def gen():
+            i = start
+            while True:
+                yield jnp.float32(1.0)
+                i += 1
+        return gen()
+
+    def step_fn(state, batch):
+        return {"w": state["w"] + batch}
+
+    d = tempfile.mkdtemp()
+    try:
+        sup = TrainSupervisor(step_fn, CheckpointManager(d),
+                              SupervisorConfig(ckpt_every=5, max_restarts=5))
+        st, step = sup.run({"w": jnp.float32(0)}, mk_stream, 30, fault_at=12)
+        # resume + run to completion despite mid-run failure
+        assert step == 30 and float(st["w"]) == 30.0
+    finally:
+        shutil.rmtree(d)
+
+
+def test_straggler_watchdog():
+    cfg = SupervisorConfig(straggler_factor=3.0, max_consecutive_stragglers=2)
+    wd = StragglerWatchdog(cfg)
+    for i in range(8):
+        assert wd.observe(i, 0.1) == "ok"
+    assert wd.observe(8, 0.5) == "straggler"
+    assert wd.observe(9, 0.5) == "evict"      # second consecutive
+    assert len(wd.events) == 2
+    assert wd.observe(10, 0.1) == "ok"        # recovers

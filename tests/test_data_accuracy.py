@@ -1,0 +1,67 @@
+"""Data pipelines + AP machinery + TOOD claims (fast subset)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.data import tood_synth as ts
+from repro.data.tokens import TokenStream
+
+
+def test_token_stream_deterministic_skip_ahead():
+    cfg = get_smoke("deepseek-7b")
+    s1 = TokenStream(cfg, 2, 16, seed=3)
+    s2 = TokenStream(cfg, 2, 16, seed=3)
+    b_direct = s1.batch_at(41)
+    it = s2.stream(start_step=41)
+    b_stream = next(it)
+    np.testing.assert_array_equal(b_direct["tokens"], b_stream["tokens"])
+
+
+def test_token_stream_has_bigram_structure():
+    cfg = get_smoke("deepseek-7b")
+    s = TokenStream(cfg, 4, 256, seed=0)
+    b = s.batch_at(0)
+    toks = b["tokens"]
+    hits = np.mean(toks[:, 1:] == s.successor[toks[:, :-1]])
+    assert hits > 0.3, "successor structure missing -> nothing to learn"
+
+
+def test_iou_matrix():
+    a = np.array([[0, 0, 1, 1]], np.float32)
+    b = np.array([[0, 0, 1, 1], [0.5, 0.5, 1.5, 1.5], [2, 2, 3, 3]], np.float32)
+    iou = ts.iou_matrix(a, b)
+    np.testing.assert_allclose(iou[0], [1.0, 0.25 / 1.75, 0.0], atol=1e-6)
+
+
+def test_ap_perfect_and_empty():
+    gt = [np.array([[0, 0, 1, 1], [2, 2, 3, 3]], np.float32)]
+    boxes = [np.array([[0, 0, 1, 1], [2, 2, 3, 3]], np.float32)]
+    scores = [np.array([0.9, 0.8])]
+    assert ts.average_precision(scores, boxes, gt) == pytest.approx(1.0)
+    # all misses
+    boxes_bad = [np.array([[5, 5, 6, 6], [7, 7, 8, 8]], np.float32)]
+    assert ts.average_precision(scores, boxes_bad, gt) == 0.0
+
+
+def test_ap_penalizes_false_positives():
+    gt = [np.array([[0, 0, 1, 1]], np.float32)]
+    boxes = [np.array([[0, 0, 1, 1], [5, 5, 6, 6]], np.float32)]
+    ap_fp_high = ts.average_precision([np.array([0.2, 0.9])], boxes, gt)
+    ap_fp_low = ts.average_precision([np.array([0.9, 0.2])], boxes, gt)
+    assert ap_fp_low > ap_fp_high
+
+
+def test_sequences_are_temporally_coherent():
+    world = ts.make_world(0)
+    frames = ts.simulate_sequence(world, 3, 10, seed=0)  # have breakfast
+    # consecutive frames share most object classes
+    same = [np.mean(frames[i].classes[:7] == frames[i + 1].classes[:7])
+            for i in range(9)]
+    assert np.mean(same) > 0.7
+
+
+def test_every_task_has_ground_truth():
+    world = ts.make_world(0)
+    for t in range(5):
+        frames = ts.simulate_sequence(world, t, 12, seed=0)
+        assert sum(len(f.gt_boxes) for f in frames) > 0, ts.TASKS[t]

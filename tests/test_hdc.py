@@ -1,0 +1,73 @@
+"""HDC primitive identities (unit + property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hdc
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([32, 64, 256, 1024]))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_roundtrip(seed, D):
+    hv = hdc.random_hv(jax.random.PRNGKey(seed), (3, D))
+    assert (hdc.unpack_bits(hdc.pack_bits(hv), D) == hv).all()
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([32, 128, 512]))
+@settings(max_examples=20, deadline=None)
+def test_packed_dot_identity(seed, D):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = hdc.random_hv(k1, (D,))
+    b = hdc.random_hv(k2, (D,))
+    assert int(hdc.dot_packed(hdc.pack_bits(a), hdc.pack_bits(b))) == \
+        int(hdc.dot_bipolar(a, b))
+    np.testing.assert_allclose(
+        float(hdc.cosine_packed(hdc.pack_bits(a), hdc.pack_bits(b))),
+        float(hdc.cosine_bipolar(a, b)), rtol=1e-6)
+
+
+def test_bind_self_inverse():
+    a = hdc.random_hv(jax.random.PRNGKey(0), (256,))
+    b = hdc.random_hv(jax.random.PRNGKey(1), (256,))
+    assert (hdc.bind(hdc.bind(a, b), b) == a).all()
+
+
+def test_bind_associative_commutative():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    a, b, c = (hdc.random_hv(k, (128,)) for k in ks)
+    assert (hdc.bind(hdc.bind(a, b), c) == hdc.bind(a, hdc.bind(b, c))).all()
+    assert (hdc.bind(a, b) == hdc.bind(b, a)).all()
+
+
+def test_bundle_majority_preserves_similarity():
+    D = 4096
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    hvs = jnp.stack([hdc.random_hv(k, (D,)) for k in ks])
+    bundled = hdc.bundle(hvs)
+    for i in range(3):
+        cos = float(hdc.cosine_bipolar(bundled, hvs[i]))
+        assert cos > 0.3, cos  # each component stays recoverable
+    other = hdc.random_hv(jax.random.PRNGKey(9), (D,))
+    assert abs(float(hdc.cosine_bipolar(bundled, other))) < 0.1
+
+
+def test_rho_identity_eq5():
+    """rho = 1 - 2|Delta|/D (paper Eq. 5)."""
+    D = 1024
+    a = hdc.random_hv(jax.random.PRNGKey(4), (D,))
+    flips = jnp.arange(0, D, 64)
+    b = a.at[flips].multiply(-1)
+    rho = float(hdc.cosine_bipolar(a, b))
+    assert abs(rho - (1 - 2 * len(flips) / D)) < 1e-6
+    ham = int(hdc.hamming_packed(hdc.pack_bits(a), hdc.pack_bits(b)))
+    assert ham == len(flips)
+
+
+def test_sign_project_bipolar():
+    z = jax.random.normal(jax.random.PRNGKey(5), (4, 64))
+    R = jax.random.normal(jax.random.PRNGKey(6), (512, 64))
+    q = hdc.sign_project(z, R)
+    assert q.dtype == jnp.int8
+    assert set(np.unique(np.asarray(q))) <= {-1, 1}

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hdc
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("D,M,N", [(1024, 8, 1), (4096, 128, 8),
+                                   (8192, 64, 4), (2048, 256, 2)])
+def test_packed_similarity_shapes(D, M, N):
+    hv = hdc.random_hv(jax.random.PRNGKey(0), (M, D))
+    q = hdc.random_hv(jax.random.PRNGKey(1), (N, D))
+    imp, qp = hdc.pack_bits(hv), hdc.pack_bits(q)
+    B = 8
+    bw = D // B // 32
+    for banks in (1, 3, B):
+        if (banks * bw) % 128 and banks != B:
+            continue
+        acc, cos = ops.packed_similarity(qp, imp, banks=banks, bank_words=bw)
+        d_eff = banks * bw * 32
+        want = jnp.einsum("nd,md->nm", q[:, :d_eff].astype(jnp.int32),
+                          hv[:, :d_eff].astype(jnp.int32))
+        assert (acc == want).all(), (D, M, N, banks)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 128, 384]),
+       st.sampled_from([8, 64, 96]))
+@settings(max_examples=10, deadline=None)
+def test_delta_update_property(seed, M, budget):
+    D = 2048
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    hv = hdc.random_hv(ks[0], (M, D))
+    dmaj = jnp.transpose(hv)
+    acc = jax.random.randint(ks[1], (M,), -1000, 1000, jnp.int32)
+    idx = jax.random.randint(ks[2], (budget,), 0, D, jnp.int32)
+    w = jnp.where(jax.random.bernoulli(ks[3], 0.5, (budget,)), 2, -2)
+    w = w.astype(jnp.int32).at[budget // 2:].set(0)  # padding
+    out = ops.delta_update(acc, dmaj, idx, w)
+    want = ref.delta_update_ref(acc, dmaj, idx, w)
+    assert (out == want).all()
+
+
+@pytest.mark.parametrize("N,d,D", [(8, 64, 512), (16, 512, 4096),
+                                   (8, 100, 1024)])
+def test_sign_project_shapes(N, d, D):
+    z = jax.random.normal(jax.random.PRNGKey(0), (N, d))
+    R = jax.random.normal(jax.random.PRNGKey(1), (D, d))
+    assert (ops.sign_project(z, R) == ref.sign_project_ref(z, R)).all()
+
+
+def test_fallback_on_ragged_shapes():
+    """Off-tile shapes must transparently use the oracle."""
+    z = jax.random.normal(jax.random.PRNGKey(0), (3, 33))   # N=3 not /8
+    R = jax.random.normal(jax.random.PRNGKey(1), (100, 33))  # D=100 not /128
+    assert (ops.sign_project(z, R) == ref.sign_project_ref(z, R)).all()
+
+    hv = hdc.random_hv(jax.random.PRNGKey(2), (7, 64))       # M=7 not /8
+    q = hdc.random_hv(jax.random.PRNGKey(3), (2, 64))
+    acc, _ = ops.packed_similarity(hdc.pack_bits(q), hdc.pack_bits(hv),
+                                   banks=1, bank_words=2)
+    want = jnp.einsum("nd,md->nm", q.astype(jnp.int32), hv.astype(jnp.int32))
+    assert (acc == want).all()
+
+
+def test_delta_equals_full_rescan():
+    """Integration: accumulator + delta corrections == fresh full scan."""
+    D, M, budget = 2048, 64, 256
+    hv = hdc.random_hv(jax.random.PRNGKey(0), (M, D))
+    q0 = hdc.random_hv(jax.random.PRNGKey(1), (D,))
+    flips = jax.random.choice(jax.random.PRNGKey(2), D, (100,), replace=False)
+    q1 = q0.at[flips].multiply(-1)
+
+    acc0, _ = ops.packed_similarity(hdc.pack_bits(q0)[None], hdc.pack_bits(hv),
+                                    banks=8, bank_words=D // 8 // 32)
+    from repro.core import aligner
+    from repro.core.item_memory import build_item_memory, word_mask
+    from repro.core.types import TorrConfig
+    cfg = TorrConfig(D=D, B=8, M=M, delta_budget=budget)
+    im = build_item_memory(hv)
+    idx, w, cnt = aligner.delta_indices(
+        hdc.pack_bits(q1), hdc.pack_bits(q0), word_mask(cfg, 8), budget, D)
+    assert int(cnt) == 100
+    acc1 = ops.delta_update(acc0[0], im.dmajor, idx, w)
+    want, _ = ops.packed_similarity(hdc.pack_bits(q1)[None], hdc.pack_bits(hv),
+                                    banks=8, bank_words=D // 8 // 32)
+    assert (acc1 == want[0]).all()

@@ -1,0 +1,118 @@
+"""Cycle model + HLO analyzer + roofline invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import PATH_BYPASS, PATH_DELTA, PATH_FULL, TorrConfig
+from repro.perf import hlo_analyze, roofline
+from repro.perf.cycle_model import (AREA, POWER_W, TASK_PROFILES,
+                                    simulate_all, simulate_task, window_cost)
+
+
+def test_table1_totals():
+    logic = [k for k in AREA if "memory" not in k and "caches" not in k]
+    assert abs(sum(AREA[k] for k in logic) - 5.937) < 0.005
+    assert abs(sum(POWER_W[k] for k in logic) * 1e3 - 4659.84) < 0.5
+
+
+def test_delta_cheaper_than_full_bypass_cheapest():
+    cfg = TorrConfig(D=8192, B=8, M=1024, W=64, N_max=16, delta_budget=1024)
+    n = 8
+    budget = 1 / 60
+    full = window_cost(np.full(n, PATH_FULL), np.zeros(n, int), 8,
+                       np.ones(n, bool), n, cfg, budget)
+    delta = window_cost(np.full(n, PATH_DELTA), np.full(n, 512), 8,
+                        np.ones(n, bool), n, cfg, budget)
+    byp = window_cost(np.full(n, PATH_BYPASS), np.zeros(n, int), 8,
+                      np.zeros(n, bool), n, cfg, budget)
+    assert byp.total_cycles < delta.total_cycles < full.total_cycles
+    assert byp.power_w < delta.power_w < full.power_w
+
+
+def test_bank_gating_reduces_cost():
+    cfg = TorrConfig(D=8192, B=8, M=1024, W=64, N_max=16)
+    n = 8
+    budget = 1 / 60
+    c8 = window_cost(np.full(n, PATH_FULL), np.zeros(n, int), 8,
+                     np.ones(n, bool), n, cfg, budget)
+    c2 = window_cost(np.full(n, PATH_FULL), np.zeros(n, int), 2,
+                     np.ones(n, bool), n, cfg, budget)
+    assert c2.total_cycles < c8.total_cycles
+    assert c2.power_w < c8.power_w
+
+
+def test_rt_budget_compliance_all_tasks():
+    for rt, fps in (("RT-60", 60), ("RT-30", 30)):
+        for r in simulate_all(rt, n_frames=150):
+            assert r["p95_ms"] < 1000.0 / fps, (rt, r["task"])
+
+
+def test_coherent_tasks_are_cheaper():
+    fast = simulate_task("have breakfast", "RT-60", 200)
+    slow = simulate_task("sports", "RT-60", 200)
+    assert fast["median_ms"] < slow["median_ms"]
+    assert fast["energy_mj"] <= slow["energy_mj"]
+
+
+# --- HLO analyzer -----------------------------------------------------------
+
+def test_analyzer_trip_count_scaling():
+    def f_scan(w, x):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    w = jnp.zeros((8, 64, 64))
+    x = jnp.zeros((4, 64))
+    c = jax.jit(f_scan).lower(w, x).compile()
+    a = hlo_analyze.analyze_text(c.as_text())
+    assert a.flops == pytest.approx(8 * 2 * 4 * 64 * 64, rel=0.01)
+
+
+def test_analyzer_counts_unrolled_identically():
+    def f_unroll(w, x):
+        h = x
+        for i in range(8):
+            h = jnp.tanh(h @ w[i])
+        return h.sum()
+
+    w = jnp.zeros((8, 64, 64))
+    x = jnp.zeros((4, 64))
+    c = jax.jit(f_unroll).lower(w, x).compile()
+    a = hlo_analyze.analyze_text(c.as_text())
+    assert a.flops == pytest.approx(8 * 2 * 4 * 64 * 64, rel=0.01)
+
+
+def test_shape_bytes_parsing():
+    assert hlo_analyze._shape_elems_bytes("bf16[8,128]{1,0}") == (1024, 2048)
+    assert hlo_analyze._shape_elems_bytes("(f32[4], s8[8])") == (12, 24)
+    assert hlo_analyze._shape_elems_bytes("pred[]") == (1, 1)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = roofline.Roofline(
+        arch="a", shape="s", mesh="m", chips=256,
+        flops_global=197e12 * 256,          # exactly 1s of compute
+        bytes_global=819e9 * 256 * 2,       # 2s of memory
+        coll_bytes_global=50e9 * 256 * 0.5, # 0.5s of collectives
+        coll_breakdown={}, model_flops=197e12 * 256 * 0.5,
+        memory_per_device={})
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.roofline_frac == pytest.approx(0.25)   # 0.5s ideal / 2s bound
+
+
+def test_model_flops_modes():
+    from repro.configs import get
+    cfg = get("deepseek-7b")
+    n = cfg.param_count()
+    train = roofline.model_flops_for(cfg, dict(mode="train", seq_len=128,
+                                               global_batch=4))
+    dec = roofline.model_flops_for(cfg, dict(mode="decode", seq_len=128,
+                                             global_batch=4))
+    assert train == pytest.approx(6 * n * 512)
+    assert dec == pytest.approx(2 * n * 4)

@@ -1,0 +1,115 @@
+"""TorR window-step behaviour: the paper's Alg. 1 + Fig. 4 semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aligner, hdc, pipeline, policy
+from repro.core.item_memory import random_item_memory, word_mask
+from repro.core.types import (PATH_BYPASS, PATH_DELTA, PATH_FULL, TorrConfig)
+
+CFG = TorrConfig(D=2048, B=8, M=32, K=6, N_max=4, delta_budget=512,
+                 feat_dim=64)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    im = random_item_memory(jax.random.PRNGKey(0), CFG)
+    task_w = jnp.ones((CFG.M,), jnp.float32)
+    step = jax.jit(pipeline.torr_window_step, static_argnames="cfg")
+    qs = hdc.random_hv(jax.random.PRNGKey(1), (CFG.N_max, CFG.D))
+    return im, task_w, step, qs
+
+
+def _run(step, state, im, q_bip, queue=0, valid=None):
+    valid = jnp.ones((CFG.N_max,), bool) if valid is None else valid
+    return step(state, im, hdc.pack_bits(q_bip), valid,
+                jnp.zeros((CFG.N_max, 4)), jnp.int32(queue), CFG)
+
+
+def test_cold_cache_full_then_delta_then_bypass(setup):
+    im, task_w, step, qs = setup
+    state = pipeline.init_state(CFG, task_w)
+    state, out, tel = _run(step, state, im, qs)
+    assert (np.asarray(tel.path) == PATH_FULL).all()
+    # tiny drift -> delta
+    qs2 = qs.at[:, ::97].multiply(-1)
+    state, out2, tel2 = _run(step, state, im, qs2)
+    assert (np.asarray(tel2.path) == PATH_DELTA).all()
+    # high load + high similarity -> bypass
+    state, out3, tel3 = _run(step, state, im, qs2, queue=CFG.q_hi)
+    assert (np.asarray(tel3.path) == PATH_BYPASS).all()
+    # bypass reuses cached outputs exactly
+    np.testing.assert_array_equal(np.asarray(out3.scores),
+                                  np.asarray(out2.scores))
+
+
+def test_scene_cut_forces_full(setup):
+    im, task_w, step, qs = setup
+    state = pipeline.init_state(CFG, task_w)
+    state, _, _ = _run(step, state, im, qs)
+    fresh = hdc.random_hv(jax.random.PRNGKey(99), (CFG.N_max, CFG.D))
+    _, _, tel = _run(step, state, im, fresh)
+    assert (np.asarray(tel.path) == PATH_FULL).all()
+
+
+def test_delta_path_is_exact(setup):
+    """Scores after a delta window == scores of a from-scratch full scan."""
+    im, task_w, step, qs = setup
+    state = pipeline.init_state(CFG, task_w)
+    state, _, _ = _run(step, state, im, qs)
+    qs2 = qs.at[:, 5::61].multiply(-1)
+    state, out, tel = _run(step, state, im, qs2)
+    assert (np.asarray(tel.path) == PATH_DELTA).all()
+    # fresh pipeline, same queries -> full path reference
+    state_ref = pipeline.init_state(CFG, task_w)
+    _, out_ref, tel_ref = _run(step, state_ref, im, qs2)
+    assert (np.asarray(tel_ref.path) == PATH_FULL).all()
+    np.testing.assert_allclose(np.asarray(out.scores),
+                               np.asarray(out_ref.scores), atol=1e-5)
+
+
+def test_padding_proposals_cost_nothing(setup):
+    im, task_w, step, qs = setup
+    state = pipeline.init_state(CFG, task_w)
+    valid = jnp.array([True, True, False, False])
+    _, out, tel = _run(step, state, im, qs, valid=valid)
+    assert int(tel.n_valid) == 2
+    assert (np.asarray(out.scores[2:]) == 0).all()
+    assert (np.asarray(tel.delta_count[2:]) == 0).all()
+
+
+def test_delta_budget_overflow_escalates_to_full(setup):
+    im, task_w, step, qs = setup
+    state = pipeline.init_state(CFG, task_w)
+    state, _, _ = _run(step, state, im, qs)
+    # flip more than delta_budget dims but keep rho above tau_q
+    n_flip = CFG.delta_budget + 64          # 576 of 2048 -> rho = 0.4375...
+    qs2 = qs.at[:, :n_flip].multiply(-1)
+    rho = 1 - 2 * n_flip / CFG.D
+    _, _, tel = _run(step, state, im, qs2)
+    if rho >= CFG.tau_q:
+        assert (np.asarray(tel.path) == PATH_FULL).all(), \
+            "over-budget delta must escalate to full"
+
+
+def test_policy_truth_table():
+    cfg = CFG
+    hi = jnp.array(True)
+    lo = jnp.array(False)
+    ok = jnp.array(True)
+    # bypass requires BOTH rho>=tau_byp and high load
+    assert int(policy.select_path(jnp.float32(0.99), jnp.int32(10), ok, hi, cfg)) == PATH_BYPASS
+    assert int(policy.select_path(jnp.float32(0.99), jnp.int32(10), ok, lo, cfg)) == PATH_DELTA
+    assert int(policy.select_path(jnp.float32(0.7), jnp.int32(10), ok, hi, cfg)) == PATH_DELTA
+    assert int(policy.select_path(jnp.float32(0.1), jnp.int32(10), ok, hi, cfg)) == PATH_FULL
+    # tag mismatch (D' changed) disables delta
+    assert int(policy.select_path(jnp.float32(0.7), jnp.int32(10),
+                                  jnp.array(False), lo, cfg)) == PATH_FULL
+
+
+def test_bank_selection_monotone():
+    cfg = CFG
+    b_low = int(policy.select_banks(jnp.int32(1), jnp.int32(0), cfg))
+    b_hi = int(policy.select_banks(jnp.int32(cfg.N_max), jnp.int32(8), cfg))
+    assert 1 <= b_hi <= b_low <= cfg.B

@@ -1,0 +1,58 @@
+"""TorR HDC reranker as an LM serving layer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import TorrConfig
+from repro.serving import reranker as rr
+
+CFG = TorrConfig(D=1024, B=8, M=64, K=8, N_max=4, feat_dim=32)
+
+
+def test_bias_applied_and_state_updates():
+    params, im = rr.init_reranker(jax.random.PRNGKey(0), CFG, d_model=32,
+                                  vocab=100, alpha=1.0)
+    state = rr.init_state(CFG, B=3)
+    hidden = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    logits = jnp.zeros((3, 100))
+    out, state2, tel = rr.rerank_step(params, state, im, hidden, logits, CFG)
+    assert out.shape == (3, 100)
+    assert float(jnp.max(jnp.abs(out))) > 0          # bias applied
+    assert bool(jnp.all(state2.valid))
+    assert not bool(jnp.any(tel["bypassed"]))         # cold state: no bypass
+
+
+def test_identical_hidden_bypasses_and_reuses_scores():
+    params, im = rr.init_reranker(jax.random.PRNGKey(0), CFG, d_model=32,
+                                  vocab=CFG.M, alpha=1.0)  # identity map
+    state = rr.init_state(CFG, B=2)
+    hidden = jax.random.normal(jax.random.PRNGKey(1), (2, 32))
+    logits = jnp.zeros((2, CFG.M))
+    out1, state, tel1 = rr.rerank_step(params, state, im, hidden, logits, CFG)
+    out2, state, tel2 = rr.rerank_step(params, state, im, hidden, logits, CFG)
+    assert bool(jnp.all(tel2["bypassed"]))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+    assert float(jnp.min(tel2["rho"])) == 1.0
+
+
+def test_divergent_hidden_recomputes():
+    params, im = rr.init_reranker(jax.random.PRNGKey(0), CFG, d_model=32,
+                                  vocab=CFG.M, alpha=1.0)
+    state = rr.init_state(CFG, B=2)
+    h1 = jax.random.normal(jax.random.PRNGKey(1), (2, 32))
+    h2 = jax.random.normal(jax.random.PRNGKey(2), (2, 32))
+    logits = jnp.zeros((2, CFG.M))
+    _, state, _ = rr.rerank_step(params, state, im, h1, logits, CFG)
+    _, state, tel = rr.rerank_step(params, state, im, h2, logits, CFG)
+    assert not bool(jnp.any(tel["bypassed"]))
+
+
+def test_concept_map_projects_to_vocab():
+    params, im = rr.init_reranker(jax.random.PRNGKey(0), CFG, d_model=32,
+                                  vocab=5000, alpha=0.5)
+    assert params.concept_map.shape == (CFG.M, 5000)
+    state = rr.init_state(CFG, B=1)
+    hidden = jax.random.normal(jax.random.PRNGKey(1), (1, 32))
+    out, _, _ = rr.rerank_step(params, state, im, hidden,
+                               jnp.zeros((1, 5000)), CFG)
+    assert out.shape == (1, 5000)

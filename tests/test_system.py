@@ -1,0 +1,98 @@
+"""End-to-end behaviour tests: the paper's system claims, executed."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import TorrConfig
+from repro.data import tood_synth as ts
+from repro.perf.cycle_model import window_cost
+from repro.serving.tood_pipelines import build_system, evaluate_task, run_torr
+
+
+@pytest.fixture(scope="module")
+def world_and_system():
+    world = ts.make_world(0, M=32, d=128, n_tasks=5)
+    cfg = TorrConfig(D=2048, B=8, M=32, K=24, N_max=16, delta_budget=512,
+                     feat_dim=128)
+    return world, build_system(world, cfg)
+
+
+def test_reuse_is_accuracy_neutral(world_and_system):
+    """TorR with caching ~= naive HDC without (the paper's core claim)."""
+    world, sys_ = world_and_system
+    r = evaluate_task(world, sys_, 3, n_frames=30, difficulty=0.8)
+    assert abs(r["ap_torr"] - r["ap_naive_hdc"]) < 8.0
+    reuse = r["path_mix"]["bypass"] + r["path_mix"]["delta"]
+    assert reuse > 0.2, f"no reuse achieved: {r['path_mix']}"
+
+
+def test_bounded_margin_to_dense(world_and_system):
+    world, sys_ = world_and_system
+    aps = [evaluate_task(world, sys_, t, n_frames=25, difficulty=0.8)
+           for t in range(5)]
+    dense = np.mean([a["ap_dense"] for a in aps])
+    torr = np.mean([a["ap_torr"] for a in aps])
+    assert torr > 0.5 * dense, (torr, dense)
+
+
+def test_coherent_scenes_reuse_more(world_and_system):
+    world, sys_ = world_and_system
+    calm = evaluate_task(world, sys_, 3, n_frames=30, difficulty=0.8)   # breakfast
+    busy = evaluate_task(world, sys_, 1, n_frames=30, difficulty=0.8)   # sports
+    calm_reuse = calm["path_mix"]["bypass"] + calm["path_mix"]["delta"]
+    busy_reuse = busy["path_mix"]["bypass"] + busy["path_mix"]["delta"]
+    assert calm_reuse > busy_reuse
+
+
+def test_reuse_cuts_modeled_traffic(world_and_system):
+    """Telemetry -> cycle model: reuse reduces cycles vs all-full."""
+    world, sys_ = world_and_system
+    cfg = sys_.cfg
+    frames = ts.simulate_sequence(world, 3, 25, seed=0, difficulty=0.8,
+                                  n_max=cfg.N_max)
+    _, telems = run_torr(sys_, frames, 3)
+    budget = 1 / 60
+    actual = sum(window_cost(t.path, t.delta_count, int(t.banks),
+                             t.reasoner_active, int(t.n_valid), cfg,
+                             budget).cycles["aligner"] for t in telems)
+    allfull = sum(window_cost(np.full(int(t.n_valid), 2),
+                              np.zeros(int(t.n_valid), int), int(t.banks),
+                              np.ones(int(t.n_valid), bool), int(t.n_valid),
+                              cfg, budget).cycles["aligner"] for t in telems)
+    # encoder/host overheads are path-independent; the aligner traffic is
+    # what reuse saves (paper Sec. 4.7)
+    assert actual < 0.6 * allfull, (actual, allfull)
+
+
+def test_training_loop_learns():
+    """The launcher's loop reduces loss on a tiny model (integration)."""
+    import subprocess
+    import sys
+    import os
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "gemma-7b",
+         "--smoke", "--steps", "40", "--batch", "8", "--seq", "64",
+         "--ckpt", "/tmp/test_sys_ck"],
+        env=dict(os.environ, PYTHONPATH="src"),
+        capture_output=True, text=True, timeout=1200,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "loss improved" in out.stdout
+
+
+def test_serving_loop_generates():
+    import subprocess
+    import sys
+    import os
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "musicgen-large", "--smoke", "--batch", "2", "--prompt-len", "16",
+         "--gen", "8"],
+        env=dict(os.environ, PYTHONPATH="src"),
+        capture_output=True, text=True, timeout=1200,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "generated shape (2, 8, 4)" in out.stdout
