@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     from . import (micro_aligner, roofline_summary, table1_hw,
                    table2_envelope, table3_runtime, table4_throughput,
-                   table5_accuracy, torr_reuse_ablation)
+                   table5_accuracy, table6_multistream, torr_reuse_ablation)
 
     suites = [
         ("table1", table1_hw.run),
@@ -22,6 +22,7 @@ def main() -> None:
         ("table3", table3_runtime.run),
         ("table4", table4_throughput.run),
         ("table5", table5_accuracy.run),
+        ("table6", table6_multistream.run),
         ("torr_ablation", torr_reuse_ablation.run),
         ("micro", micro_aligner.run),
         ("roofline", roofline_summary.run),

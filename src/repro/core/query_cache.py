@@ -60,6 +60,27 @@ def init_cache(cfg: TorrConfig) -> CacheState:
     )
 
 
+def init_cache_batch(cfg: TorrConfig, n_streams: int) -> CacheState:
+    """Stacked per-stream caches: every leaf gains a leading [S] axis.
+
+    The result is the cache component of a multi-stream ``TorrState``; each
+    stream slot owns an independent depth-K cache, so per-stream reuse
+    survives batching (a stream's cache travels with its slot).
+    """
+    one = init_cache(cfg)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.repeat(x[None], n_streams, axis=0), one
+    )
+
+
+def reset_slot(cache: CacheState, cfg: TorrConfig, slot: int) -> CacheState:
+    """Invalidate one stream slot of a stacked cache (stream admit/retire)."""
+    fresh = init_cache(cfg)
+    return jax.tree_util.tree_map(
+        lambda b, f: b.at[slot].set(f), cache, fresh
+    )
+
+
 def nearest(
     cache: CacheState, q_packed: jax.Array, cfg: TorrConfig, banks: jax.Array | int
 ) -> tuple[jax.Array, jax.Array, jax.Array]:

@@ -88,6 +88,39 @@ PATH_NAMES = ("bypass", "delta", "full")
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
+class StreamBatch:
+    """One batched multi-stream window step's inputs (S stream slots).
+
+    The leading axis is the stream-slot axis of the engine
+    (`repro.serving.stream_engine`): slot s carries stream s's next window.
+    Idle slots are padded with ``valid`` all-False and ``queue_depth`` 0 —
+    the pipeline's pad branch guarantees they leave that slot's cache
+    untouched. ``queue_depth`` is per-stream (each stream has its own
+    backlog), which is what lets Alg. 1's load gating stay per-stream
+    under batching.
+    """
+
+    q_packed: jax.Array     # uint32 [S, N_max, D//32] proposal query HVs
+    valid: jax.Array        # bool   [S, N_max]
+    boxes: jax.Array        # f32    [S, N_max, 4]
+    queue_depth: jax.Array  # int32  [S] per-stream backlog
+
+    @property
+    def n_streams(self) -> int:
+        return self.q_packed.shape[0]
+
+    def tree_flatten(self):
+        return ((self.q_packed, self.valid, self.boxes, self.queue_depth),
+                None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
 class WindowTelemetry:
     """Per-window execution trace (feeds the cycle-accurate model)."""
 

@@ -10,6 +10,7 @@ wrappers; ref.py = pure-jnp oracles):
 from . import ops, ref
 from .delta_update import delta_update
 from .sign_project import sign_project
-from .xnor_popcount_sim import packed_hamming
+from .xnor_popcount_sim import packed_hamming, packed_hamming_batched
 
-__all__ = ["ops", "ref", "delta_update", "sign_project", "packed_hamming"]
+__all__ = ["ops", "ref", "delta_update", "sign_project", "packed_hamming",
+           "packed_hamming_batched"]

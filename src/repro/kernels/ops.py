@@ -22,7 +22,33 @@ import jax.numpy as jnp
 from . import ref
 from .delta_update import delta_update as _delta_kernel
 from .sign_project import sign_project as _sign_kernel
-from .xnor_popcount_sim import packed_hamming as _ham_kernel
+from .xnor_popcount_sim import packed_hamming_batched as _ham_kernel
+
+
+def _tile(n: int, cap: int) -> int:
+    """Largest block size <= cap dividing n (halving from min(cap, n))."""
+    t = min(cap, n)
+    while n % t:
+        t //= 2
+    return t
+
+
+def _batched_hamming(
+    q: jax.Array,           # uint32 [N, W_eff]
+    h: jax.Array,           # uint32 [M, W_eff]
+    *,
+    interpret: bool,
+    use_kernel: bool,
+) -> jax.Array:
+    """Shared dispatch for every packed-hamming consumer (full-path scans
+    and cache-nearest lookups): the batched kernel when shapes tile, the
+    jnp oracle otherwise."""
+    M = h.shape[0]
+    words_eff = q.shape[1]
+    if use_kernel and words_eff % 128 == 0 and M % 8 == 0:
+        return _ham_kernel(q, h, tq=_tile(q.shape[0], 8), tm=_tile(M, 128),
+                           tw=128, interpret=interpret)
+    return ref.packed_hamming_ref(q, h)
 
 
 def packed_similarity(
@@ -36,22 +62,47 @@ def packed_similarity(
 ) -> tuple[jax.Array, jax.Array]:
     """Full-scan scores under D' = 32 * banks * bank_words enabled dims.
 
-    Returns (acc int32 [N, M], cosine f32 [N, M]).
+    Returns (acc int32 [N, M], cosine f32 [N, M]). N may be the flattened
+    proposal batch of many streams; the kernel processes a block of queries
+    per program, so each item-memory tile is read once per block.
     """
     words_eff = banks * bank_words
     d_eff = 32 * words_eff
     q = q_packed[:, :words_eff]
     h = im_packed[:, :words_eff]
-    M = im_packed.shape[0]
-    if use_kernel and words_eff % 128 == 0 and M % 8 == 0:
-        tm = M if M <= 128 else 128
-        while M % tm:
-            tm //= 2
-        ham = _ham_kernel(q, h, tm=tm, tw=128, interpret=interpret)
-    else:
-        ham = ref.packed_hamming_ref(q, h)
+    ham = _batched_hamming(q, h, interpret=interpret, use_kernel=use_kernel)
     acc = d_eff - 2 * ham
     return acc, acc.astype(jnp.float32) / d_eff
+
+
+def cache_nearest(
+    q_packed: jax.Array,      # uint32 [N, W_total] query batch
+    cache_packed: jax.Array,  # uint32 [K, W_total] cached queries
+    cache_valid: jax.Array,   # bool [K]
+    *,
+    banks: int,
+    bank_words: int,
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched PSU nearest-match: every query vs every cache entry.
+
+    Same micro-kernel as the full-path scan — the cache's packed queries
+    stand in for the item memory — so full-path and cache-nearest lookups
+    share one specialized executable per D'. Returns
+    (idx int32 [N], rho f32 [N] per Eq. 5, hamming int32 [N]); invalid
+    entries are pushed to rho = -inf as in ``core.query_cache.nearest``.
+    """
+    words_eff = banks * bank_words
+    d_eff = float(32 * words_eff)
+    q = q_packed[:, :words_eff]
+    c = cache_packed[:, :words_eff]
+    ham = _batched_hamming(q, c, interpret=interpret, use_kernel=use_kernel)
+    rho = 1.0 - 2.0 * ham.astype(jnp.float32) / d_eff
+    rho = jnp.where(cache_valid[None, :], rho, -jnp.inf)
+    idx = jnp.argmax(rho, axis=-1).astype(jnp.int32)
+    n = jnp.arange(idx.shape[0])
+    return idx, rho[n, idx], ham[n, idx]
 
 
 def delta_update(

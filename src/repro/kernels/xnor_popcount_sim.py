@@ -7,13 +7,19 @@ distance, and dot = d_eff - 2*hamming. Bank gating (D') is realized by
 words, so each D' compiles to a kernel that genuinely reads less memory
 (the TPU analogue of SRAM bank enables).
 
-Grid: (queries, class-tiles, word-tiles), word dim fastest so each (n, m)
-output block accumulates hamming counts across word tiles in VMEM.
+Grid: (query-tiles, class-tiles, word-tiles), word dim fastest so each
+(n, m) output block accumulates hamming counts across word tiles in VMEM.
+Each program processes a TQ x TM block of the output — a *block of queries*
+per program rather than one row — which is what lets the multi-stream
+engine amortize the item-memory tile across S stream slots' proposals
+(S * N_max query rows per window batch). ``packed_hamming`` is the TQ=1
+specialization kept for single-stream callers.
 
 Block shapes: item-memory tile (TM, TW) uint32 in VMEM; TW is a multiple of
-128 (lane width), TM a multiple of 8 (sublane). The M x TW tile is broadcast
-against one query row — the analogue of the ASIC's column broadcast to W
-class lanes.
+128 (lane width), TM a multiple of 8 (sublane), TQ a small sublane-multiple
+(8 by default) so the TQ x TM x TW xor intermediate stays VMEM-resident.
+The M x TW tile is broadcast against TQ query rows — the analogue of the
+ASIC's column broadcast to W class lanes, repeated over a query block.
 """
 from __future__ import annotations
 
@@ -31,37 +37,63 @@ def _kernel(q_ref, im_ref, ham_ref):
     def _init():
         ham_ref[...] = jnp.zeros_like(ham_ref)
 
-    x = jnp.bitwise_xor(q_ref[0, :][None, :], im_ref[...])      # [TM, TW]
+    q = q_ref[...]                                              # [TQ, TW]
+    im = im_ref[...]                                            # [TM, TW]
+    x = jnp.bitwise_xor(q[:, None, :], im[None, :, :])          # [TQ, TM, TW]
     pc = jax.lax.population_count(x).astype(jnp.int32)
-    ham_ref[...] += jnp.sum(pc, axis=1)[None, :]
+    ham_ref[...] += jnp.sum(pc, axis=-1)                        # [TQ, TM]
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "tm", "tw", "interpret"))
+def packed_hamming_batched(
+    q_packed: jax.Array,    # uint32 [N, W_eff]  (already sliced to enabled words)
+    im_packed: jax.Array,   # uint32 [M, W_eff]
+    *,
+    tq: int = 8,
+    tm: int = 128,
+    tw: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Hamming distance of every query to every class: int32 [N, M].
+
+    One grid program covers a (tq, tm) output block, so a batch of queries
+    (e.g. all proposals of all admitted streams in one multi-stream window)
+    reuses each item-memory tile tq times from VMEM. Used by both the
+    full-path scan and the cache-nearest lookup (`ops.cache_nearest`), which
+    is just this kernel with the query cache as the "item memory".
+    """
+    N, W = q_packed.shape
+    M, W2 = im_packed.shape
+    assert W == W2, (W, W2)
+    tq = min(tq, N)
+    tm = min(tm, M)
+    tw = min(tw, W)
+    assert N % tq == 0 and M % tm == 0 and W % tw == 0, (N, tq, M, tm, W, tw)
+
+    grid = (N // tq, M // tm, W // tw)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, tw), lambda n, m, w: (n, w)),
+            pl.BlockSpec((tm, tw), lambda n, m, w: (m, w)),
+        ],
+        out_specs=pl.BlockSpec((tq, tm), lambda n, m, w: (n, m)),
+        out_shape=jax.ShapeDtypeStruct((N, M), jnp.int32),
+        interpret=interpret,
+    )(q_packed, im_packed)
 
 
 @functools.partial(jax.jit, static_argnames=("tm", "tw", "interpret"))
 def packed_hamming(
-    q_packed: jax.Array,    # uint32 [N, W_eff]  (already sliced to enabled words)
+    q_packed: jax.Array,    # uint32 [N, W_eff]
     im_packed: jax.Array,   # uint32 [M, W_eff]
     *,
     tm: int = 128,
     tw: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
-    """Hamming distance of every query to every class: int32 [N, M]."""
-    N, W = q_packed.shape
-    M, W2 = im_packed.shape
-    assert W == W2, (W, W2)
-    tm = min(tm, M)
-    tw = min(tw, W)
-    assert M % tm == 0 and W % tw == 0, (M, tm, W, tw)
-
-    grid = (N, M // tm, W // tw)
-    return pl.pallas_call(
-        _kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, tw), lambda n, m, w: (n, w)),
-            pl.BlockSpec((tm, tw), lambda n, m, w: (m, w)),
-        ],
-        out_specs=pl.BlockSpec((1, tm), lambda n, m, w: (n, m)),
-        out_shape=jax.ShapeDtypeStruct((N, M), jnp.int32),
-        interpret=interpret,
-    )(q_packed, im_packed)
+    """Row-per-program variant: the TQ=1 specialization of the batched grid."""
+    return packed_hamming_batched(
+        q_packed, im_packed, tq=1, tm=tm, tw=tw, interpret=interpret
+    )

@@ -1,0 +1,22 @@
+"""Serving layer: evaluation pipelines, token reranker, multi-stream engine.
+
+Modules:
+
+  * ``tood_pipelines`` — dense / naive-HDC / TorR evaluation pipelines over
+    the synthetic TOOD world (single stream, one window per call).
+  * ``stream_engine``  — the multi-stream batched window engine. API sketch::
+
+        eng = StreamEngine(cfg, im, n_slots=16)
+        eng.admit("cam0", task_w0)          # bind stream -> slot, reset cache
+        eng.submit("cam0", q_packed, valid, boxes)   # enqueue one window
+        results = eng.step()                # one vmapped torr_multi_stream_step
+        out, telemetry = results["cam0"]    # per-stream WindowOutput/telemetry
+        eng.retire("cam0")                  # free the slot
+
+    ``step()`` batches one pending window per admitted stream into a padded
+    :class:`repro.core.types.StreamBatch`; per-stream caches, task weights
+    and queue depths live in a stacked ``TorrState``, so results are
+    bit-identical to running each stream alone through
+    ``repro.core.pipeline.torr_window_step``.
+  * ``reranker``      — TorR as an LLM token-reranking sidecar.
+"""

@@ -1,0 +1,207 @@
+"""Multi-stream batched window engine: slot scheduler over the vmapped step.
+
+The single-stream serving loop (``tood_pipelines.run_torr``) dispatches one
+``torr_window_step`` per frame and leaves the accelerator idle between
+windows. This engine serves S independent camera/DVS streams through *one*
+compiled ``torr_multi_stream_step``: streams are admitted into fixed stream
+slots, each slot owns a stacked row of ``TorrState`` (its query cache, task
+weights and backlog), and every ``step()`` drains one window per busy slot
+as a padded :class:`repro.core.types.StreamBatch`.
+
+Scheduling contract:
+
+  * ``admit(stream_id, task_w)`` binds a stream to a free slot and resets
+    that slot's cache (no cross-stream reuse leaks).
+  * ``submit(stream_id, q_packed, valid, boxes)`` enqueues one window.
+  * ``step()`` pops the head window of every busy slot, pads idle slots
+    (valid all-False -> the pipeline's pad branch leaves their cache
+    untouched), and returns {stream_id: (WindowOutput, WindowTelemetry)}.
+    A stream's ``queue_depth`` is its remaining backlog after the pop, so
+    Alg. 1's per-stream load gating (H, D') sees true per-stream pressure.
+  * ``retire(stream_id)`` frees the slot for the next admission.
+
+Because the batched step is an exact vmap of the window FSM, results are
+bit-identical to running each stream alone (tests/test_multistream.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import pipeline, query_cache
+from ..core.item_memory import ItemMemory
+from ..core.pipeline import TorrState, WindowOutput
+from ..core.types import StreamBatch, TorrConfig, WindowTelemetry
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Counters for the batched engine (host-side, cheap)."""
+
+    steps: int = 0
+    windows: int = 0          # non-pad windows processed
+    pad_slots: int = 0        # idle slot-steps (wasted lanes)
+    admitted: int = 0
+    retired: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        total = self.windows + self.pad_slots
+        return self.windows / total if total else 0.0
+
+
+class StreamEngine:
+    """Fixed-slot scheduler feeding ``torr_multi_stream_step``."""
+
+    def __init__(
+        self,
+        cfg: TorrConfig,
+        im: ItemMemory,
+        n_slots: int = 16,
+        jit: bool = True,
+        serial: bool = False,
+    ):
+        self.cfg = cfg
+        self.im = im
+        self.n_slots = n_slots
+        self._state: TorrState = pipeline.init_multi_stream_state(
+            cfg, jnp.zeros((n_slots, cfg.M), jnp.float32)
+        )
+        self._pending = [collections.deque() for _ in range(n_slots)]
+        self._slot_of: Dict[object, int] = {}
+        self._free = list(range(n_slots - 1, -1, -1))
+        # `serial` picks the lowering (vmap lanes vs on-device lax.map); both
+        # are bit-identical — see pipeline.torr_multi_stream_step. Jit the
+        # module-level function (not a per-engine partial) so engines with
+        # the same cfg share one compiled executable.
+        self._serial = serial
+        step = pipeline.torr_stream_batch_step
+        self._step = (
+            jax.jit(step, static_argnames=("cfg", "serial")) if jit else step
+        )
+        self.stats = EngineStats()
+        # reusable host-side pad buffers for batch assembly
+        self._q0 = np.zeros((cfg.N_max, cfg.words), np.uint32)
+        self._v0 = np.zeros((cfg.N_max,), bool)
+        self._b0 = np.zeros((cfg.N_max, 4), np.float32)
+
+    # -- admission control --------------------------------------------------
+
+    def admit(self, stream_id, task_w) -> int:
+        """Bind a stream to a free slot; returns the slot index."""
+        if stream_id in self._slot_of:
+            raise ValueError(f"stream {stream_id!r} already admitted")
+        if not self._free:
+            raise RuntimeError("no free stream slots; retire a stream first")
+        slot = self._free.pop()
+        self._slot_of[stream_id] = slot
+        self._pending[slot].clear()
+        self._state = TorrState(
+            cache=query_cache.reset_slot(self._state.cache, self.cfg, slot),
+            task_weights=self._state.task_weights.at[slot].set(
+                jnp.asarray(task_w, jnp.float32)
+            ),
+        )
+        self.stats.admitted += 1
+        return slot
+
+    def retire(self, stream_id) -> None:
+        """Release a stream's slot (its cache is reset on the next admit)."""
+        slot = self._slot_of.pop(stream_id)
+        self._pending[slot].clear()
+        self._free.append(slot)
+        self.stats.retired += 1
+
+    # -- window flow --------------------------------------------------------
+
+    def submit(self, stream_id, q_packed, valid, boxes) -> None:
+        """Enqueue one window (packed queries, validity, boxes) for a stream."""
+        slot = self._slot_of[stream_id]
+        self._pending[slot].append(
+            (np.asarray(q_packed, np.uint32),
+             np.asarray(valid, bool),
+             np.asarray(boxes, np.float32))
+        )
+
+    def backlog(self, stream_id) -> int:
+        return len(self._pending[self._slot_of[stream_id]])
+
+    @property
+    def busy(self) -> bool:
+        return any(self._pending[s] for s in self._slot_of.values())
+
+    def step(self) -> Dict[object, tuple[WindowOutput, WindowTelemetry]]:
+        """Drain one window per busy slot through the batched step."""
+        S, cfg = self.n_slots, self.cfg
+        q = np.broadcast_to(self._q0, (S,) + self._q0.shape).copy()
+        v = np.broadcast_to(self._v0, (S,) + self._v0.shape).copy()
+        b = np.broadcast_to(self._b0, (S,) + self._b0.shape).copy()
+        qd = np.zeros((S,), np.int32)
+        served = []  # (stream_id, slot) of non-pad lanes this step
+        for stream_id, slot in self._slot_of.items():
+            if not self._pending[slot]:
+                continue
+            qw, vw, bw = self._pending[slot].popleft()
+            q[slot], v[slot], b[slot] = qw, vw, bw
+            qd[slot] = len(self._pending[slot])
+            served.append((stream_id, slot))
+
+        if not served:  # idle engine: skip the no-op device step
+            return {}
+
+        batch = StreamBatch(
+            q_packed=jnp.asarray(q), valid=jnp.asarray(v),
+            boxes=jnp.asarray(b), queue_depth=jnp.asarray(qd),
+        )
+        self._state, out, tel = self._step(
+            self._state, self.im, batch, cfg, serial=self._serial,
+        )
+        self.stats.steps += 1
+        self.stats.windows += len(served)
+        self.stats.pad_slots += S - len(served)
+
+        results = {}
+        for stream_id, slot in served:
+            results[stream_id] = (
+                jax.tree_util.tree_map(lambda x: x[slot], out),
+                jax.tree_util.tree_map(lambda x: x[slot], tel),
+            )
+        return results
+
+    def drain(self) -> Dict[object, list]:
+        """Step until every backlog is empty; per-stream result lists."""
+        acc: Dict[object, list] = {sid: [] for sid in self._slot_of}
+        while self.busy:
+            for sid, res in self.step().items():
+                acc[sid].append(res)
+        return acc
+
+    def sync(self) -> None:
+        """Block until all dispatched steps have executed on the device.
+
+        Step results are dispatched asynchronously; timing code must call
+        this before reading the clock."""
+        jax.block_until_ready(self._state.cache.age)
+
+    def warmup(self) -> None:
+        """Compile the batched step outside any timed region.
+
+        Runs one all-pad step (a state no-op: every lane takes the pad
+        branch) and discards the result; stats are not touched."""
+        zero = StreamBatch(
+            q_packed=jnp.asarray(np.broadcast_to(
+                self._q0, (self.n_slots,) + self._q0.shape)),
+            valid=jnp.asarray(np.broadcast_to(
+                self._v0, (self.n_slots,) + self._v0.shape)),
+            boxes=jnp.asarray(np.broadcast_to(
+                self._b0, (self.n_slots,) + self._b0.shape)),
+            queue_depth=jnp.zeros((self.n_slots,), jnp.int32),
+        )
+        out = self._step(self._state, self.im, zero, self.cfg,
+                         serial=self._serial)
+        jax.block_until_ready(out[1].scores)

@@ -1,0 +1,92 @@
+"""Optional-`hypothesis` shim for the property tests.
+
+The seed suite uses hypothesis for property-based tests, but the package is
+not part of the runtime environment. When hypothesis is installed the real
+``given`` / ``settings`` / ``st`` are re-exported unchanged; when it is
+absent this module provides a tiny deterministic fallback: each strategy
+knows how to draw an example from a seeded ``random.Random``, and ``given``
+unrolls the test body over ``max_examples`` drawn tuples. The fallback keeps
+the same decorator stacking order the tests already use::
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([32, 64]))
+    @settings(max_examples=20, deadline=None)
+    def test_something(seed, D): ...
+
+Only the strategy constructors the suite needs are implemented
+(``integers``, ``sampled_from``, ``floats``, ``booleans``); extend here if a
+new test needs more.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw function plus nothing else — enough for `given`."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd: random.Random):
+            return self._draw(rnd)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rnd: rnd.choice(elems))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+    st = _Strategies()
+
+    def settings(**kwargs):
+        """Record settings on the function; `given` reads max_examples."""
+
+        def deco(fn):
+            fn._compat_settings = dict(kwargs)
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        """Unroll the test over deterministically drawn example tuples."""
+
+        def deco(fn):
+            n = getattr(fn, "_compat_settings", {}).get("max_examples", 10)
+
+            def wrapper(*args, **kwargs):
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rnd = random.Random(seed)
+                for _ in range(n):
+                    drawn = tuple(s.example(rnd) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+
+            # NOT functools.wraps: pytest follows __wrapped__ to the original
+            # signature and would demand fixtures for the drawn parameters.
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            if hasattr(fn, "pytestmark"):  # marks applied below @given
+                wrapper.pytestmark = fn.pytestmark
+            return wrapper
+
+        return deco

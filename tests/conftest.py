@@ -4,3 +4,10 @@ import sys
 # keep tests on 1 CPU device; multi-device tests spawn subprocesses
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (deselect with -m 'not slow' for tier-1 CI)",
+    )

@@ -1,0 +1,183 @@
+"""Multi-stream batched window engine == S independent single-stream runs.
+
+The tentpole invariant (ISSUE 1): ``torr_multi_stream_step`` (both the vmap
+and the lax.map lowering) and the ``StreamEngine`` scheduler are *exact*
+reformulations of ``torr_window_step`` — scores, argmax and the full path
+telemetry agree bit-for-bit per stream, including per-stream load gating
+(each stream sees its own N and queue depth, hence its own H and D').
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hdc, pipeline
+from repro.core.item_memory import random_item_memory
+from repro.core.types import TorrConfig
+from repro.kernels import ops
+from repro.serving.stream_engine import StreamEngine
+
+CFG = TorrConfig(D=1024, B=8, M=32, K=4, N_max=8, delta_budget=128,
+                 feat_dim=64)
+
+TELEM_FIELDS = ("path", "delta_count", "banks", "rho", "n_valid",
+                "reasoner_active")
+
+
+def _make_inputs(cfg, S, T, seed=0):
+    """Per-stream temporally coherent windows with varied load: stream s
+    flips a few dims per step and draws its own valid counts / queue
+    depths, so streams land in different (H, D') regimes."""
+    rng = np.random.default_rng(seed)
+    base = np.array(hdc.random_hv(jax.random.PRNGKey(seed), (S, cfg.N_max, cfg.D)))
+    steps = []
+    for _ in range(T):
+        flips = rng.integers(0, cfg.D, (S, cfg.N_max, 16))
+        for s in range(S):
+            for n in range(cfg.N_max):
+                base[s, n, flips[s, n]] *= -1
+        q = np.asarray(jax.vmap(hdc.pack_bits)(jnp.asarray(base)))
+        valid = rng.random((S, cfg.N_max)) < rng.uniform(0.3, 1.0, (S, 1))
+        boxes = rng.random((S, cfg.N_max, 4)).astype(np.float32)
+        qd = rng.integers(0, 2 * cfg.q_hi, (S,)).astype(np.int32)
+        steps.append((q, valid, boxes, qd))
+    return steps
+
+
+@pytest.mark.parametrize("S", [1, 4, 16])
+@pytest.mark.parametrize("serial", [False, True])
+def test_multi_stream_step_matches_sequential(S, serial):
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M))
+    steps = _make_inputs(cfg, S, T=4)
+
+    mstate = pipeline.init_multi_stream_state(cfg, task_w)
+    sstates = [pipeline.init_state(cfg, task_w[s]) for s in range(S)]
+    mstep = jax.jit(pipeline.torr_multi_stream_step,
+                    static_argnames=("cfg", "serial"))
+    sstep = jax.jit(pipeline.torr_window_step, static_argnames="cfg")
+
+    for t, (q, valid, boxes, qd) in enumerate(steps):
+        mstate, mout, mtel = mstep(
+            mstate, im, jnp.asarray(q), jnp.asarray(valid),
+            jnp.asarray(boxes), jnp.asarray(qd), cfg, serial=serial)
+        for s in range(S):
+            sstates[s], sout, stel = sstep(
+                sstates[s], im, jnp.asarray(q[s]), jnp.asarray(valid[s]),
+                jnp.asarray(boxes[s]), jnp.int32(qd[s]), cfg)
+            assert np.array_equal(np.asarray(mout.scores[s]),
+                                  np.asarray(sout.scores)), (t, s)
+            assert np.array_equal(np.asarray(mout.best[s]),
+                                  np.asarray(sout.best)), (t, s)
+            assert np.array_equal(np.asarray(mout.boxes[s]),
+                                  np.asarray(sout.boxes)), (t, s)
+            for f in TELEM_FIELDS:
+                assert np.array_equal(np.asarray(getattr(mtel, f)[s]),
+                                      np.asarray(getattr(stel, f))), (t, s, f)
+
+
+@pytest.mark.parametrize("serial", [False, True])
+def test_stream_engine_matches_sequential(serial):
+    """The scheduler (admit/submit/step with pad slots and real backlog
+    depths) reproduces sequential per-stream runs exactly."""
+    cfg = CFG
+    S, T = 3, 5
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+    steps = _make_inputs(cfg, S, T)
+
+    # engine with more slots than streams => some lanes always pad
+    eng = StreamEngine(cfg, im, n_slots=S + 2, serial=serial)
+    for s in range(S):
+        eng.admit(f"cam{s}", task_w[s])
+        for q, valid, boxes, _ in steps:
+            eng.submit(f"cam{s}", q[s], valid[s], boxes[s])
+    res = eng.drain()
+    assert eng.stats.windows == S * T
+    assert eng.stats.pad_slots == 2 * T
+
+    sstep = jax.jit(pipeline.torr_window_step, static_argnames="cfg")
+    for s in range(S):
+        st = pipeline.init_state(cfg, jnp.asarray(task_w[s]))
+        for t, (q, valid, boxes, _) in enumerate(steps):
+            # engine queue depth = remaining backlog after the pop
+            st, out, tel = sstep(st, im, jnp.asarray(q[s]),
+                                 jnp.asarray(valid[s]), jnp.asarray(boxes[s]),
+                                 jnp.int32(T - t - 1), cfg)
+            eout, etel = res[f"cam{s}"][t]
+            assert np.array_equal(np.asarray(eout.scores),
+                                  np.asarray(out.scores)), (s, t)
+            for f in TELEM_FIELDS:
+                assert np.array_equal(np.asarray(getattr(etel, f)),
+                                      np.asarray(getattr(tel, f))), (s, t, f)
+
+
+def test_engine_admit_retire_isolation():
+    """A slot reused by a new stream must not see the old stream's cache."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,)))
+    q = np.asarray(jax.vmap(hdc.pack_bits)(
+        hdc.random_hv(jax.random.PRNGKey(2), (cfg.N_max, cfg.D))))
+    # fewer valid proposals than the cache depth K, else the window thrashes
+    # its own cache and the second pass can never reuse
+    valid = np.arange(cfg.N_max) < cfg.K - 1
+    boxes = np.zeros((cfg.N_max, 4), np.float32)
+
+    eng = StreamEngine(cfg, im, n_slots=1)
+    slot_a = eng.admit("a", task_w)
+    eng.submit("a", q, valid, boxes)
+    eng.submit("a", q, valid, boxes)
+    res = eng.drain()
+    # warm cache: second identical window reuses (no full path anywhere)
+    assert not (np.asarray(res["a"][1][1].path) == 2).any()
+    eng.retire("a")
+
+    slot_b = eng.admit("b", task_w)
+    assert slot_b == slot_a  # same physical slot...
+    eng.submit("b", q, valid, boxes)
+    (out_b, tel_b), = eng.drain()["b"]
+    # ...but a cold cache: every valid proposal takes the full path
+    assert (np.asarray(tel_b.path)[valid] == 2).all()
+
+
+def test_engine_slot_exhaustion_and_double_admit():
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    w = np.zeros((cfg.M,), np.float32)
+    eng = StreamEngine(cfg, im, n_slots=1)
+    eng.admit("a", w)
+    with pytest.raises(ValueError):
+        eng.admit("a", w)
+    with pytest.raises(RuntimeError):
+        eng.admit("b", w)
+    eng.retire("a")
+    eng.admit("b", w)  # slot recycled
+
+
+def test_ops_cache_nearest_matches_core():
+    """The kernel-backed batched PSU lookup agrees with the in-pipeline
+    functional `query_cache.nearest` for every query."""
+    from repro.core import query_cache
+
+    cfg = TorrConfig(D=2048, B=8, M=16, K=8, delta_budget=256)
+    cache = query_cache.init_cache(cfg)
+    for i in range(5):
+        qe = hdc.pack_bits(hdc.random_hv(jax.random.PRNGKey(10 + i), (cfg.D,)))
+        cache = query_cache.write_entry(
+            cache, jnp.int32(i), packed=qe,
+            acc=jnp.zeros((cfg.M,), jnp.int32), acc_banks=8,
+            out=jnp.zeros((cfg.M,), jnp.float32),
+            topk_key=jnp.zeros((cfg.top_k,), jnp.int32), margin=jnp.float32(0))
+    qs = jax.vmap(hdc.pack_bits)(hdc.random_hv(jax.random.PRNGKey(99), (6, cfg.D)))
+    for banks in (1, 4, 8):
+        idx, rho, ham = ops.cache_nearest(
+            qs, cache.packed, cache.valid,
+            banks=banks, bank_words=cfg.bank_words)
+        for n in range(qs.shape[0]):
+            i1, r1, h1 = query_cache.nearest(cache, qs[n], cfg, banks)
+            assert int(idx[n]) == int(i1)
+            assert float(rho[n]) == float(r1)
+            assert int(ham[n]) == int(h1)

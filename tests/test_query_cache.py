@@ -1,0 +1,107 @@
+"""Query-cache path invariants (paper Fig. 4 / Eq. 6 / Sec. 4.6).
+
+Three contracts the reuse paths must honor:
+  * delta: the delta-corrected accumulator equals a full recompute whenever
+    the true flip count fits the budget (Eq. 6 exactness);
+  * LRU: ``lru_slot`` prefers invalid slots, then evicts the least-recent;
+  * bypass: a bypass hit returns the cached scores bit-identically.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aligner, hdc, pipeline, query_cache
+from repro.core.item_memory import build_item_memory, word_mask
+from repro.core.types import PATH_BYPASS, PATH_FULL, TorrConfig
+
+CFG = TorrConfig(D=1024, B=8, M=32, K=4, N_max=8, delta_budget=128,
+                 feat_dim=64)
+
+
+def _entry_kwargs(cfg, key, banks=8):
+    q = hdc.pack_bits(hdc.random_hv(key, (cfg.D,)))
+    return dict(
+        packed=q, acc=jnp.zeros((cfg.M,), jnp.int32), acc_banks=banks,
+        out=jnp.zeros((cfg.M,), jnp.float32),
+        topk_key=jnp.zeros((cfg.top_k,), jnp.int32), margin=jnp.float32(0),
+    )
+
+
+@pytest.mark.parametrize("n_flips", [0, 1, 50, 128])
+def test_delta_correct_equals_full_recompute(n_flips):
+    """acc_old + Eq.6 corrections == full_dot(q_new) when |Delta| <= budget."""
+    cfg = CFG
+    im = build_item_memory(hdc.random_hv(jax.random.PRNGKey(0), (cfg.M, cfg.D)))
+    wmask = word_mask(cfg, cfg.B)
+    q_old = hdc.random_hv(jax.random.PRNGKey(1), (cfg.D,))
+    flips = jax.random.choice(jax.random.PRNGKey(2), cfg.D, (max(n_flips, 1),),
+                              replace=False)[:n_flips]
+    q_new = q_old.at[flips].multiply(-1) if n_flips else q_old
+
+    acc_old = aligner.full_dot(hdc.pack_bits(q_old), im, wmask)
+    idx, w, cnt = aligner.delta_indices(
+        hdc.pack_bits(q_new), hdc.pack_bits(q_old), wmask,
+        cfg.delta_budget, cfg.D)
+    assert int(cnt) == n_flips
+    assert int(cnt) <= cfg.delta_budget
+    acc_new = aligner.delta_correct(acc_old, im, idx, w)
+    want = aligner.full_dot(hdc.pack_bits(q_new), im, wmask)
+    assert (np.asarray(acc_new) == np.asarray(want)).all()
+
+
+def test_lru_slot_prefers_invalid_then_oldest():
+    cfg = CFG
+    cache = query_cache.init_cache(cfg)
+    # empty cache: any slot works; convention is the first
+    assert int(query_cache.lru_slot(cache)) == 0
+    for i in range(cfg.K):
+        cache = query_cache.write_entry(
+            cache, jnp.int32(i), **_entry_kwargs(cfg, jax.random.PRNGKey(i)))
+        if i + 1 < cfg.K:
+            # a still-invalid slot must win over any valid one
+            assert int(query_cache.lru_slot(cache)) == i + 1
+    # all valid: slot 0 is now the least recently written
+    assert int(query_cache.lru_slot(cache)) == 0
+    # touching slot 0 (bypass hit) rejuvenates it; slot 1 becomes LRU
+    cache = query_cache.touch(cache, jnp.int32(0))
+    assert int(query_cache.lru_slot(cache)) == 1
+    # rewriting slot 1 moves LRU on to slot 2
+    cache = query_cache.write_entry(
+        cache, jnp.int32(1), **_entry_kwargs(cfg, jax.random.PRNGKey(99)))
+    assert int(query_cache.lru_slot(cache)) == 2
+
+
+def test_bypass_returns_cached_scores_bit_identical():
+    """Second window with the identical query under high load must take the
+    bypass path and emit the exact cached scores."""
+    cfg = CFG
+    im = build_item_memory(hdc.random_hv(jax.random.PRNGKey(0), (cfg.M, cfg.D)))
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,))
+    state = pipeline.init_state(cfg, task_w)
+    step = jax.jit(pipeline.torr_window_step, static_argnames="cfg")
+
+    q = jax.vmap(hdc.pack_bits)(
+        hdc.random_hv(jax.random.PRNGKey(2), (cfg.N_max, cfg.D)))
+    valid = jnp.zeros((cfg.N_max,), bool).at[0].set(True)
+    boxes = jnp.zeros((cfg.N_max, 4), jnp.float32)
+    qd = jnp.asarray(cfg.q_hi, jnp.int32)  # high load => bypass eligible
+
+    state, out1, tel1 = step(state, im, q, valid, boxes, qd, cfg)
+    assert int(tel1.path[0]) == PATH_FULL  # cold cache
+    state, out2, tel2 = step(state, im, q, valid, boxes, qd, cfg)
+    assert int(tel2.path[0]) == PATH_BYPASS  # rho = 1 >= tau_byp, high load
+    assert np.array_equal(np.asarray(out2.scores[0]), np.asarray(out1.scores[0]))
+    assert not bool(tel2.reasoner_active[0])  # bypass skips the reasoner
+
+
+def test_reset_slot_invalidates_one_stream():
+    cfg = CFG
+    batch = query_cache.init_cache_batch(cfg, 3)
+    batch = dataclasses.replace(batch, valid=batch.valid.at[1].set(True))
+    assert bool(batch.valid[1].all())
+    batch = query_cache.reset_slot(batch, cfg, 1)
+    assert not bool(batch.valid[1].any())
+    assert batch.packed.shape == (3, cfg.K, cfg.words)
