@@ -2,19 +2,33 @@
 
 Prints ``name,value,derived`` CSV rows (value is the table's primary
 quantity: mm^2/mW for Table 1, ms for Tables 2-3, FPS for Table 4, AP for
-Table 5, cycles/us for micro, seconds for roofline).
+Table 5, cycles/us for micro, seconds for roofline, windows/sec for the
+multi-stream Tables 6-7). ``--json PATH`` additionally writes the whole
+suite as one JSON document: ``{suite: {"rows": [[name, value, derived],
+...], "seconds": s, "ok": bool}}`` — the machine-readable artifact CI and
+dashboards diff across commits.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write results as JSON to PATH")
+    ap.add_argument("--only", default="", metavar="NAME",
+                    help="run a single suite (e.g. table7)")
+    args = ap.parse_args()
+
     from . import (micro_aligner, roofline_summary, table1_hw,
                    table2_envelope, table3_runtime, table4_throughput,
-                   table5_accuracy, table6_multistream, torr_reuse_ablation)
+                   table5_accuracy, table6_multistream, table7_async,
+                   torr_reuse_ablation)
 
     suites = [
         ("table1", table1_hw.run),
@@ -23,23 +37,40 @@ def main() -> None:
         ("table4", table4_throughput.run),
         ("table5", table5_accuracy.run),
         ("table6", table6_multistream.run),
+        ("table7", table7_async.run),
         ("torr_ablation", torr_reuse_ablation.run),
         ("micro", micro_aligner.run),
         ("roofline", roofline_summary.run),
     ]
+    if args.only:
+        suites = [(n, f) for n, f in suites if n == args.only]
+        if not suites:
+            print(f"unknown suite {args.only!r}", file=sys.stderr)
+            sys.exit(2)
     failed = []
+    report = {}
     print("name,value,derived")
     for name, fn in suites:
         t0 = time.time()
+        rows = []
         try:
             for row in fn():
+                rows.append(row)
                 print(",".join(str(x) for x in row), flush=True)
+            ok = True
             print(f"{name}/_suite_seconds,{time.time()-t0:.1f},ok", flush=True)
         except Exception:  # noqa: BLE001
+            ok = False
             failed.append(name)
             traceback.print_exc()
             print(f"{name}/_suite_seconds,{time.time()-t0:.1f},FAILED",
                   flush=True)
+        report[name] = {"rows": [list(r) for r in rows],
+                        "seconds": round(time.time() - t0, 1), "ok": ok}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}", file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

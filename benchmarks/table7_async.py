@@ -1,0 +1,127 @@
+"""Table 7 (beyond paper): async dispatch/collect vs synchronous serving.
+
+Measures end-to-end serving throughput (windows/sec) and completion-cadence
+jitter as a function of concurrent stream count for
+
+  * ``sync``    — the PR 1 ``StreamEngine`` driven from one thread: each
+    ``step()``'s results are moved to host memory before the next step is
+    assembled (what a real server does before shipping detections), so host
+    assembly, device compute and result conversion serialize;
+  * ``async``   — ``AsyncStreamEngine``: the dispatcher assembles and
+    launches step t+1 while the collector blocks on / converts step t, so
+    host work overlaps device compute (one bulk device->host move per step,
+    per-window futures);
+  * ``sharded`` — the async engine with the stacked stream state sharded
+    over all local devices (only emitted when >1 device is visible; run
+    standalone under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+    to exercise it on CPU).
+
+All engines serve identical frame sequences and (sync vs async) produce
+bit-identical outputs — tests/test_async_engine.py — so the ratios are pure
+runtime-scheduling effects.
+
+Jitter is completion-cadence jitter: p99 minus median of the gaps between
+consecutive window completions, in ms. A smooth server emits windows at a
+steady cadence; stalls (e.g. result conversion blocking the dispatch
+thread) show up as a heavy p99 tail.
+
+Rows: ``table7/<engine>_S<streams>, windows_per_sec,
+speedup=<vs sync>|p99_jitter_ms=<jitter>``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.item_memory import random_item_memory
+from repro.runtime import sharding as shd
+from repro.serving.async_engine import AsyncStreamEngine
+from repro.serving.stream_engine import StreamEngine
+
+from .table6_multistream import CFG, _make_streams
+
+
+def _cadence_jitter_ms(times: np.ndarray) -> float:
+    """p99 - median of inter-completion gaps (ms); 0 if too few samples."""
+    if times.size < 3:
+        return 0.0
+    gaps = np.diff(np.sort(times)) * 1e3
+    return float(np.percentile(gaps, 99) - np.median(gaps))
+
+
+def _run_sync(cfg, im, task_w, streams):
+    eng = StreamEngine(cfg, im, n_slots=len(streams))
+    for s, frames in enumerate(streams):
+        eng.admit(s, task_w[s])
+        for q, valid, boxes in frames:
+            eng.submit(s, q, valid, boxes)
+    eng.warmup()
+    done = []
+    t0 = time.perf_counter()
+    while eng.busy:
+        res = eng.step()
+        # ship each window's detections: results must be host-resident
+        for _sid, (out, tel) in res.items():
+            np.asarray(out.scores), np.asarray(out.best), np.asarray(tel.path)
+        done.extend([time.perf_counter()] * len(res))
+    dt = time.perf_counter() - t0
+    return eng.stats.windows / dt, _cadence_jitter_ms(np.asarray(done))
+
+
+def _run_async(cfg, im, task_w, streams, mesh=None):
+    eng = AsyncStreamEngine(cfg, im, n_slots=len(streams), mesh=mesh,
+                            paused=True)
+    done = []
+    futs = []
+    for s, frames in enumerate(streams):
+        eng.admit(s, task_w[s])
+        for q, valid, boxes in frames:
+            fut = eng.submit(s, q, valid, boxes)
+            fut.add_done_callback(lambda _f: done.append(time.perf_counter()))
+            futs.append(fut)
+    eng.warmup()
+    t0 = time.perf_counter()
+    eng.start()
+    eng.flush()
+    dt = time.perf_counter() - t0
+    wps = eng.stats.windows / dt
+    eng.close()
+    for f in futs:   # surface any worker error instead of reporting garbage
+        f.result(timeout=1)
+    return wps, _cadence_jitter_ms(np.asarray(done))
+
+
+def run(stream_counts=(4, 16, 64), n_frames: int = 12) -> list[tuple]:
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    multi_dev = len(jax.devices()) > 1
+    rows = []
+    for S in stream_counts:
+        task_w = np.asarray(
+            jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+        streams = _make_streams(cfg, S, n_frames, seed=S)
+
+        wps_sync, jit_sync = _run_sync(cfg, im, task_w, streams)
+        wps_async, jit_async = _run_async(cfg, im, task_w, streams)
+        rows.append((f"table7/sync_S{S}", round(wps_sync, 1),
+                     f"speedup=1.00|p99_jitter_ms={jit_sync:.2f}"))
+        rows.append((f"table7/async_S{S}", round(wps_async, 1),
+                     f"speedup={wps_async / wps_sync:.2f}"
+                     f"|p99_jitter_ms={jit_async:.2f}"))
+        if multi_dev:
+            mesh = shd.stream_mesh()
+            wps_sh, jit_sh = _run_async(cfg, im, task_w, streams, mesh=mesh)
+            rows.append((
+                f"table7/sharded_S{S}x{mesh.devices.size}",
+                round(wps_sh, 1),
+                f"speedup={wps_sh / wps_sync:.2f}"
+                f"|p99_jitter_ms={jit_sh:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

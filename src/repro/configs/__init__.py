@@ -6,6 +6,7 @@ a reduced same-family config for CPU smoke tests.
 from .registry import ARCHS, SHAPES, get, get_smoke, input_specs, shape_for
 
 __all__ = ["ARCHS", "SHAPES", "get", "get_smoke", "input_specs", "shape_for"]
-from .torr_edge import torr_edge, torr_edge_no_reuse  # noqa: E402,F401
+from .torr_edge import (rt_budget_s, torr_edge,  # noqa: E402,F401
+                        torr_edge_no_reuse)
 
-__all__ += ["torr_edge", "torr_edge_no_reuse"]
+__all__ += ["rt_budget_s", "torr_edge", "torr_edge_no_reuse"]

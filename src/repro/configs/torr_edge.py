@@ -12,11 +12,27 @@ import dataclasses
 from ..core.types import TorrConfig
 
 
+# The paper's two QoS operating points: per-window completion deadlines.
+# These are the *serving* deadlines the RT controller enforces
+# (repro.serving.deadline); the cycle model reuses the same budgets.
+RT_BUDGETS_S = {"RT-60": 1.0 / 60.0, "RT-30": 1.0 / 30.0}
+
+
+def rt_budget_s(rt: str = "RT-60") -> float:
+    """Per-window deadline in seconds for an RT-30/RT-60 operating point."""
+    try:
+        return RT_BUDGETS_S[rt]
+    except KeyError:
+        raise ValueError(
+            f"unknown RT target {rt!r}; expected one of {sorted(RT_BUDGETS_S)}"
+        ) from None
+
+
 def torr_edge(rt: str = "RT-60", **overrides) -> TorrConfig:
     base = TorrConfig(
         D=8192, B=8, M=1024, K=8, N_max=128,
         delta_budget=2048, W=64, clock_hz=1.0e9,
-        fps_target=60.0 if rt == "RT-60" else 30.0,
+        fps_target=1.0 / rt_budget_s(rt),
         tau_byp=0.95, tau_q=0.60, N_hi=8, q_hi=4,
         feat_dim=512,
     )

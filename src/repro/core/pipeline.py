@@ -151,6 +151,8 @@ def torr_window_step(
         rho=rhos.astype(jnp.float32),
         n_valid=n_valid,
         reasoner_active=jnp.logical_and(active, valid),
+        queue_depth=jnp.asarray(queue_depth, jnp.int32),
+        high_load=high,
     )
     out = WindowOutput(
         scores=outs,

@@ -122,7 +122,13 @@ class StreamBatch:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class WindowTelemetry:
-    """Per-window execution trace (feeds the cycle-accurate model)."""
+    """Per-window execution trace (feeds the cycle-accurate model).
+
+    ``queue_depth`` and ``high_load`` echo the load signals Alg. 1's gate
+    H(N, q) actually saw, so host-side controllers (the RT-deadline
+    admission control in ``repro.serving.deadline``) and the cycle model can
+    attribute path decisions to backlog pressure without re-deriving it.
+    """
 
     path: jax.Array        # [N_max] int32, PATH_* per proposal
     delta_count: jax.Array # [N_max] int32, |Delta| per proposal
@@ -130,11 +136,13 @@ class WindowTelemetry:
     rho: jax.Array         # [N_max] f32, similarity to nearest cached query
     n_valid: jax.Array     # [] int32, actual proposals this window
     reasoner_active: jax.Array  # [N_max] bool, reasoner ran (not gated)
+    queue_depth: jax.Array # [] int32, backlog fed to H(N, q) this window
+    high_load: jax.Array   # [] bool, H(N, q) as evaluated by Alg. 1
 
     def tree_flatten(self):
         return (
             (self.path, self.delta_count, self.banks, self.rho, self.n_valid,
-             self.reasoner_active),
+             self.reasoner_active, self.queue_depth, self.high_load),
             None,
         )
 

@@ -22,15 +22,8 @@ import jax.numpy as jnp
 from . import ref
 from .delta_update import delta_update as _delta_kernel
 from .sign_project import sign_project as _sign_kernel
+from .xnor_popcount_sim import TM_DEFAULT, TQ_DEFAULT, TW, fit_tile as _tile
 from .xnor_popcount_sim import packed_hamming_batched as _ham_kernel
-
-
-def _tile(n: int, cap: int) -> int:
-    """Largest block size <= cap dividing n (halving from min(cap, n))."""
-    t = min(cap, n)
-    while n % t:
-        t //= 2
-    return t
 
 
 def _batched_hamming(
@@ -45,9 +38,12 @@ def _batched_hamming(
     jnp oracle otherwise."""
     M = h.shape[0]
     words_eff = q.shape[1]
-    if use_kernel and words_eff % 128 == 0 and M % 8 == 0:
-        return _ham_kernel(q, h, tq=_tile(q.shape[0], 8), tm=_tile(M, 128),
-                           tw=128, interpret=interpret)
+    # tile caps honor the TORR_TQ/TORR_TM autotuning overrides (see the
+    # defaults table in kernels.xnor_popcount_sim)
+    if use_kernel and words_eff % TW == 0 and M % 8 == 0:
+        return _ham_kernel(q, h, tq=_tile(q.shape[0], TQ_DEFAULT),
+                           tm=_tile(M, TM_DEFAULT), tw=TW,
+                           interpret=interpret)
     return ref.packed_hamming_ref(q, h)
 
 

@@ -20,14 +20,66 @@ Block shapes: item-memory tile (TM, TW) uint32 in VMEM; TW is a multiple of
 (8 by default) so the TQ x TM x TW xor intermediate stays VMEM-resident.
 The M x TW tile is broadcast against TQ query rows — the analogue of the
 ASIC's column broadcast to W class lanes, repeated over a query block.
+
+TPU autotuning without code edits: the ``tq``/``tm`` defaults are
+overridable through environment variables, read once at import.
+
+    knob | env var   | default | constraint
+    ---- | --------- | ------- | -----------------------------------------
+    tq   | ``TORR_TQ`` |       8 | query-block rows; sublane multiple (8)
+         |           |         | preferred, clipped to divide N
+    tm   | ``TORR_TM`` |     128 | class-tile rows; multiple of 8, clipped
+         |           |         | to divide M
+    tw   | (fixed)   |     128 | word-tile = lane width; not tunable
+
+The defaults are interpret-mode safe and VMEM-conservative
+(TQ*TM*TW*4B = 512 KiB intermediate at 8x128x128); on real TPU sweep
+``TORR_TQ in {8, 16, 32}`` x ``TORR_TM in {128, 256, 512}`` against
+``benchmarks/micro_aligner.py`` and export the winner — both the direct
+kernel defaults and the tile caps used by ``kernels.ops`` honor the
+override, so no call site changes.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _env_tile(name: str, default: int) -> int:
+    """Block-shape override from the environment (bad values rejected)."""
+    raw = os.environ.get(name, "")
+    if not raw:
+        return default
+    try:
+        val = int(raw)
+    except ValueError:
+        raise ValueError(f"{name}={raw!r} is not an integer") from None
+    if val <= 0:
+        raise ValueError(f"{name}={val} must be positive")
+    return val
+
+
+TQ_DEFAULT = _env_tile("TORR_TQ", 8)
+TM_DEFAULT = _env_tile("TORR_TM", 128)
+TW = 128   # lane width; fixed
+
+
+def fit_tile(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1).
+
+    Decrements (trace-time only; n is at most a few thousand) rather than
+    halving so a non-power-of-two cap — e.g. TORR_TM=192 against M=1024 —
+    lands on the biggest usable divisor (128) instead of degenerating to 1.
+    Shared by this module's block-shape clipping and ``kernels.ops``'s tile
+    caps."""
+    t = max(1, min(cap, n))
+    while n % t:
+        t -= 1
+    return t
 
 
 def _kernel(q_ref, im_ref, ham_ref):
@@ -49,9 +101,9 @@ def packed_hamming_batched(
     q_packed: jax.Array,    # uint32 [N, W_eff]  (already sliced to enabled words)
     im_packed: jax.Array,   # uint32 [M, W_eff]
     *,
-    tq: int = 8,
-    tm: int = 128,
-    tw: int = 128,
+    tq: int | None = None,
+    tm: int | None = None,
+    tw: int = TW,
     interpret: bool = True,
 ) -> jax.Array:
     """Hamming distance of every query to every class: int32 [N, M].
@@ -61,14 +113,19 @@ def packed_hamming_batched(
     reuses each item-memory tile tq times from VMEM. Used by both the
     full-path scan and the cache-nearest lookup (`ops.cache_nearest`), which
     is just this kernel with the query cache as the "item memory".
+
+    ``tq``/``tm`` default to the ``TORR_TQ``/``TORR_TM`` environment
+    overrides (module docstring has the defaults table).
     """
     N, W = q_packed.shape
     M, W2 = im_packed.shape
     assert W == W2, (W, W2)
-    tq = min(tq, N)
-    tm = min(tm, M)
+    # clip the requested (or env-default) block shapes to actual divisors,
+    # so any TORR_TQ/TORR_TM sweep value yields a runnable grid
+    tq = fit_tile(N, TQ_DEFAULT if tq is None else tq)
+    tm = fit_tile(M, TM_DEFAULT if tm is None else tm)
     tw = min(tw, W)
-    assert N % tq == 0 and M % tm == 0 and W % tw == 0, (N, tq, M, tm, W, tw)
+    assert W % tw == 0, (W, tw)
 
     grid = (N // tq, M // tm, W // tw)
     return pl.pallas_call(
@@ -89,8 +146,8 @@ def packed_hamming(
     q_packed: jax.Array,    # uint32 [N, W_eff]
     im_packed: jax.Array,   # uint32 [M, W_eff]
     *,
-    tm: int = 128,
-    tw: int = 128,
+    tm: int | None = None,
+    tw: int = TW,
     interpret: bool = True,
 ) -> jax.Array:
     """Row-per-program variant: the TQ=1 specialization of the batched grid."""

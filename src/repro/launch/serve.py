@@ -6,6 +6,11 @@ Examples:
         --smoke --batch 4 --prompt-len 32 --gen 32 --rerank
     PYTHONPATH=src python -m repro.launch.serve --torr-streams 8 \
         --torr-frames 30
+    # async dispatch/collect runtime, sharded over all devices, RT-60
+    # deadline admission control:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python -m repro.launch.serve --torr-streams 8 --torr-frames 30 \
+        --async --mesh 4 --rt RT-60
 """
 from __future__ import annotations
 
@@ -23,8 +28,15 @@ from ..serving import reranker as rr
 
 
 def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
-                     serial: bool = False) -> None:
-    """Serve S synthetic TOOD streams through the batched window engine."""
+                     serial: bool = False, use_async: bool = False,
+                     mesh_devices: int = 0, rt: str = "") -> None:
+    """Serve S synthetic TOOD streams through the batched window engine.
+
+    ``use_async`` routes through the dispatch/collect
+    :class:`repro.serving.async_engine.AsyncStreamEngine`; ``mesh_devices``
+    additionally shards the stream slots over that many devices (0 = all).
+    ``rt`` ("RT-30"/"RT-60") arms the deadline admission controller.
+    """
     from ..core import hdc
     from ..data import tood_synth as ts
     from ..serving import tood_pipelines as tp
@@ -35,16 +47,34 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
     world = ts.make_world(seed=0, M=cfg.M, d=cfg.feat_dim)
     sys_ = tp.build_system(world, cfg, seed=0)
     n_slots = n_slots or n_streams
-    eng = StreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial)
+    if use_async:
+        from ..runtime import sharding as shd
+        from ..serving.async_engine import AsyncStreamEngine
+        from ..serving.deadline import DeadlineTracker, policy_for
+        # sharding is opt-in via --mesh; bare --async stays single-device
+        # (e.g. --torr-serial is valid async but cannot shard)
+        mesh = None if mesh_devices == 0 else shd.stream_mesh(
+            None if mesh_devices < 0 else mesh_devices)
+        tracker = DeadlineTracker(policy_for(rt)) if rt else None
+        eng = AsyncStreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
+                                mesh=mesh, tracker=tracker, paused=True)
+    else:
+        eng = StreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial)
 
     R = jnp.asarray(sys_.R)
     n_tasks = world.relevance.shape[0]
     paths, valids = [], []
     eng.warmup()  # compile the batched step outside the timed drains
+    if use_async:
+        eng.start()
     t_total = 0.0
+    shed = 0
     # admit streams in waves of n_slots so slots < streams just queues work
     for wave_start in range(0, n_streams, n_slots):
         wave = range(wave_start, min(wave_start + n_slots, n_streams))
+        # synthesize + encode the wave's windows outside the timed region:
+        # the async engine must not get a head start on untimed work
+        windows = []   # (stream_id, q, valid, boxes), submission order
         for s in wave:
             task = s % n_tasks
             eng.admit(f"stream{s}", sys_.task_w[task])
@@ -52,29 +82,62 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                                           n_max=cfg.N_max)
             for f in frames:
                 q = hdc.pack_bits(hdc.sign_project(jnp.asarray(f.feats), R))
-                eng.submit(f"stream{s}", np.asarray(q), f.valid, f.boxes)
-                valids.append(f.valid)
+                windows.append((f"stream{s}", np.asarray(q), f.valid, f.boxes))
+        futures = []   # (future, valid-mask) pairs, submission order
         t0 = time.time()
-        results = eng.drain()
-        eng.sync()
-        t_total += time.time() - t0
-        for s in wave:
-            for _, tel in results[f"stream{s}"]:
+        for sid, q, fvalid, fboxes in windows:
+            fut = eng.submit(sid, q, fvalid, fboxes)
+            if use_async:
+                futures.append((fut, fvalid))
+            else:
+                valids.append(fvalid)
+        if use_async:
+            from ..serving.deadline import WindowShed
+            eng.flush()
+            t_total += time.time() - t0
+            for fut, vmask in futures:
+                try:
+                    _, tel = fut.result()
+                except WindowShed:
+                    shed += 1
+                    continue
                 paths.append(np.asarray(tel.path))
+                valids.append(vmask)
+        else:
+            results = eng.drain()
+            eng.sync()
+            t_total += time.time() - t0
+            for s in wave:
+                for _, tel in results[f"stream{s}"]:
+                    paths.append(np.asarray(tel.path))
+        for s in wave:
             eng.retire(f"stream{s}")
 
-    print(f"[serve/torr] streams={n_streams} slots={n_slots} "
-          f"frames/stream={n_frames}")
-    if not paths:
+    if use_async:
+        eng.close()
+    mode = "async" if use_async else "sync"
+    print(f"[serve/torr] streams={n_streams} slots={eng.n_slots} "
+          f"frames/stream={n_frames} mode={mode}")
+    if paths:
+        # count only real proposal lanes: padding lanes report as bypass
+        pvals = np.concatenate(paths)[np.concatenate(valids)]
+        print(f"[serve/torr] {eng.stats.windows} windows in "
+              f"{t_total*1e3:.1f} ms ({eng.stats.windows/t_total:.1f} "
+              f"windows/s, occupancy {eng.stats.occupancy:.2f})")
+    else:
         print("[serve/torr] no windows served")
-        return
-    # count only real proposal lanes: padding lanes report as bypass
-    paths = np.concatenate(paths)[np.concatenate(valids)]
-    print(f"[serve/torr] {eng.stats.windows} windows in {t_total*1e3:.1f} ms "
-          f"({eng.stats.windows/t_total:.1f} windows/s, "
-          f"occupancy {eng.stats.occupancy:.2f})")
-    print(f"[serve/torr] path mix: bypass={np.mean(paths == 0):.2f} "
-          f"delta={np.mean(paths == 1):.2f} full={np.mean(paths == 2):.2f}")
+    if shed:
+        print(f"[serve/torr] shed {shed} windows past deadline")
+    if paths:
+        print(f"[serve/torr] path mix: bypass={np.mean(pvals == 0):.2f} "
+              f"delta={np.mean(pvals == 1):.2f} full={np.mean(pvals == 2):.2f}")
+    if use_async:
+        summary = eng.deadline_summary()
+        if summary is not None:
+            print(f"[serve/torr] deadline: p99={summary['p99_ms']:.2f} ms "
+                  f"jitter={summary['jitter_ms']:.2f} ms "
+                  f"miss_rate={summary['miss_rate']:.3f} "
+                  f"shed={summary['shed']} escalated={summary['escalated']}")
 
 
 def main() -> None:
@@ -95,11 +158,24 @@ def main() -> None:
     ap.add_argument("--torr-serial", action="store_true",
                     help="lax.map lowering (scalar branching; CPU-friendly) "
                          "instead of vmap lanes")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="dispatch/collect split: overlap host window "
+                         "assembly with device steps (AsyncStreamEngine)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="shard stream slots over N devices, -1 = all "
+                         "available (implies --async; default 0 = no "
+                         "sharding)")
+    ap.add_argument("--rt", default="", choices=["", "RT-30", "RT-60"],
+                    help="arm RT-deadline admission control at this "
+                         "operating point (implies --async)")
     args = ap.parse_args()
 
     if args.torr_streams > 0:
         run_torr_streams(args.torr_streams, args.torr_frames,
-                         args.torr_slots, serial=args.torr_serial)
+                         args.torr_slots, serial=args.torr_serial,
+                         use_async=(args.use_async or args.mesh != 0
+                                    or bool(args.rt)),
+                         mesh_devices=args.mesh, rt=args.rt)
         return
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)

@@ -70,6 +70,38 @@ class WindowCost:
     power_w: float
 
 
+def latency_summary(lat_s, budget_s: float) -> dict:
+    """Distribution summary of per-window latencies against an RT budget.
+
+    Shared vocabulary between the simulated cycle model (``simulate_task``)
+    and measured serving telemetry (``repro.serving.deadline``): both report
+    the same keys, so dashboards/benchmarks can diff simulated vs measured
+    envelopes directly. ``jitter_ms`` is p95 - median (the paper's jitter
+    metric); ``miss_rate`` is the fraction of windows over budget.
+    """
+    lat = np.asarray(lat_s, np.float64)
+    if lat.size == 0:
+        return {"budget_ms": budget_s * 1e3, "n_windows": 0,
+                "median_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0,
+                "min_ms": 0.0, "max_ms": 0.0, "jitter_ms": 0.0,
+                "headroom_ms": budget_s * 1e3, "miss_rate": 0.0}
+    med = float(np.median(lat))
+    p95 = float(np.percentile(lat, 95))
+    p99 = float(np.percentile(lat, 99))
+    return {
+        "budget_ms": budget_s * 1e3,
+        "n_windows": int(lat.size),
+        "median_ms": med * 1e3,
+        "p95_ms": p95 * 1e3,
+        "p99_ms": p99 * 1e3,
+        "min_ms": float(lat.min()) * 1e3,
+        "max_ms": float(lat.max()) * 1e3,
+        "jitter_ms": (p95 - med) * 1e3,
+        "headroom_ms": (budget_s - p95) * 1e3,
+        "miss_rate": float(np.mean(lat > budget_s)),
+    }
+
+
 def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
                 reasoner_active: np.ndarray, n_valid: int,
                 cfg: TorrConfig, rt_budget_s: float,
@@ -197,23 +229,18 @@ def simulate_task(task: str, rt: str = "RT-60", n_frames: int = 600,
         mix.append([np.mean(path == p) for p in
                     (PATH_BYPASS, PATH_DELTA, PATH_FULL)])
 
-    lat = np.array(lat)
     mix = np.array(mix)
-    return {
-        "task": task, "rt": rt, "budget_ms": budget * 1e3,
-        "median_ms": float(np.median(lat) * 1e3),
-        "p95_ms": float(np.percentile(lat, 95) * 1e3),
-        "min_ms": float(lat.min() * 1e3),
-        "max_ms": float(lat.max() * 1e3),
-        "jitter_ms": float((np.percentile(lat, 95) - np.median(lat)) * 1e3),
-        "headroom_ms": float(budget * 1e3 - np.percentile(lat, 95) * 1e3),
+    summary = latency_summary(np.array(lat), budget)
+    summary.update({
+        "task": task, "rt": rt,
         "power_w": float(np.mean(power)),
         "energy_mj": float(np.mean(energy) * 1e3),
         "banks_mean": float(np.mean(banks_hist)),
         "path_mix": {"bypass": float(mix[:, 0].mean()),
                      "delta": float(mix[:, 1].mean()),
                      "full": float(mix[:, 2].mean())},
-    }
+    })
+    return summary
 
 
 def simulate_all(rt: str, n_frames: int = 600, seed: int = 0) -> list[dict]:

@@ -17,6 +17,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # trailing-dims spec per parameter leaf name
@@ -242,3 +243,52 @@ def cache_sharding(cache, mesh: Mesh):
 def abstract_tree(init_fn, *args, **kwargs):
     """eval_shape an init function: ShapeDtypeStruct tree, no allocation."""
     return jax.eval_shape(init_fn, *args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Multi-stream serving: stacked per-stream state over a 1-D stream mesh
+# ---------------------------------------------------------------------------
+# The multi-stream TorR engine (serving.stream_engine / serving.async_engine)
+# stacks every per-stream leaf with a leading stream-slot axis [S, ...].
+# Streams are independent (the batched step is an exact vmap of the window
+# FSM), so the only sensible partitioning is: shard the leading S axis,
+# replicate the shared item memory. These helpers keep that rule in one
+# place; the engine pads its slot count to a multiple of the device count so
+# the leading axis always divides.
+
+STREAM_AXIS = "stream"
+
+
+def stream_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D mesh over (the first) ``n_devices`` devices for stream sharding."""
+    devs = jax.devices()
+    n = len(devs) if n_devices in (None, 0) else n_devices
+    if n > len(devs):
+        raise ValueError(f"requested {n} devices, only {len(devs)} present")
+    return Mesh(np.asarray(devs[:n]), (STREAM_AXIS,))
+
+
+def pad_stream_slots(n_slots: int, mesh: Mesh | None) -> int:
+    """Round a slot count up to a multiple of the mesh's stream-axis size."""
+    if mesh is None:
+        return n_slots
+    n_dev = mesh.shape[STREAM_AXIS]
+    return -(-n_slots // n_dev) * n_dev
+
+
+def stream_spec(leaf) -> P:
+    """Shard the leading stream-slot axis; everything trailing replicated."""
+    return P(STREAM_AXIS, *([None] * (leaf.ndim - 1)))
+
+
+def stream_sharding(tree, mesh: Mesh):
+    """NamedSharding tree for stacked per-stream state / batches.
+
+    Every leaf must carry the leading [S] stream axis with S divisible by
+    the mesh (guaranteed by :func:`pad_stream_slots`)."""
+    return jax.tree.map(lambda l: NamedSharding(mesh, stream_spec(l)), tree)
+
+
+def replicated_sharding(tree, mesh: Mesh):
+    """Fully-replicated NamedSharding tree (shared item memory)."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

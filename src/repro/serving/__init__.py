@@ -18,5 +18,24 @@ Modules:
     and queue depths live in a stacked ``TorrState``, so results are
     bit-identical to running each stream alone through
     ``repro.core.pipeline.torr_window_step``.
+  * ``async_engine``  — the asynchronous, device-sharded serving runtime:
+    the same slot contract behind a dispatch/collect thread split. API
+    sketch::
+
+        with AsyncStreamEngine(cfg, im, n_slots=16,
+                               mesh=stream_mesh(),          # optional
+                               tracker=DeadlineTracker(policy_for("RT-60")),
+                               ) as eng:                    # optional
+            eng.admit("cam0", task_w0)
+            fut = eng.submit("cam0", q_packed, valid, boxes)
+            out, telemetry = fut.result()   # host-resident numpy trees
+            eng.flush(); eng.retire("cam0")
+
+    Host window assembly overlaps device steps; futures resolve from a
+    collector thread; with admission control armed, late windows raise
+    ``WindowShed`` instead of resolving.
+  * ``deadline``      — RT-30/RT-60 admission control: pure decision table
+    (admit / bypass-escalate / shed) + the tracker that projects window
+    completion and emits cycle-model-compatible jitter/miss telemetry.
   * ``reranker``      — TorR as an LLM token-reranking sidecar.
 """

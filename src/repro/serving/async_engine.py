@@ -1,0 +1,443 @@
+"""Async, device-sharded multi-stream serving runtime (dispatch/collect split).
+
+Scheduling + sharding contract
+==============================
+
+``AsyncStreamEngine`` serves the same fixed-slot scheduling contract as the
+synchronous :class:`repro.serving.stream_engine.StreamEngine` — admit binds a
+stream to a slot and resets its cache row, submit enqueues one window per
+call, retire drops the remaining backlog with the slot — but splits the
+serving loop across two daemon threads so host work overlaps device compute:
+
+  * the **dispatcher** pops the head window of every busy slot (the exact
+    assembly the sync engine performs, so batch composition and per-stream
+    queue depths are identical for the same submission order), applies the
+    RT-deadline admission decision per popped window, launches the jitted
+    ``torr_multi_stream_step`` — JAX dispatch is asynchronous, so the call
+    returns while the device still computes — and hands the in-flight step
+    to the collector through a bounded queue. A bounded depth of ``pipeline_depth``
+    steps gives double buffering: the dispatcher assembles window t+1 on the
+    host while step t executes, and blocks (backpressure) rather than
+    running ahead of the device.
+  * the **collector** blocks until the step's results are ready
+    (``jax.block_until_ready`` lives here, *not* on the caller's or
+    dispatcher's thread), moves them to host memory once per step, slices
+    per-slot rows, and resolves each window's
+    :class:`concurrent.futures.Future` with host-resident
+    ``(WindowOutput, WindowTelemetry)`` numpy trees.
+
+Determinism: with admission control disabled (``tracker=None``) and the
+same submission order, every batch the dispatcher assembles is exactly the
+batch the sync engine would build, so results are bit-identical to
+``StreamEngine`` (tests/test_async_engine.py). Construct with
+``paused=True`` and call :meth:`start` after submitting to reproduce the
+sync engine's drain schedule exactly.
+
+Sharding: pass ``mesh`` (a 1-D ``jax.sharding.Mesh`` from
+``runtime.sharding.stream_mesh``) to shard the stacked ``TorrState`` and
+every ``StreamBatch`` along the leading stream-slot axis, with the shared
+item memory replicated. The slot count is padded up to a multiple of the
+device count (``runtime.sharding.pad_stream_slots``); pad slots ride the
+pipeline's pad branch. Streams are independent vmap lanes, so partitioning
+the slot axis is communication-free and numerically exact; on a 1-device
+mesh (or ``mesh=None``) placement is untouched — the bit-identical
+fallback. The ``serial`` (lax.map) lowering is host-sequential and cannot
+shard; it is rejected with a multi-device mesh.
+
+Deadline control: pass a ``DeadlineTracker`` (``serving.deadline``) to
+enforce RT-30/RT-60 per-window deadlines. The dispatcher consults the pure
+decision table per popped window — ADMIT serves as-is, ESCALATE forces the
+window's queue-depth input to Alg. 1's load gate ``H(N, q)`` to at least
+``cfg.q_hi`` (bypass escalation drains the queue faster), SHED fails the
+window's future with ``WindowShed`` without spending a slot-step on it.
+The collector feeds measured step latencies back into the tracker's
+projection EMA and records per-window latency for jitter/miss telemetry.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict
+
+import jax
+import numpy as np
+
+from ..core.item_memory import ItemMemory
+from ..core.types import TorrConfig
+from ..runtime import sharding as shd
+from .deadline import Decision, DeadlineTracker, WindowShed
+from .stream_engine import (GATE_ADMIT, GATE_ESCALATE, GATE_SHED,
+                            StreamEngine)
+
+# the deadline tracker's Decision values are fed straight into
+# StreamEngine._assemble's gate protocol — pin the alignment here, the one
+# module that imports both layers
+assert (GATE_ADMIT, GATE_ESCALATE, GATE_SHED) == (
+    Decision.ADMIT, Decision.ESCALATE, Decision.SHED)
+
+
+class AsyncStreamEngine(StreamEngine):
+    """Dispatch/collect split over the slot scheduler; futures per window."""
+
+    def __init__(
+        self,
+        cfg: TorrConfig,
+        im: ItemMemory,
+        n_slots: int = 16,
+        jit: bool = True,
+        serial: bool = False,
+        mesh=None,
+        pipeline_depth: int = 2,
+        tracker: DeadlineTracker | None = None,
+        paused: bool = False,
+    ):
+        if mesh is not None and mesh.devices.size > 1 and serial:
+            raise ValueError(
+                "serial (lax.map) lowering is host-sequential and cannot "
+                "shard the stream axis; use serial=False with a mesh")
+        self._mesh = mesh if mesh is not None and mesh.devices.size > 1 else None
+        super().__init__(cfg, im,
+                         n_slots=shd.pad_stream_slots(n_slots, self._mesh),
+                         jit=jit, serial=serial)
+        if self._mesh is not None:
+            # stacked per-stream state sharded on the slot axis; item memory
+            # (shared task knowledge) replicated on every device
+            self._state = jax.device_put(
+                self._state, shd.stream_sharding(self._state, self._mesh))
+            self.im = jax.device_put(
+                im, shd.replicated_sharding(im, self._mesh))
+            # one sharding covers every batch leaf: leading slot axis
+            # sharded, trailing dims (absent from the spec) replicated
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._batch_sharding = NamedSharding(
+                self._mesh, PartitionSpec(shd.STREAM_AXIS))
+        self._tracker = tracker
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)     # backlog arrived
+        self._settled = threading.Condition(self._lock)  # a window resolved
+        self._inflight = 0      # submitted windows not yet resolved
+        self._stop = False
+        self._error: BaseException | None = None
+        self._collect_q: queue.Queue = queue.Queue(maxsize=max(1, pipeline_depth))
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="torr-dispatch", daemon=True)
+        self._collector = threading.Thread(
+            target=self._collect_loop, name="torr-collect", daemon=True)
+        self._started = False
+        if not paused:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> None:
+        """Start the dispatch/collect threads (no-op if already running)."""
+        if not self._started:
+            self._started = True
+            self._dispatcher.start()
+            self._collector.start()
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the runtime; drain (default) or cancel the backlog first.
+
+        Threads are always joined; a drain failure (worker death) is
+        re-raised after shutdown completes."""
+        if not self._started:
+            return
+        drain_err: BaseException | None = None
+        if drain:
+            try:
+                self.flush()
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                drain_err = e
+        cancelled = []
+        with self._work:
+            if not drain:
+                for dq in self._pending:
+                    while dq:
+                        *_, fut, _arrival = dq.popleft()
+                        cancelled.append(fut)
+                        self._inflight -= 1
+                self._settled.notify_all()
+            self._stop = True
+            self._work.notify_all()
+        for fut in cancelled:   # done-callbacks must not run under the lock
+            fut.cancel()
+        self._dispatcher.join()
+        self._collect_q.put(None)
+        self._collector.join()
+        self._started = False
+        if drain_err is not None:
+            raise drain_err
+
+    def __enter__(self) -> "AsyncStreamEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    def _check_error(self) -> None:
+        if self._error is not None:
+            raise RuntimeError("async engine worker died") from self._error
+
+    # -- admission / submission (caller threads) ----------------------------
+
+    def admit(self, stream_id, task_w) -> int:
+        with self._lock:
+            slot = super().admit(stream_id, task_w)
+            if self._mesh is not None:
+                # super() rebuilt the state tree functionally; re-pin it so
+                # the dispatcher's next step keeps the stream-axis layout
+                self._state = jax.device_put(
+                    self._state, shd.stream_sharding(self._state, self._mesh))
+            return slot
+
+    def retire(self, stream_id) -> None:
+        """Drop the stream's backlog (cancelling its futures) and free its
+        slot. Windows already dispatched to the device still resolve.
+
+        Futures are cancelled *after* the lock is released: Future.cancel
+        runs done-callbacks synchronously, and a callback that re-enters
+        the engine (submit/flush) must not find the lock held."""
+        with self._work:
+            slot = self._slot_of[stream_id]
+            cancelled = [w[3] for w in self._pending[slot]]
+            self._inflight -= len(cancelled)
+            super().retire(stream_id)
+            self._settled.notify_all()
+        for fut in cancelled:
+            fut.cancel()
+
+    def submit(self, stream_id, q_packed, valid, boxes) -> Future:
+        """Enqueue one window; the future resolves to host-resident
+        ``(WindowOutput, WindowTelemetry)`` numpy trees, or raises
+        :class:`WindowShed` if admission control drops the window."""
+        self._check_error()
+        fut: Future = Future()
+        arrival = self._tracker.now() if self._tracker else time.monotonic()
+        window = (np.asarray(q_packed, np.uint32), np.asarray(valid, bool),
+                  np.asarray(boxes, np.float32), fut, arrival)
+        with self._work:
+            self._pending[self._slot_of[stream_id]].append(window)
+            self._inflight += 1
+            self._work.notify()
+        return fut
+
+    def backlog(self, stream_id) -> int:
+        with self._lock:
+            return super().backlog(stream_id)
+
+    def flush(self, timeout: float | None = None) -> None:
+        """Block until every submitted window has resolved (result, shed or
+        cancel). Raises on worker death; TimeoutError on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._settled:
+            while self._inflight > 0:
+                self._check_error()
+                left = None if deadline is None else deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    raise TimeoutError(
+                        f"flush timed out with {self._inflight} windows in flight")
+                self._settled.wait(timeout=left)
+            self._check_error()
+
+    # the synchronous one-step-at-a-time API is owned by the dispatcher here
+    def step(self):
+        raise NotImplementedError(
+            "AsyncStreamEngine dispatches internally; use submit() futures")
+
+    def drain(self):
+        raise NotImplementedError(
+            "AsyncStreamEngine dispatches internally; use flush()")
+
+    # -- dispatcher ---------------------------------------------------------
+
+    def _has_backlog(self) -> bool:
+        return any(self._pending[s] for s in self._slot_of.values())
+
+    def _assemble_admitted(self, deferred):
+        """`StreamEngine._assemble` under the RT admission gate.
+
+        Must run under the lock. Shed windows are popped and replaced by the
+        next queued window of the same slot (re-decided in turn); escalated
+        windows get their queue-depth lane forced to >= cfg.q_hi so H(N, q)
+        escalates cheap paths — both mechanics live in
+        ``StreamEngine._assemble``; this only supplies the decision + shed
+        bookkeeping. Shed futures are appended to ``deferred`` as
+        ``(future, exception)`` and resolved by the caller *outside* the
+        lock (set_exception runs done-callbacks synchronously, and a
+        callback may re-enter the engine)."""
+        if self._tracker is None:
+            return self._assemble()
+        now = self._tracker.now()
+
+        def gate(stream_id, backlog, extra):
+            fut, arrival = extra
+            decision = self._tracker.decide_head(arrival, backlog, now)
+            if decision == Decision.SHED:
+                self.stats.shed += 1
+                self._inflight -= 1
+                deferred.append((fut, WindowShed(
+                    stream_id, self._tracker.lateness(arrival, now))))
+                self._settled.notify_all()
+            return decision
+
+        return self._assemble(gate)
+
+    def _dispatch(self, q, v, b, qd):
+        if self._mesh is None:
+            return super()._dispatch(q, v, b, qd)
+        from ..core.types import StreamBatch
+        s = self._batch_sharding
+        batch = StreamBatch(
+            q_packed=jax.device_put(q, s), valid=jax.device_put(v, s),
+            boxes=jax.device_put(b, s),
+            queue_depth=jax.device_put(qd.astype(np.int32), s),
+        )
+        self._state, out, tel = self._step(
+            self._state, self.im, batch, self.cfg, serial=self._serial)
+        return out, tel
+
+    def warmup(self) -> None:
+        """Compile the batched step (with its sharded layout when meshed)
+        outside any timed region: one all-pad step, a state no-op."""
+        with self._lock:
+            S = self.n_slots
+            out, _tel = self._dispatch(
+                np.broadcast_to(self._q0, (S,) + self._q0.shape),
+                np.broadcast_to(self._v0, (S,) + self._v0.shape),
+                np.broadcast_to(self._b0, (S,) + self._b0.shape),
+                np.zeros((S,), np.int32))
+            jax.block_until_ready(out.scores)
+
+    def _dispatch_loop(self) -> None:
+        deferred = []   # (future, exception) of windows shed under the lock
+        try:
+            while True:
+                deferred = []
+                with self._work:
+                    while not self._stop and not self._has_backlog():
+                        self._work.wait()
+                    if self._stop:
+                        break
+                    q, v, b, qd, served = self._assemble_admitted(deferred)
+                    if served:
+                        # dispatch under the lock: JAX async dispatch
+                        # returns immediately, and admit/retire must not
+                        # interleave a state rewrite between assemble and
+                        # state advance
+                        t0 = time.monotonic()
+                        out, tel = self._dispatch(q, v, b, qd)
+                        self.stats.steps += 1
+                        self.stats.windows += len(served)
+                        self.stats.pad_slots += self.n_slots - len(served)
+                for fut, exc in deferred:   # callbacks run lock-free here
+                    fut.set_exception(exc)
+                if not served:      # whole backlog shed this pass
+                    continue
+                # bounded queue = pipeline depth: block here (not holding
+                # the lock) instead of racing ahead of the device
+                self._collect_q.put((served, out, tel, t0))
+                if self._error is not None:
+                    # the collector died while we were blocked in put():
+                    # _fail's drain ran before our item landed, so nobody
+                    # will ever resolve it — fail it ourselves
+                    self._drain_collect_failing(self._error)
+                    break
+        except BaseException as e:  # noqa: BLE001 — surfaced via futures
+            self._fail(e)
+            # windows shed this pass were popped from _pending before the
+            # crash, so _fail can't see them — resolve them here with their
+            # intended shed exception
+            for fut, exc in deferred:
+                if not fut.done():
+                    fut.set_exception(exc)
+
+    # -- collector ----------------------------------------------------------
+
+    def _collect_loop(self) -> None:
+        try:
+            while True:
+                item = self._collect_q.get()
+                if item is None:
+                    break
+                served, out, tel, t0 = item
+                jax.block_until_ready(out.scores)
+                dur = time.monotonic() - t0
+                # one device->host move per step, then cheap numpy slicing
+                out_h = jax.tree_util.tree_map(np.asarray, out)
+                tel_h = jax.tree_util.tree_map(np.asarray, tel)
+                if self._tracker is not None:
+                    self._tracker.observe_step(dur)
+                now = (self._tracker.now() if self._tracker
+                       else time.monotonic())
+                for stream_id, slot, (fut, arrival) in served:
+                    if fut.cancelled():
+                        # orphaned mid-flight (stream retired): nobody
+                        # consumes it, so keep it out of the deadline
+                        # latency/miss envelope too
+                        continue
+                    result = (
+                        jax.tree_util.tree_map(lambda x: x[slot], out_h),
+                        jax.tree_util.tree_map(lambda x: x[slot], tel_h),
+                    )
+                    if self._tracker is not None:
+                        self._tracker.complete(arrival, now)
+                    fut.set_result(result)
+                with self._settled:
+                    self._inflight -= len(served)
+                    self._settled.notify_all()
+        except BaseException as e:  # noqa: BLE001
+            self._fail(e)
+
+    def _drain_collect(self) -> list:
+        """Empty the collect queue; returns the drained windows' futures."""
+        futs = []
+        while True:
+            try:
+                item = self._collect_q.get_nowait()
+            except queue.Empty:
+                return futs
+            if item is not None:
+                futs.extend(f for _sid, _slot, (f, _arr) in item[0])
+
+    def _drain_collect_failing(self, exc: BaseException) -> None:
+        for fut in self._drain_collect():
+            if not fut.cancelled():
+                fut.set_exception(exc)
+
+    def _fail(self, exc: BaseException) -> None:
+        """Worker died: fail every queued future and wake all waiters.
+
+        Futures are resolved after the lock is released — set_exception
+        runs done-callbacks synchronously, and one may re-enter the engine."""
+        doomed = []
+        with self._work:
+            self._error = exc
+            self._stop = True
+            for dq in self._pending:
+                while dq:
+                    *_, fut, _arrival = dq.popleft()
+                    doomed.append(fut)
+            # if the collector died, drain its queue so a back-pressured
+            # dispatcher blocked in put() unblocks; the dispatcher re-drains
+            # after its put in case its in-flight item landed post-drain
+            doomed.extend(self._drain_collect())
+            self._inflight = 0
+            self._settled.notify_all()
+            self._work.notify_all()
+        for fut in doomed:
+            if not fut.cancelled():
+                fut.set_exception(exc)
+
+    # -- telemetry ----------------------------------------------------------
+
+    @property
+    def tracker(self) -> DeadlineTracker | None:
+        return self._tracker
+
+    def deadline_summary(self) -> Dict | None:
+        """Jitter/miss-rate envelope (cycle-model-compatible keys)."""
+        return self._tracker.summary() if self._tracker else None

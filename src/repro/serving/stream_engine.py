@@ -18,7 +18,8 @@ Scheduling contract:
     untouched), and returns {stream_id: (WindowOutput, WindowTelemetry)}.
     A stream's ``queue_depth`` is its remaining backlog after the pop, so
     Alg. 1's per-stream load gating (H, D') sees true per-stream pressure.
-  * ``retire(stream_id)`` frees the slot for the next admission.
+  * ``retire(stream_id)`` drops the stream's remaining backlog and frees
+    the slot; admission asserts the recycled slot's queue is empty.
 
 Because the batched step is an exact vmap of the window FSM, results are
 bit-identical to running each stream alone (tests/test_multistream.py).
@@ -38,6 +39,11 @@ from ..core.item_memory import ItemMemory
 from ..core.pipeline import TorrState, WindowOutput
 from ..core.types import StreamBatch, TorrConfig, WindowTelemetry
 
+# admission-gate verdicts for `_assemble(gate=...)`; values align with
+# `repro.serving.deadline.Decision` (an IntEnum) so trackers can be used
+# as gates without this module importing the deadline layer
+GATE_ADMIT, GATE_ESCALATE, GATE_SHED = 0, 1, 2
+
 
 @dataclasses.dataclass
 class EngineStats:
@@ -48,6 +54,8 @@ class EngineStats:
     pad_slots: int = 0        # idle slot-steps (wasted lanes)
     admitted: int = 0
     retired: int = 0
+    dropped: int = 0          # backlog windows discarded by retire()
+    shed: int = 0             # windows shed by RT admission control
 
     @property
     def occupancy(self) -> float:
@@ -99,8 +107,13 @@ class StreamEngine:
         if not self._free:
             raise RuntimeError("no free stream slots; retire a stream first")
         slot = self._free.pop()
+        # retire() drops a stream's un-popped backlog with the slot, so a
+        # recycled slot must come back empty — anything else is a
+        # cross-stream backlog leak.
+        assert not self._pending[slot], (
+            f"slot {slot} re-admitted with {len(self._pending[slot])} leaked "
+            "backlog windows; retire() must drop them")
         self._slot_of[stream_id] = slot
-        self._pending[slot].clear()
         self._state = TorrState(
             cache=query_cache.reset_slot(self._state.cache, self.cfg, slot),
             task_weights=self._state.task_weights.at[slot].set(
@@ -111,8 +124,13 @@ class StreamEngine:
         return slot
 
     def retire(self, stream_id) -> None:
-        """Release a stream's slot (its cache is reset on the next admit)."""
+        """Release a stream's slot, dropping any un-popped backlog.
+
+        The slot's cache is reset on the next admit; the backlog must be
+        dropped *here* so a recycled slot can never serve a window (or leak
+        queue-depth pressure) belonging to the retired stream."""
         slot = self._slot_of.pop(stream_id)
+        self.stats.dropped += len(self._pending[slot])
         self._pending[slot].clear()
         self._free.append(slot)
         self.stats.retired += 1
@@ -135,38 +153,70 @@ class StreamEngine:
     def busy(self) -> bool:
         return any(self._pending[s] for s in self._slot_of.values())
 
-    def step(self) -> Dict[object, tuple[WindowOutput, WindowTelemetry]]:
-        """Drain one window per busy slot through the batched step."""
-        S, cfg = self.n_slots, self.cfg
+    def _assemble(self, gate=None):
+        """Pop the head window of every busy slot into padded host buffers.
+
+        Returns ``(q, v, b, qd, served)`` where served is a list of
+        ``(stream_id, slot, extra)`` — ``extra`` is whatever trailing payload
+        ``submit`` queued alongside the window arrays (the async engine
+        rides its per-window future and arrival time here). Idle slots stay
+        all-pad; ``qd`` is each served slot's *remaining* backlog after the
+        pop, so Alg. 1's load gate sees true per-stream pressure.
+
+        ``gate(stream_id, backlog_after_pop, extra) -> GATE_*`` is the
+        optional admission hook (the async engine's RT-deadline controller):
+        GATE_SHED drops the head (the gate owns failing its future) and the
+        next queued window is offered in its place; GATE_ESCALATE serves the
+        window with its queue-depth lane floored to ``cfg.q_hi`` so Alg. 1's
+        ``H(N, q)`` goes high. With ``gate=None`` every window is admitted —
+        the batch composition the bit-equivalence tests pin down."""
+        S = self.n_slots
         q = np.broadcast_to(self._q0, (S,) + self._q0.shape).copy()
         v = np.broadcast_to(self._v0, (S,) + self._v0.shape).copy()
         b = np.broadcast_to(self._b0, (S,) + self._b0.shape).copy()
         qd = np.zeros((S,), np.int32)
-        served = []  # (stream_id, slot) of non-pad lanes this step
+        served = []  # (stream_id, slot, extra) of non-pad lanes this step
         for stream_id, slot in self._slot_of.items():
-            if not self._pending[slot]:
-                continue
-            qw, vw, bw = self._pending[slot].popleft()
-            q[slot], v[slot], b[slot] = qw, vw, bw
-            qd[slot] = len(self._pending[slot])
-            served.append((stream_id, slot))
+            dq = self._pending[slot]
+            while dq:
+                qw, vw, bw, *extra = dq[0]
+                decision = GATE_ADMIT if gate is None else \
+                    gate(stream_id, len(dq) - 1, extra)
+                dq.popleft()
+                if decision == GATE_SHED:
+                    continue    # offer this slot's next queued window
+                q[slot], v[slot], b[slot] = qw, vw, bw
+                qd[slot] = len(dq)
+                if decision == GATE_ESCALATE:
+                    qd[slot] = max(qd[slot], self.cfg.q_hi)
+                served.append((stream_id, slot, extra))
+                break
+        return q, v, b, qd, served
 
-        if not served:  # idle engine: skip the no-op device step
-            return {}
-
+    def _dispatch(self, q, v, b, qd):
+        """Launch one batched step (asynchronously) and advance the state."""
         batch = StreamBatch(
             q_packed=jnp.asarray(q), valid=jnp.asarray(v),
             boxes=jnp.asarray(b), queue_depth=jnp.asarray(qd),
         )
         self._state, out, tel = self._step(
-            self._state, self.im, batch, cfg, serial=self._serial,
+            self._state, self.im, batch, self.cfg, serial=self._serial,
         )
+        return out, tel
+
+    def step(self) -> Dict[object, tuple[WindowOutput, WindowTelemetry]]:
+        """Drain one window per busy slot through the batched step."""
+        q, v, b, qd, served = self._assemble()
+        if not served:  # idle engine: skip the no-op device step
+            return {}
+
+        out, tel = self._dispatch(q, v, b, qd)
         self.stats.steps += 1
         self.stats.windows += len(served)
-        self.stats.pad_slots += S - len(served)
+        self.stats.pad_slots += self.n_slots - len(served)
 
         results = {}
-        for stream_id, slot in served:
+        for stream_id, slot, _extra in served:
             results[stream_id] = (
                 jax.tree_util.tree_map(lambda x: x[slot], out),
                 jax.tree_util.tree_map(lambda x: x[slot], tel),

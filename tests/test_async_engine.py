@@ -1,0 +1,298 @@
+"""Async serving runtime == synchronous StreamEngine, plus RT admission.
+
+The tentpole invariant (ISSUE 2): with admission control off, the
+dispatch/collect ``AsyncStreamEngine`` produces bit-identical outputs and
+telemetry to the synchronous ``StreamEngine`` for the same submission order
+— on one device and (subprocess) on N fake devices with the stream axis
+sharded. Deadline integration: shed windows fail their futures with
+``WindowShed``; escalated windows are served with the load gate forced high.
+
+Every ``future.result``/``flush`` call here carries a timeout so a
+deadlocked dispatcher fails the test fast instead of hanging the suite.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import pipeline
+from repro.core.item_memory import random_item_memory
+from repro.serving.async_engine import AsyncStreamEngine
+from repro.serving.deadline import (DeadlinePolicy, DeadlineTracker,
+                                    WindowShed)
+from repro.serving.stream_engine import StreamEngine
+
+from test_multistream import CFG, TELEM_FIELDS, _make_inputs
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+FLUSH_S = 120  # generous CI margin; a deadlock fails in minutes, not hours
+
+
+def _submit_all(eng, task_w, steps, S):
+    """Admit S streams and enqueue every window; returns per-stream futures."""
+    futs = {s: [] for s in range(S)}
+    for s in range(S):
+        eng.admit(f"cam{s}", task_w[s])
+        for q, valid, boxes, _qd in steps:
+            futs[s].append(eng.submit(f"cam{s}", q[s], valid[s], boxes[s]))
+    return futs
+
+
+@pytest.mark.parametrize("S", [1, 4, 16])
+def test_async_matches_sync_bitwise(S):
+    """Same submission order => identical batches => bit-identical results."""
+    cfg = CFG
+    T = 4
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+    steps = _make_inputs(cfg, S, T)
+
+    sync = StreamEngine(cfg, im, n_slots=S)
+    for s in range(S):
+        sync.admit(f"cam{s}", task_w[s])
+        for q, valid, boxes, _qd in steps:
+            sync.submit(f"cam{s}", q[s], valid[s], boxes[s])
+    res_sync = sync.drain()
+
+    # paused: the dispatcher sees the full backlog, reproducing the sync
+    # drain schedule (and its queue-depth trace) exactly
+    with AsyncStreamEngine(cfg, im, n_slots=S, paused=True) as eng:
+        futs = _submit_all(eng, task_w, steps, S)
+        eng.start()
+        eng.flush(timeout=FLUSH_S)
+        for s in range(S):
+            for t, fut in enumerate(futs[s]):
+                aout, atel = fut.result(timeout=10)
+                sout, stel = res_sync[f"cam{s}"][t]
+                assert np.array_equal(aout.scores, np.asarray(sout.scores))
+                assert np.array_equal(aout.best, np.asarray(sout.best))
+                assert np.array_equal(aout.boxes, np.asarray(sout.boxes))
+                for f in TELEM_FIELDS + ("queue_depth", "high_load"):
+                    assert np.array_equal(
+                        np.asarray(getattr(atel, f)),
+                        np.asarray(getattr(stel, f))), (s, t, f)
+    assert eng.stats.windows == S * T
+
+
+def test_async_matches_sync_live_submission():
+    """Un-paused engine (windows race the dispatcher): per-stream outputs
+    still match a sequential replay fed the same queue-depth trace."""
+    cfg = CFG
+    S, T = 3, 5
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+    steps = _make_inputs(cfg, S, T)
+
+    with AsyncStreamEngine(cfg, im, n_slots=S) as eng:
+        futs = _submit_all(eng, task_w, steps, S)
+        eng.flush(timeout=FLUSH_S)
+        results = {s: [f.result(timeout=10) for f in futs[s]]
+                   for s in range(S)}
+
+    # replay each stream alone, feeding the queue depths the engine saw
+    sstep = jax.jit(pipeline.torr_window_step, static_argnames="cfg")
+    import jax.numpy as jnp
+    for s in range(S):
+        st = pipeline.init_state(cfg, jnp.asarray(task_w[s]))
+        for t, (q, valid, boxes, _qd) in enumerate(steps):
+            aout, atel = results[s][t]
+            st, out, _tel = sstep(st, im, jnp.asarray(q[s]),
+                                  jnp.asarray(valid[s]), jnp.asarray(boxes[s]),
+                                  jnp.asarray(atel.queue_depth), cfg)
+            assert np.array_equal(aout.scores, np.asarray(out.scores)), (s, t)
+
+
+def test_async_sharded_matches_sync_on_fake_devices():
+    """4 host-platform devices: slot padding + stream-axis sharding is
+    bit-exact vs the single-device sync engine (subprocess: the forked
+    runtime must see XLA_FLAGS before jax initializes)."""
+    code = """
+import numpy as np, jax
+assert jax.device_count() == 4, jax.devices()
+from repro.core.item_memory import random_item_memory
+from repro.runtime import sharding as shd
+from repro.serving.async_engine import AsyncStreamEngine
+from repro.serving.stream_engine import StreamEngine
+from tests.test_multistream import CFG, _make_inputs
+
+S, T = 6, 3   # 6 slots pad to 8 over 4 devices
+im = random_item_memory(jax.random.PRNGKey(0), CFG)
+task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, CFG.M)))
+steps = _make_inputs(CFG, S, T)
+
+sync = StreamEngine(CFG, im, n_slots=S)
+for s in range(S):
+    sync.admit(s, task_w[s])
+    for q, v, b, _qd in steps:
+        sync.submit(s, q[s], v[s], b[s])
+res = sync.drain()
+
+eng = AsyncStreamEngine(CFG, im, n_slots=S, mesh=shd.stream_mesh(),
+                        paused=True)
+assert eng.n_slots == 8, eng.n_slots
+futs = {s: [] for s in range(S)}
+for s in range(S):
+    eng.admit(s, task_w[s])
+    for q, v, b, _qd in steps:
+        futs[s].append(eng.submit(s, q[s], v[s], b[s]))
+eng.start()
+eng.flush(timeout=300)
+for s in range(S):
+    for t, f in enumerate(futs[s]):
+        aout, atel = f.result(timeout=10)
+        sout, stel = res[s][t]
+        assert np.array_equal(aout.scores, np.asarray(sout.scores)), (s, t)
+        assert np.array_equal(np.asarray(atel.path),
+                              np.asarray(stel.path)), (s, t)
+eng.close()
+print("SHARDED-MATCH")
+"""
+    env = dict(os.environ,
+               PYTHONPATH=SRC + os.pathsep + os.path.dirname(SRC),
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED-MATCH" in out.stdout
+
+
+def test_deadline_shed_fails_futures():
+    """An impossible budget sheds every window with WindowShed; nothing is
+    dispatched to the device."""
+    cfg = CFG
+    S, T = 2, 3
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+    steps = _make_inputs(cfg, S, T)
+    pol = DeadlinePolicy(budget_s=1e-12, escalate_margin_s=1e-12)
+
+    with AsyncStreamEngine(cfg, im, n_slots=S, paused=True,
+                           tracker=DeadlineTracker(pol)) as eng:
+        futs = _submit_all(eng, task_w, steps, S)
+        eng.start()
+        eng.flush(timeout=FLUSH_S)
+        for s in range(S):
+            for fut in futs[s]:
+                with pytest.raises(WindowShed):
+                    fut.result(timeout=10)
+    assert eng.stats.shed == S * T
+    assert eng.stats.windows == 0
+    assert eng.tracker.shed == S * T
+    assert eng.deadline_summary()["n_windows"] == 0
+
+
+def test_deadline_escalate_forces_load_gate():
+    """allow_shed=False turns hopeless lateness into bypass escalation: the
+    served window's telemetry shows queue_depth >= q_hi and H(N, q) high."""
+    cfg = CFG
+    S, T = 2, 3
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+    steps = _make_inputs(cfg, S, T)
+    pol = DeadlinePolicy(budget_s=1e-12, escalate_margin_s=1e-12,
+                         allow_shed=False)
+
+    with AsyncStreamEngine(cfg, im, n_slots=S, paused=True,
+                           tracker=DeadlineTracker(pol)) as eng:
+        futs = _submit_all(eng, task_w, steps, S)
+        eng.start()
+        eng.flush(timeout=FLUSH_S)
+        for s in range(S):
+            for fut in futs[s]:
+                _out, tel = fut.result(timeout=10)
+                assert int(tel.queue_depth) >= cfg.q_hi
+                assert bool(tel.high_load)
+    assert eng.stats.windows == S * T
+    assert eng.tracker.escalated == S * T
+    summary = eng.deadline_summary()
+    assert summary["completed"] == S * T
+    assert summary["miss_rate"] == 1.0  # everything blew the 1ps budget
+
+
+def test_retire_cancels_backlog_and_readmits_clean():
+    """retire() drops the un-popped backlog (cancelling futures); the slot
+    re-admits with an empty queue and a cold cache."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.zeros((cfg.M,), np.float32)
+    steps = _make_inputs(cfg, 1, 3)
+
+    with AsyncStreamEngine(cfg, im, n_slots=1, paused=True) as eng:
+        futs = []
+        eng.admit("a", task_w)
+        for q, v, b, _qd in steps:
+            futs.append(eng.submit("a", q[0], v[0], b[0]))
+        eng.retire("a")          # engine paused: nothing was dispatched
+        assert all(f.cancelled() for f in futs)
+        assert eng.stats.dropped == 3
+
+        eng.start()
+        eng.admit("b", task_w)   # recycled slot must be clean
+        fut = eng.submit("b", *[a[0] for a in steps[0][:3]])
+        out, tel = fut.result(timeout=FLUSH_S)
+        # cold cache: every valid proposal takes the full path
+        valid = steps[0][1][0]
+        assert (np.asarray(tel.path)[valid] == 2).all()
+        eng.flush(timeout=FLUSH_S)
+    assert eng.stats.windows == 1
+
+
+def test_future_callbacks_may_reenter_engine():
+    """Done-callbacks fire without the engine lock held: a callback that
+    calls back into the engine (here backlog()) must not deadlock the
+    dispatcher — for shed futures and for cancelled ones alike."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.zeros((cfg.M,), np.float32)
+    steps = _make_inputs(cfg, 1, 2)
+    pol = DeadlinePolicy(budget_s=1e-12, escalate_margin_s=1e-12)
+    reentered = []
+
+    with AsyncStreamEngine(cfg, im, n_slots=1, paused=True,
+                           tracker=DeadlineTracker(pol)) as eng:
+        eng.admit("a", task_w)
+        for q, v, b, _qd in steps:
+            fut = eng.submit("a", q[0], v[0], b[0])
+            fut.add_done_callback(
+                lambda _f: reentered.append(eng.backlog("a")))
+        eng.start()
+        eng.flush(timeout=FLUSH_S)   # deadlock here = regression
+        assert len(reentered) == 2
+
+    # retire()'s cancel path must be lock-free for callbacks too (paused:
+    # the window is guaranteed still queued when retire cancels it)
+    with AsyncStreamEngine(cfg, im, n_slots=1, paused=True) as eng:
+        eng.admit("a", task_w)
+        fut = eng.submit("a", steps[0][0][0], steps[0][1][0], steps[0][2][0])
+        fut.add_done_callback(lambda _f: reentered.append(eng.stats.dropped))
+        eng.retire("a")
+        assert fut.cancelled() and len(reentered) == 3
+        eng.start()   # context exit close() joins started threads
+
+
+def test_worker_error_surfaces_on_flush():
+    """A poisoned submission kills the dispatcher; flush and later submits
+    raise instead of deadlocking, and queued futures are failed."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    steps = _make_inputs(cfg, 1, 1)
+    q, v, b, _qd = steps[0]
+
+    eng = AsyncStreamEngine(cfg, im, n_slots=1, paused=True)
+    eng.admit("a", np.zeros((cfg.M,), np.float32))
+    fut = eng.submit("a", q[0], v[0], b[0])
+    # poison the queue directly: wrong-shaped window arrays (un-broadcastable)
+    bad = eng.submit("a", q[0][:, :4], v[0], b[0])
+    eng.start()
+    with pytest.raises(RuntimeError, match="worker died"):
+        eng.flush(timeout=FLUSH_S)
+    with pytest.raises(Exception):
+        bad.result(timeout=10)
+    del fut
+    with pytest.raises(RuntimeError, match="worker died"):
+        eng.close()              # drain re-raises, but threads are released
+    assert not eng._dispatcher.is_alive() and not eng._collector.is_alive()

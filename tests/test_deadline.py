@@ -1,0 +1,109 @@
+"""RT-deadline admission control: pure decision table + tracker accounting.
+
+The decision function is pure in (wait, backlog, step_ema, policy), so the
+miss/shed/escalate semantics are table-driven; the tracker's clock is
+injected so completion/miss accounting is deterministic.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import rt_budget_s
+from repro.perf.cycle_model import latency_summary
+from repro.serving.deadline import (Decision, DeadlinePolicy, DeadlineTracker,
+                                    WindowShed, decide, policy_for)
+
+MS = 1e-3
+# RT-60-shaped test policy: ~16.7 ms budget, 8 ms escalate margin
+POL = DeadlinePolicy(budget_s=16 * MS, escalate_margin_s=8 * MS)
+
+# (wait_ms, backlog, step_ms, expected) — the admission decision table
+DECISION_TABLE = [
+    # comfortably early, empty queue -> admit
+    (0.0, 0, 1.0, Decision.ADMIT),
+    (5.0, 0, 5.0, Decision.ADMIT),
+    # exactly on budget (lateness == 0) -> still admitted
+    (15.0, 0, 1.0, Decision.ADMIT),
+    # just past the deadline but within the escalate margin -> escalate
+    (16.0, 0, 1.0, Decision.ESCALATE),
+    (20.0, 0, 2.0, Decision.ESCALATE),
+    # on time itself, but the backlog behind projects over budget -> escalate
+    (0.0, 4, 5.0, Decision.ESCALATE),     # 0 + 5*5 = 25 > 16
+    (0.0, 2, 5.0, Decision.ADMIT),        # 0 + 3*5 = 15 <= 16
+    # hopelessly late (lateness > margin) -> shed
+    (30.0, 0, 1.0, Decision.SHED),
+    (10.0, 0, 20.0, Decision.SHED),
+    # zero step estimate (no step observed yet): only wait counts
+    (17.0, 0, 0.0, Decision.ESCALATE),
+    (40.0, 0, 0.0, Decision.SHED),
+]
+
+
+@pytest.mark.parametrize("wait_ms,backlog,step_ms,expected", DECISION_TABLE)
+def test_decision_table(wait_ms, backlog, step_ms, expected):
+    got = decide(wait_ms * MS, backlog, step_ms * MS, POL)
+    assert got == expected
+
+
+def test_shed_disabled_escalates_instead():
+    pol = DeadlinePolicy(budget_s=16 * MS, escalate_margin_s=8 * MS,
+                         allow_shed=False)
+    assert decide(30 * MS, 0, 1 * MS, pol) == Decision.ESCALATE
+
+
+def test_policy_for_rt_operating_points():
+    assert policy_for("RT-60").budget_s == pytest.approx(1 / 60)
+    assert policy_for("RT-30").budget_s == pytest.approx(1 / 30)
+    assert policy_for("RT-30").escalate_margin_s == pytest.approx(0.5 / 30)
+    assert policy_for("RT-60", allow_shed=False).allow_shed is False
+    with pytest.raises(ValueError):
+        rt_budget_s("RT-15")
+
+
+def test_tracker_step_ema_and_decisions():
+    t = DeadlineTracker(POL, clock=lambda: 0.0)
+    assert t.step_ema_s == 0.0
+    t.observe_step(10 * MS)            # first sample seeds the EMA
+    assert t.step_ema_s == pytest.approx(10 * MS)
+    t.observe_step(20 * MS)            # EMA with alpha=0.25
+    assert t.step_ema_s == pytest.approx(0.75 * 10 * MS + 0.25 * 20 * MS)
+
+    # head arrived at -30ms -> wait 30ms, step ~12.5ms -> hopeless -> shed
+    assert t.decide_head(-30 * MS, 0, now=0.0) == Decision.SHED
+    assert t.shed == 1
+    # fresh head, small backlog -> admit
+    assert t.decide_head(0.0, 0, now=0.0) == Decision.ADMIT
+    # fresh head, deep backlog -> escalate
+    assert t.decide_head(0.0, 5, now=0.0) == Decision.ESCALATE
+    assert t.escalated == 1
+
+
+def test_tracker_completion_and_miss_accounting():
+    t = DeadlineTracker(POL, clock=lambda: 0.0)
+    lats_ms = [5, 10, 12, 18, 40]      # 2 of 5 over the 16 ms budget
+    for lat in lats_ms:
+        t.complete(arrival_s=-lat * MS, now=0.0)
+    assert t.completed == 5
+    assert t.missed == 2
+    s = t.summary()
+    assert s["miss_count"] == 2
+    assert s["miss_rate"] == pytest.approx(2 / 5)
+    assert s["median_ms"] == pytest.approx(12.0)
+    assert s["n_windows"] == 5
+    # same vocabulary as the cycle model's envelope summaries
+    sim_keys = set(latency_summary(np.array([1.0]), 1.0))
+    assert sim_keys <= set(s)
+
+
+def test_latency_summary_empty_and_jitter():
+    s = latency_summary(np.array([]), 1 / 60)
+    assert s["n_windows"] == 0 and s["miss_rate"] == 0.0
+    lat = np.array([10.0, 10.0, 10.0, 10.0, 30.0]) * MS
+    s = latency_summary(lat, 16 * MS)
+    assert s["jitter_ms"] == pytest.approx(s["p95_ms"] - s["median_ms"])
+    assert s["miss_rate"] == pytest.approx(1 / 5)
+
+
+def test_window_shed_message_carries_context():
+    e = WindowShed("cam3", 0.0123)
+    assert "cam3" in str(e) and "12.30 ms" in str(e)
+    assert e.lateness_s == pytest.approx(0.0123)

@@ -143,6 +143,39 @@ def test_engine_admit_retire_isolation():
     assert (np.asarray(tel_b.path)[valid] == 2).all()
 
 
+def test_retire_drops_unpopped_backlog():
+    """A retired stream's queued windows must die with it: the recycled
+    slot serves only the new stream's windows (no cross-stream backlog
+    leak), and admission asserts the queue came back empty."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,)))
+    q = np.asarray(jax.vmap(hdc.pack_bits)(
+        hdc.random_hv(jax.random.PRNGKey(2), (cfg.N_max, cfg.D))))
+    valid = np.ones((cfg.N_max,), bool)
+    boxes = np.zeros((cfg.N_max, 4), np.float32)
+
+    eng = StreamEngine(cfg, im, n_slots=1)
+    eng.admit("a", task_w)
+    for _ in range(3):
+        eng.submit("a", q, valid, boxes)
+    eng.retire("a")                     # 3 windows still queued
+    assert eng.stats.dropped == 3
+    assert not eng.busy
+
+    eng.admit("b", task_w)              # asserts the recycled queue is empty
+    eng.submit("b", q, valid, boxes)
+    res = eng.drain()
+    assert list(res) == ["b"] and len(res["b"]) == 1
+    assert eng.stats.windows == 1       # none of a's backlog was served
+
+    # a leaked backlog (simulated) trips the clean re-admission assertion
+    eng.retire("b")
+    eng._pending[0].append((q, valid, boxes))
+    with pytest.raises(AssertionError, match="leaked"):
+        eng.admit("c", task_w)
+
+
 def test_engine_slot_exhaustion_and_double_admit():
     cfg = CFG
     im = random_item_memory(jax.random.PRNGKey(0), cfg)
