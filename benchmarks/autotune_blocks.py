@@ -1,0 +1,97 @@
+"""Autotune the batched XNOR-popcount kernel's TQ/TM block shapes.
+
+Closes the ROADMAP item: the ``TORR_TQ``/``TORR_TM`` env overrides (read
+once at import by ``repro.kernels.xnor_popcount_sim``) make the block-shape
+sweep a no-code-edit loop — so this benchmark runs each (tq, tm) candidate
+in a fresh subprocess (the only way to re-read the env), times the batched
+``packed_hamming_batched`` kernel on a multi-stream-shaped workload, and
+emits the winning shapes as a JSON artifact::
+
+    {"best": {"tq": .., "tm": ..}, "grid": [{"tq":..,"tm":..,"us":..}, ..],
+     "workload": {"N": .., "M": .., "D": ..}, "backend": "cpu-interpret"}
+
+Artifact path: ``TORR_AUTOTUNE_OUT`` env var, default
+``autotune_blocks.json`` in the working directory. On real TPU run the same
+sweep with a denser grid (the module docstring of ``xnor_popcount_sim``
+suggests TQ in {8,16,32} x TM in {128,256,512}); the defaults here are kept
+small so the CPU interpret-mode suite stays fast.
+
+Rows: ``autotune/tq<tq>_tm<tm>, <us>, us`` per candidate plus
+``autotune/best, <us>, tq=..|tm=..``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# the child re-imports the kernel module under the swept env overrides and
+# prints one JSON line with the measured per-call latency
+_CHILD = """
+import json, time
+import jax
+from repro.core import hdc
+from repro.kernels.xnor_popcount_sim import (TM_DEFAULT, TQ_DEFAULT,
+                                             packed_hamming_batched)
+
+N, M, D = {N}, {M}, {D}
+q = hdc.pack_bits(hdc.random_hv(jax.random.PRNGKey(0), (N, D)))
+h = hdc.pack_bits(hdc.random_hv(jax.random.PRNGKey(1), (M, D)))
+fn = lambda: packed_hamming_batched(q, h)
+jax.block_until_ready(fn())              # compile
+t0 = time.perf_counter()
+iters = {iters}
+for _ in range(iters):
+    out = fn()
+jax.block_until_ready(out)
+us = (time.perf_counter() - t0) / iters * 1e6
+print(json.dumps(dict(tq=TQ_DEFAULT, tm=TM_DEFAULT, us=us)))
+"""
+
+
+def _time_combo(tq: int, tm: int, N: int, M: int, D: int,
+                iters: int) -> dict:
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu",
+               TORR_TQ=str(tq), TORR_TM=str(tm))
+    code = _CHILD.format(N=N, M=M, D=D, iters=iters)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"autotune child (tq={tq}, tm={tm}) failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(tq_grid=(8, 16), tm_grid=(64, 128), N: int = 16, M: int = 256,
+        D: int = 4096, iters: int = 3) -> list[tuple]:
+    """Sweep the grid, report each candidate, persist the best as JSON."""
+    grid = []
+    for tq in tq_grid:
+        for tm in tm_grid:
+            r = _time_combo(tq, tm, N, M, D, iters)
+            grid.append(r)
+    best = min(grid, key=lambda r: r["us"])
+
+    artifact = {
+        "best": {"tq": best["tq"], "tm": best["tm"]},
+        "grid": grid,
+        "workload": {"N": N, "M": M, "D": D, "iters": iters},
+        "backend": "cpu-interpret",
+    }
+    out_path = os.environ.get("TORR_AUTOTUNE_OUT", "autotune_blocks.json")
+    with open(out_path, "w") as f:
+        json.dump(artifact, f, indent=1, sort_keys=True)
+
+    rows = [(f"autotune/tq{r['tq']}_tm{r['tm']}", round(r["us"], 1), "us")
+            for r in grid]
+    rows.append(("autotune/best", round(best["us"], 1),
+                 f"tq={best['tq']}|tm={best['tm']}|json={out_path}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

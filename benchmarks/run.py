@@ -21,14 +21,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write results as JSON to PATH")
-    ap.add_argument("--only", default="", metavar="NAME",
-                    help="run a single suite (e.g. table7)")
+    ap.add_argument("--only", default="", metavar="NAMES",
+                    help="run a comma-separated subset of suites "
+                         "(e.g. table7,table8)")
     args = ap.parse_args()
 
-    from . import (micro_aligner, roofline_summary, table1_hw,
-                   table2_envelope, table3_runtime, table4_throughput,
-                   table5_accuracy, table6_multistream, table7_async,
-                   torr_reuse_ablation)
+    from . import (autotune_blocks, micro_aligner, roofline_summary,
+                   table1_hw, table2_envelope, table3_runtime,
+                   table4_throughput, table5_accuracy, table6_multistream,
+                   table7_async, table8_pareto, torr_reuse_ablation)
 
     suites = [
         ("table1", table1_hw.run),
@@ -38,15 +39,19 @@ def main() -> None:
         ("table5", table5_accuracy.run),
         ("table6", table6_multistream.run),
         ("table7", table7_async.run),
+        ("table8", table8_pareto.run),
         ("torr_ablation", torr_reuse_ablation.run),
         ("micro", micro_aligner.run),
+        ("autotune", autotune_blocks.run),
         ("roofline", roofline_summary.run),
     ]
     if args.only:
-        suites = [(n, f) for n, f in suites if n == args.only]
-        if not suites:
-            print(f"unknown suite {args.only!r}", file=sys.stderr)
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = set(names) - {n for n, _ in suites}
+        if unknown:
+            print(f"unknown suite(s) {sorted(unknown)}", file=sys.stderr)
             sys.exit(2)
+        suites = [(n, f) for n, f in suites if n in names]
     failed = []
     report = {}
     print("name,value,derived")

@@ -1,0 +1,173 @@
+"""Table 8 (beyond paper): governor on/off Pareto sweep under a load ramp.
+
+Drives the *actual* closed-loop QoS governor (``repro.control``) through the
+cycle-accurate model of the paper's accelerator (``repro.perf.cycle_model``)
+on a synthetic load ramp — light traffic, a steep climb to N_max proposals,
+then sustained overload — and compares three operating modes per RT target:
+
+  * ``full``     — always-full D' (banks=B, all bit planes): no gating at
+    all; the energy ceiling.
+  * ``static``   — the deployment-time configuration the repo had before
+    the control plane: D' solved *once* against the nominal (ramp-start)
+    load via the shared Sec. 4.3 cost helper, then held fixed. Misses
+    deadlines once the ramp exceeds its design point.
+  * ``governor`` — the closed loop: projected slack + backlog + EWMA
+    energy pick a knob plan per window (bank cap, bit-slice precision,
+    tau offsets); hysteresis widens D' back out when the ramp relaxes.
+    ``governor+e`` additionally arms the energy budget at the paper's
+    operating point (~50 mJ @ RT-60, ~113 mJ @ RT-30).
+
+Latency follows a work-conserving single server: windows arrive on the
+frame period, backlog carries over, and a window's latency is its queue
+wait plus modeled service time. Energy is the cycle model's frame-locked
+mJ/window (duty-cycled block powers at the D' each window actually ran).
+
+Rows: ``table8/<rt>_<mode>, <mJ/window>, miss_rate=..|p99_ms=..|
+banks=..|planes=..`` plus the two paper operating-point rows. The
+acceptance claim (ISSUE 3) reads off directly: under the ramp, ``static``
+misses deadlines, ``governor`` holds miss_rate ~0 at lower mJ than
+``full``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.torr_edge import rt_budget_s, torr_edge
+from repro.control import Governor, GovernorPolicy, full_plan
+from repro.core.policy import window_cycles_deff
+from repro.core.types import PATH_BYPASS
+from repro.perf.cycle_model import (ENCODER_CYCLES_PER_PROPOSAL,
+                                    HOST_OVERHEAD_CYCLES, path_mix,
+                                    window_cost)
+
+PAPER_MJ = {"RT-60": 50.0, "RT-30": 113.0}
+N_NOMINAL = 80   # the static config's design-point load (ramp-start mean)
+
+
+def _ramp(n_frames: int, n_max: int, rng) -> np.ndarray:
+    """Proposal counts: nominal third, steep climb, sustained overload."""
+    third = n_frames // 3
+    nominal = rng.normal(N_NOMINAL, 6, third)
+    climb = np.linspace(N_NOMINAL, n_max, third) + rng.normal(0, 4, third)
+    peak = rng.normal(0.97 * n_max, 3, n_frames - 2 * third)
+    return np.clip(np.concatenate([nominal, climb, peak]), 4, n_max).astype(int)
+
+
+def _static_banks(cfg, n_nominal: int, window_scale: float) -> int:
+    """Deployment-time D' solve at the design-point load: the largest banks
+    whose worst (all-full) window — shared Sec. 4.3 aligner math plus the
+    fixed encoder/host overheads — fits the budget. Solved once, held
+    forever: exactly the static knob the repo had before the control plane."""
+    fixed = (n_nominal * ENCODER_CYCLES_PER_PROPOSAL
+             + HOST_OVERHEAD_CYCLES) * window_scale
+    for b in range(cfg.B, 0, -1):
+        worst = window_cycles_deff(n_nominal, 0, b * cfg.bank_dims, cfg)
+        if worst + fixed <= cfg.cycles_per_window_budget:
+            return b
+    return 1
+
+
+def simulate(rt: str, mode: str, n_frames: int = 240, seed: int = 0,
+             energy_budget_mj: float | None = None) -> dict:
+    """One mode's trip through the load ramp; cycle-model-priced."""
+    cfg = torr_edge(rt)
+    budget = rt_budget_s(rt)
+    window_scale = 60.0 * budget           # 1.0 @ RT-60, 2.0 @ RT-30
+    rng = np.random.default_rng(seed)
+    ns = _ramp(n_frames, cfg.N_max, rng)
+
+    gov = None
+    if mode == "governor":
+        gov = Governor(cfg, GovernorPolicy(
+            budget_s=budget, energy_budget_mj=energy_budget_mj))
+    static_b = _static_banks(cfg, N_NOMINAL, window_scale)
+
+    plan = full_plan(cfg)
+    backlog_s = 0.0
+    step_ema = 0.0
+    lat, energy, banks_hist, planes_hist = [], [], [], []
+    for n in ns:
+        backlog_w = int(np.ceil(backlog_s / budget))
+        if gov is not None:
+            plan = gov.update(budget - backlog_s, step_ema,
+                              backlog=backlog_w)
+
+        if mode == "full":
+            banks, planes = cfg.B, cfg.bit_planes
+        elif mode == "static":
+            banks, planes = static_b, cfg.bit_planes
+        else:
+            banks, planes = plan.banks, plan.planes
+        d_eff = int(cfg.d_eff_planned(banks, planes))
+        ecfg = plan.thresholds(cfg) if gov is not None else cfg
+
+        # temporally coherent traffic whose *churn* (new objects: low rho,
+        # full path) climbs with load — the clutter that makes the ramp a
+        # ramp: at the peak most proposals need a full D'-wide scan
+        rho = np.clip(rng.normal(0.88, 0.05, n), -1, 1)
+        churn = 0.05 + 0.65 * (n / cfg.N_max) ** 2
+        new_obj = rng.random(n) < churn
+        rho = np.where(new_obj, rng.uniform(-0.1, 0.4, n), rho)
+        delta = np.round((1 - rho) / 2 * d_eff).astype(int)
+        high = n >= ecfg.N_hi or backlog_w >= ecfg.q_hi
+        path = path_mix(rho, delta, bool(high), ecfg)
+        reasoner = (path != PATH_BYPASS) & (rho < 0.97)
+
+        wc = window_cost(path, delta, banks, reasoner, int(n), cfg, budget,
+                         window_scale=window_scale, d_eff=d_eff)
+        t_win = wc.total_cycles / cfg.clock_hz
+        lat.append(backlog_s + t_win)        # queue wait + service
+        backlog_s = max(0.0, backlog_s + t_win - budget)
+        step_ema = t_win if step_ema <= 0 else 0.75 * step_ema + 0.25 * t_win
+        energy.append(wc.energy_j * 1e3)
+        banks_hist.append(banks)
+        planes_hist.append(planes)
+        if gov is not None:
+            gov.observe_energy(wc.energy_j * 1e3)
+
+    lat = np.asarray(lat)
+    out = {
+        "rt": rt, "mode": mode,
+        "miss_rate": float(np.mean(lat > budget)),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "energy_mj": float(np.mean(energy)),
+        "banks_mean": float(np.mean(banks_hist)),
+        "planes_mean": float(np.mean(planes_hist)),
+    }
+    if gov is not None:
+        out["plan_switches"] = gov.switches
+    return out
+
+
+def run(n_frames: int = 240) -> list[tuple]:
+    rows = []
+    for rt in ("RT-60", "RT-30"):
+        results = {}
+        for mode, ebudget in (("full", None), ("static", None),
+                              ("governor", None),
+                              ("governor+e", PAPER_MJ[rt])):
+            r = simulate(rt, mode.replace("+e", "") if "+e" in mode
+                         else mode, n_frames=n_frames,
+                         energy_budget_mj=ebudget)
+            results[mode] = r
+            derived = (f"miss_rate={r['miss_rate']:.3f}"
+                       f"|p99_ms={r['p99_ms']:.2f}"
+                       f"|banks={r['banks_mean']:.2f}"
+                       f"|planes={r['planes_mean']:.2f}")
+            if "plan_switches" in r:
+                derived += f"|switches={r['plan_switches']}"
+            rows.append((f"table8/{rt}_{mode}", round(r["energy_mj"], 1),
+                         derived))
+        # the paper's operating point is the mJ-budgeted deployment: the
+        # governor pinned to the paper's energy target at that RT rate
+        rows.append((
+            f"table8/operating_point_{rt}",
+            round(results["governor+e"]["energy_mj"], 1),
+            f"paper ~{PAPER_MJ[rt]:.0f} mJ @ {rt[3:]} FPS",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,18 @@
+"""Closed-loop QoS control plane: slack-driven knob plans + energy governor.
+
+Sits between serving telemetry (``repro.serving.deadline``) and the compute
+path (``repro.core.pipeline`` / ``repro.kernels.ops``): the
+:class:`~repro.control.governor.Governor` turns projected deadline slack,
+queue depth and an EWMA of modeled window energy into a
+:class:`~repro.control.plan.KnobPlan` (D' cap, bit-slice precision, tau
+offsets) that the engines latch host-side per dispatched step.
+"""
+from .governor import (Governor, GovernorPolicy, build_ladder,
+                       ladder_rel_cost, plan_level, policy_for,
+                       policy_from_env)
+from .plan import KnobPlan, full_plan
+
+__all__ = [
+    "Governor", "GovernorPolicy", "KnobPlan", "build_ladder", "full_plan",
+    "ladder_rel_cost", "plan_level", "policy_for", "policy_from_env",
+]

@@ -1,7 +1,7 @@
 """Banked, bit-sliced item memory (paper Sec. 4.1/4.3).
 
 The ASIC stores M concept hypervectors bit-sliced across B SRAM banks with
-per-bank enables realizing the effective dimension D'. On TPU we keep three
+per-bank enables realizing the effective dimension D'. On TPU we keep four
 coherent views, each matched to an access pattern:
 
   * ``bipolar``  int8  [M, D]   — source of truth (training / prototypes)
@@ -9,9 +9,21 @@ coherent views, each matched to an access pattern:
     contiguous 32-bit word ranges, so D' gating is a *prefix* of words:
     words_eff = banks * bank_words. We mask (functional mode) or slice
     (kernel specialization) that prefix.
+  * ``pmajor``   uint32 [M, D/32] — the same packed words reordered
+    *bit-plane-major*: word w belongs to plane ``w % bit_planes`` and the
+    planes are laid out contiguously (plane 0 first). Precision gating —
+    the QoS governor dropping low-order planes under pressure — then reads
+    a per-plane-block prefix instead of gathering strided columns, the TPU
+    analogue of simply not reading the low-order bit-slice SRAMs.
   * ``dmajor``   int8  [D, M]   — delta path: one flipped dimension i reads
     the contiguous row dmajor[i, :], the TPU analogue of the ASIC's
     column-broadcast to W class lanes.
+
+Because every bank's words are striped uniformly across the planes
+(``bank_words % bit_planes == 0``, enforced by ``TorrConfig``), bank gating
+and plane gating compose: the dims enabled by a (banks, planes) knob plan
+are exactly ``{d : word(d) < banks * bank_words  and  word(d) % P < planes}``
+with ``d_eff = banks * bank_dims * planes / P``.
 
 All views are derived from ``bipolar`` by :func:`build_item_memory`; they are
 plain pytree leaves so the structure shards/jits cleanly.
@@ -22,6 +34,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import hdc
 from .types import TorrConfig
@@ -33,6 +46,7 @@ class ItemMemory:
     bipolar: jax.Array   # int8  [M, D]
     packed: jax.Array    # uint32 [M, D//32]
     dmajor: jax.Array    # int8  [D, M]
+    pmajor: jax.Array    # uint32 [M, D//32] plane-major word order
 
     @property
     def M(self) -> int:
@@ -43,7 +57,7 @@ class ItemMemory:
         return self.bipolar.shape[1]
 
     def tree_flatten(self):
-        return ((self.bipolar, self.packed, self.dmajor), None)
+        return ((self.bipolar, self.packed, self.dmajor, self.pmajor), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -51,22 +65,66 @@ class ItemMemory:
         return cls(*children)
 
 
-def build_item_memory(bipolar: jax.Array) -> ItemMemory:
-    """Derive all access-pattern views from bipolar codes [M, D]."""
+def plane_permutation(words: int, plane_total: int) -> np.ndarray:
+    """Word permutation packed -> plane-major: plane p's words (w % P == p)
+    first, ascending within each plane block. Static (trace-time) numpy."""
+    order = np.concatenate([
+        np.arange(p, words, plane_total) for p in range(plane_total)
+    ])
+    return order.astype(np.int32)
+
+
+def plane_sel(limit_words: int, planes: int, plane_total: int) -> np.ndarray:
+    """Static indices of the enabled words among the first ``limit_words``
+    packed words (a bank prefix), keeping ``planes`` of ``plane_total``
+    bit-slice planes — in *plane-major* order, i.e. the column order of a
+    contiguous per-plane-block prefix slice of ``pmajor``."""
+    sel = np.concatenate([
+        np.arange(p, limit_words, plane_total) for p in range(planes)
+    ])
+    return sel.astype(np.int32)
+
+
+def plan_word_sel(cfg: TorrConfig, banks: int, planes: int) -> np.ndarray:
+    """Static enabled-word indices for a (banks, planes) plan, plane-major.
+    Used by the host-latched kernel wrappers (``kernels.ops``), where the
+    plan is static."""
+    return plane_sel(banks * cfg.bank_words, planes, cfg.bit_planes)
+
+
+def build_item_memory(bipolar: jax.Array, plane_total: int = 4) -> ItemMemory:
+    """Derive all access-pattern views from bipolar codes [M, D].
+
+    ``plane_total`` sets the bit-slice grain of the ``pmajor`` view and must
+    match the consuming config's ``bit_planes`` (pass it explicitly when the
+    config is at hand) — a pmajor striped at the wrong grain would silently
+    select the wrong columns under precision gating, so a non-dividing
+    grain is an error, not a fallback.
+    """
+    packed = hdc.pack_bits(bipolar)
+    words = packed.shape[-1]
+    if words % plane_total:
+        raise ValueError(
+            f"plane_total={plane_total} does not divide the packed word "
+            f"count {words} (D={32 * words})")
+    perm = plane_permutation(words, plane_total)
     return ItemMemory(
         bipolar=bipolar.astype(jnp.int8),
-        packed=hdc.pack_bits(bipolar),
+        packed=packed,
         dmajor=jnp.transpose(bipolar).astype(jnp.int8),
+        pmajor=packed[:, perm],
     )
 
 
 def random_item_memory(key: jax.Array, cfg: TorrConfig) -> ItemMemory:
     """Random concept codes (the classic HDC item memory)."""
-    return build_item_memory(hdc.random_hv(key, (cfg.M, cfg.D)))
+    return build_item_memory(hdc.random_hv(key, (cfg.M, cfg.D)),
+                             plane_total=cfg.bit_planes)
 
 
 def item_memory_from_prototypes(
-    feats: jax.Array, R: jax.Array, key: jax.Array | None = None
+    feats: jax.Array, R: jax.Array, key: jax.Array | None = None,
+    plane_total: int = 4,
 ) -> ItemMemory:
     """Class prototypes: bundle sign-projected examples per class.
 
@@ -81,7 +139,7 @@ def item_memory_from_prototypes(
     else:
         keys = jax.random.split(key, M)
         bundled = jax.vmap(hdc.bundle)(hv, keys)
-    return build_item_memory(bundled)
+    return build_item_memory(bundled, plane_total=plane_total)
 
 
 def word_mask(cfg: TorrConfig, banks: jax.Array | int) -> jax.Array:
@@ -90,7 +148,34 @@ def word_mask(cfg: TorrConfig, banks: jax.Array | int) -> jax.Array:
     return jnp.arange(cfg.words, dtype=jnp.int32) < words_eff
 
 
+def plan_word_mask(
+    cfg: TorrConfig, banks: jax.Array | int, planes: int
+) -> jax.Array:
+    """Boolean mask [D//32] of words enabled by a (banks, planes) plan.
+
+    ``planes`` is static (the plan is host-latched); with all planes kept
+    this constant-folds to :func:`word_mask` bit-for-bit.
+    """
+    wm = word_mask(cfg, banks)
+    if planes >= cfg.bit_planes:
+        return wm
+    plane_of = jnp.arange(cfg.words, dtype=jnp.int32) % cfg.bit_planes
+    return jnp.logical_and(wm, plane_of < planes)
+
+
 def dim_mask(cfg: TorrConfig, banks: jax.Array | int) -> jax.Array:
     """Boolean mask [D] of dimensions enabled by ``banks`` banks."""
     d_eff = jnp.asarray(banks, jnp.int32) * cfg.bank_dims
     return jnp.arange(cfg.D, dtype=jnp.int32) < d_eff
+
+
+def plan_dim_mask(
+    cfg: TorrConfig, banks: jax.Array | int, planes: int
+) -> jax.Array:
+    """Boolean mask [D] of dimensions enabled by a (banks, planes) plan —
+    the oracle-side statement of the plan (tests mask bipolar dims with it)."""
+    word_of = jnp.arange(cfg.D, dtype=jnp.int32) // 32
+    dm = dim_mask(cfg, banks)
+    if planes >= cfg.bit_planes:
+        return dm
+    return jnp.logical_and(dm, (word_of % cfg.bit_planes) < planes)

@@ -23,9 +23,10 @@ import jax.numpy as jnp
 
 from . import aligner as al
 from . import policy, query_cache, reasoner
-from .item_memory import ItemMemory, word_mask
+from .item_memory import ItemMemory, plan_word_mask
 from .query_cache import CacheState
-from .types import PATH_BYPASS, StreamBatch, TorrConfig, WindowTelemetry
+from .types import (PATH_BYPASS, StreamBatch, TorrConfig, WindowTelemetry,
+                    plan_tag)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -63,18 +64,23 @@ class WindowOutput:
         return cls(*children)
 
 
-def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, wmask, high):
+def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, planes,
+                   wmask, high):
     """Scan body over proposals for a fixed window context (all closures are
-    window-constant traced values)."""
-    d_eff = banks * cfg.bank_dims
+    window-constant traced values; ``planes`` is static — the latched plan)."""
+    d_eff = cfg.d_eff_planned(banks, planes)
+    tag = plan_tag(banks, planes)
 
     def body(cache: CacheState, inp):
         q_packed, valid = inp
-        idx, rho, _ham = query_cache.nearest(cache, q_packed, cfg, banks)
+        idx, rho, _ham = query_cache.nearest(cache, q_packed, cfg, banks,
+                                             planes)
         d_idx, d_weight, d_count = al.delta_indices(
             q_packed, cache.packed[idx], wmask, cfg.delta_budget, cfg.D
         )
-        tag_ok = cache.acc_banks[idx] == banks
+        # Eq. 6 exactness: the cached accumulator is only delta-correctable
+        # under the exact (banks, planes) it was computed with
+        tag_ok = cache.acc_tag[idx] == tag
         action = policy.select_path(rho, d_count, tag_ok, high, cfg)
 
         def bypass_branch(cache):
@@ -89,7 +95,7 @@ def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, wmask, high):
                 cache.margin[idx], cfg,
             )
             cache = query_cache.write_entry(
-                cache, idx, packed=q_packed, acc=acc, acc_banks=banks,
+                cache, idx, packed=q_packed, acc=acc, acc_tag=tag,
                 out=out, topk_key=key, margin=margin,
             )
             return cache, out, active
@@ -103,7 +109,7 @@ def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, wmask, high):
             )
             slot = query_cache.lru_slot(cache)
             cache = query_cache.write_entry(
-                cache, slot, packed=q_packed, acc=acc, acc_banks=banks,
+                cache, slot, packed=q_packed, acc=acc, acc_tag=tag,
                 out=out, topk_key=key, margin=margin,
             )
             return cache, out, active
@@ -131,14 +137,31 @@ def torr_window_step(
     boxes: jax.Array,          # f32 [N_max, 4]
     queue_depth: jax.Array,    # int32 []
     cfg: TorrConfig,
+    plan=None,                 # static KnobPlan (None = uncontrolled)
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
-    """Process one window; returns (new_state, detections, telemetry)."""
+    """Process one window; returns (new_state, detections, telemetry).
+
+    ``plan`` is a static :class:`repro.control.plan.KnobPlan` latched by the
+    QoS control plane: it caps Alg. 1's bank choice (``min`` — the full cap
+    is a bit-exact no-op), selects the bit-slice planes the scans read, and
+    offsets the tau thresholds. ``plan=None`` (or the full plan) reproduces
+    the uncontrolled step bit-for-bit.
+    """
+    if plan is None:
+        planes = cfg.bit_planes
+    else:
+        plan.validate(cfg)
+        planes = plan.planes
+        cfg = plan.thresholds(cfg)
     n_valid = jnp.sum(valid.astype(jnp.int32))
     high = policy.high_load(n_valid, queue_depth, cfg)
     banks = policy.select_banks(n_valid, queue_depth, cfg)
-    wmask = word_mask(cfg, banks)
+    if plan is not None and plan.banks < cfg.B:
+        banks = jnp.minimum(banks, jnp.int32(plan.banks))
+    wmask = plan_word_mask(cfg, banks, planes)
 
-    body = _proposal_body(cfg, im, state.task_weights, banks, wmask, high)
+    body = _proposal_body(cfg, im, state.task_weights, banks, planes, wmask,
+                          high)
     cache, (outs, telem) = jax.lax.scan(body, state.cache, (q_packed_all, valid))
 
     actions, d_counts, rhos, active = telem
@@ -153,6 +176,7 @@ def torr_window_step(
         reasoner_active=jnp.logical_and(active, valid),
         queue_depth=jnp.asarray(queue_depth, jnp.int32),
         high_load=high,
+        planes=jnp.int32(planes),
     )
     out = WindowOutput(
         scores=outs,
@@ -190,8 +214,13 @@ def torr_multi_stream_step(
     queue_depth: jax.Array,    # int32 [S] per-stream backlog
     cfg: TorrConfig,
     serial: bool = False,      # static: lax.map instead of vmap
+    plan=None,                 # static KnobPlan shared by all S windows
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """One compiled step over S streams' windows.
+
+    All S windows of one batched step share the latched ``plan`` (the
+    window-latched register analogue: one plan per dispatch); each window's
+    telemetry still records it individually.
 
     Semantically identical to running ``torr_window_step`` once per stream:
     each slot keeps its own cache, task weights and queue depth, so Alg. 1's
@@ -214,12 +243,12 @@ def torr_multi_stream_step(
     if serial:
         def body(args):
             st, q, v, b, qd = args
-            return torr_window_step(st, im, q, v, b, qd, cfg)
+            return torr_window_step(st, im, q, v, b, qd, cfg, plan=plan)
 
         return jax.lax.map(
             body, (state, q_packed_all, valid, boxes, queue_depth)
         )
-    step = functools.partial(torr_window_step, cfg=cfg)
+    step = functools.partial(torr_window_step, cfg=cfg, plan=plan)
     return jax.vmap(step, in_axes=(0, None, 0, 0, 0, 0))(
         state, im, q_packed_all, valid, boxes, queue_depth
     )
@@ -227,10 +256,10 @@ def torr_multi_stream_step(
 
 def torr_stream_batch_step(
     state: TorrState, im: ItemMemory, batch: StreamBatch, cfg: TorrConfig,
-    serial: bool = False,
+    serial: bool = False, plan=None,
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """`torr_multi_stream_step` over a packed :class:`StreamBatch`."""
     return torr_multi_stream_step(
         state, im, batch.q_packed, batch.valid, batch.boxes,
-        batch.queue_depth, cfg, serial=serial,
+        batch.queue_depth, cfg, serial=serial, plan=plan,
     )

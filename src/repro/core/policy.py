@@ -42,6 +42,46 @@ def select_path(
     ).astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Shared Sec. 4.3 cycle-cost math. Alg. 1's bank selection (below), the QoS
+# governor (repro.control.governor) and the cycle-accurate simulator
+# (repro.perf.cycle_model) all price aligner work through these two helpers,
+# so the three consumers cannot drift apart. Plain arithmetic only: the same
+# code runs traced (jnp) inside jit and on host numpy/python ints.
+# ---------------------------------------------------------------------------
+
+PROPOSAL_OVERHEAD_CYCLES = 64  # pipelined PSU + reasoner + sort constant
+
+
+def mw_cycles(cfg: TorrConfig) -> int:
+    """ceil(M/W): cycles per broadcast column across the W class lanes."""
+    return -(-cfg.M // cfg.W)
+
+
+def aligner_cycles(n_full, delta_cols, d_eff, mw):
+    """Sec. 4.3 aligner core: a full scan costs D'*ceil(M/W); the delta path
+    one ceil(M/W) column-broadcast per corrected dimension (``delta_cols``
+    is the summed |Delta| over delta-path proposals)."""
+    return (n_full * d_eff + delta_cols) * mw
+
+
+def proposal_overhead(n_proposals, mw):
+    """Per-proposal pipelined PSU + reasoner + sort: ~M/W plus a constant."""
+    return n_proposals * (mw + PROPOSAL_OVERHEAD_CYCLES)
+
+
+def window_cycles_deff(
+    n_full, n_delta, d_eff, cfg: TorrConfig
+):
+    """Worst-case window cycles at an explicit effective dimension D'.
+
+    The governor prices (banks, bit-planes) knob plans through this — D'
+    under precision gating is not a whole number of banks."""
+    mw = mw_cycles(cfg)
+    return (aligner_cycles(n_full, n_delta * cfg.delta_budget, d_eff, mw)
+            + proposal_overhead(n_full + n_delta, mw))
+
+
 def window_cycles(
     n_full: jax.Array, n_delta: jax.Array, banks: jax.Array, cfg: TorrConfig
 ) -> jax.Array:
@@ -50,12 +90,7 @@ def window_cycles(
     A small fixed per-proposal overhead models PSU + reasoner + sort
     (each pipelined, ~M/W plus constant).
     """
-    mw = -(-cfg.M // cfg.W)  # ceil(M/W)
-    d_eff = banks * cfg.bank_dims
-    per_full = d_eff * mw
-    per_delta = cfg.delta_budget * mw
-    overhead = (n_full + n_delta) * (mw + 64)
-    return n_full * per_full + n_delta * per_delta + overhead
+    return window_cycles_deff(n_full, n_delta, banks * cfg.bank_dims, cfg)
 
 
 def select_banks(

@@ -3,8 +3,10 @@
 Each entry carries everything the three execution paths need:
 
   * the packed query hypervector (for the PSU's nearest-match + XOR),
-  * the integer per-class accumulator and the D' tag it was computed under
-    (delta corrections are only exact against the same enabled-bank set),
+  * the integer per-class accumulator and the plan tag it was computed under
+    (``types.plan_tag(banks, planes)``: delta corrections are only exact
+    against the same enabled dimensions, i.e. the same banks *and* the same
+    bit-slice planes),
   * the cached *final* output scores (for aggressive bypass),
   * the aligner top-k key + margin of the last window (reasoner gating),
   * age / validity bookkeeping for LRU refresh.
@@ -17,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from . import hdc
-from .item_memory import word_mask
+from .item_memory import plan_word_mask
 from .types import TorrConfig
 
 
@@ -26,7 +28,7 @@ from .types import TorrConfig
 class CacheState:
     packed: jax.Array     # uint32 [K, D//32] cached queries
     acc: jax.Array        # int32  [K, M] per-class dot accumulators
-    acc_banks: jax.Array  # int32  [K] D' tag (enabled banks) for acc
+    acc_tag: jax.Array    # int32  [K] plan tag (banks, planes) for acc
     out: jax.Array        # f32    [K, M] cached final (post-reasoner) scores
     topk_key: jax.Array   # int32  [K, top_k] aligner top-k indices last window
     margin: jax.Array     # f32    [K] aligner top-1/top-2 margin last window
@@ -35,7 +37,7 @@ class CacheState:
 
     def tree_flatten(self):
         return (
-            (self.packed, self.acc, self.acc_banks, self.out, self.topk_key,
+            (self.packed, self.acc, self.acc_tag, self.out, self.topk_key,
              self.margin, self.age, self.valid),
             None,
         )
@@ -51,7 +53,7 @@ def init_cache(cfg: TorrConfig) -> CacheState:
     return CacheState(
         packed=jnp.zeros((K, cfg.words), jnp.uint32),
         acc=jnp.zeros((K, cfg.M), jnp.int32),
-        acc_banks=jnp.zeros((K,), jnp.int32),
+        acc_tag=jnp.zeros((K,), jnp.int32),
         out=jnp.zeros((K, cfg.M), jnp.float32),
         topk_key=jnp.full((K, cfg.top_k), -1, jnp.int32),
         margin=jnp.zeros((K,), jnp.float32),
@@ -82,20 +84,24 @@ def reset_slot(cache: CacheState, cfg: TorrConfig, slot: int) -> CacheState:
 
 
 def nearest(
-    cache: CacheState, q_packed: jax.Array, cfg: TorrConfig, banks: jax.Array | int
+    cache: CacheState, q_packed: jax.Array, cfg: TorrConfig,
+    banks: jax.Array | int, planes: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Nearest cached query over enabled words.
+    """Nearest cached query over the dims a (banks, planes) plan enables.
 
     Returns (idx [] int32, rho [] f32 per Eq. 5, hamming [] int32).
-    Invalid entries are pushed to rho = -inf; if no entry is valid the caller
-    sees rho = -inf and takes the full path.
+    ``planes`` is the static bit-plane knob (None = all planes, the
+    pre-control-plane behavior). Invalid entries are pushed to rho = -inf;
+    if no entry is valid the caller sees rho = -inf and takes the full path.
     """
-    wmask = word_mask(cfg, banks)
+    planes = cfg.bit_planes if planes is None else planes
+    wmask = plan_word_mask(cfg, banks, planes)
     xor = jnp.bitwise_xor(cache.packed, q_packed[None, :])       # [K, W]
     pc = jax.lax.population_count(xor).astype(jnp.int32)
     pc = jnp.where(wmask[None, :], pc, 0)
     ham = jnp.sum(pc, axis=-1)                                    # [K]
-    d_eff = (jnp.asarray(banks, jnp.int32) * cfg.bank_dims).astype(jnp.float32)
+    d_eff = jnp.asarray(
+        cfg.d_eff_planned(jnp.asarray(banks, jnp.int32), planes), jnp.float32)
     rho = 1.0 - 2.0 * ham.astype(jnp.float32) / d_eff             # Eq. 5
     rho = jnp.where(cache.valid, rho, -jnp.inf)
     idx = jnp.argmax(rho)
@@ -114,7 +120,7 @@ def write_entry(
     *,
     packed: jax.Array,
     acc: jax.Array,
-    acc_banks: jax.Array,
+    acc_tag: jax.Array,
     out: jax.Array,
     topk_key: jax.Array,
     margin: jax.Array,
@@ -125,7 +131,7 @@ def write_entry(
     return CacheState(
         packed=cache.packed.at[slot].set(packed),
         acc=cache.acc.at[slot].set(acc),
-        acc_banks=cache.acc_banks.at[slot].set(jnp.asarray(acc_banks, jnp.int32)),
+        acc_tag=cache.acc_tag.at[slot].set(jnp.asarray(acc_tag, jnp.int32)),
         out=cache.out.at[slot].set(out),
         topk_key=cache.topk_key.at[slot].set(topk_key),
         margin=cache.margin.at[slot].set(margin),

@@ -46,6 +46,7 @@ class TorrConfig:
     W: int = 64              # class lanes in the associative aligner
     clock_hz: float = 1.0e9  # 1 GHz
     accum_bits: int = 8      # accumulator precision knob (int8; int4 has no TPU analogue)
+    bit_planes: int = 4      # bit-slice planes per bank (precision gating grain)
 
     # --- QoS ---------------------------------------------------------------
     fps_target: float = 60.0
@@ -55,6 +56,10 @@ class TorrConfig:
             raise ValueError(f"D={self.D} must be divisible by 32*B={32 * self.B}")
         if self.delta_budget % 8 != 0:
             raise ValueError("delta_budget must be a multiple of 8")
+        if self.bank_words % self.bit_planes != 0:
+            raise ValueError(
+                f"bank words D/(32B)={self.bank_words} must be divisible by "
+                f"bit_planes={self.bit_planes}")
 
     @property
     def words(self) -> int:
@@ -75,6 +80,22 @@ class TorrConfig:
         return banks * self.bank_dims
 
     @property
+    def plane_words(self) -> int:
+        """Packed words per bit-slice plane within one bank."""
+        return self.bank_words // self.bit_planes
+
+    @property
+    def plane_dims(self) -> int:
+        """Dimensions per bit-slice plane within one bank."""
+        return self.bank_dims // self.bit_planes
+
+    def d_eff_planned(
+        self, banks: jax.Array | int, planes: int
+    ) -> jax.Array | int:
+        """Effective dimension under combined bank + bit-plane gating."""
+        return banks * (self.plane_dims * planes)
+
+    @property
     def cycles_per_window_budget(self) -> float:
         return self.clock_hz / self.fps_target
 
@@ -84,6 +105,18 @@ PATH_BYPASS = 0
 PATH_DELTA = 1
 PATH_FULL = 2
 PATH_NAMES = ("bypass", "delta", "full")
+
+# The delta accumulator's exactness tag (Eq. 6): a delta correction is only
+# valid against an accumulator computed under the *same* enabled dimensions,
+# which under the QoS control plane means the same (banks, bit-planes) pair.
+# One int32 packs both so the cache carries a single tag per entry; 0 (the
+# init value) can never collide because banks >= 1 for any real scan.
+PLAN_TAG_BASE = 256
+
+
+def plan_tag(banks: jax.Array | int, planes: jax.Array | int):
+    """int32 tag for an accumulator computed under (banks, planes)."""
+    return banks * PLAN_TAG_BASE + planes
 
 
 @jax.tree_util.register_pytree_node_class
@@ -128,6 +161,9 @@ class WindowTelemetry:
     H(N, q) actually saw, so host-side controllers (the RT-deadline
     admission control in ``repro.serving.deadline``) and the cycle model can
     attribute path decisions to backlog pressure without re-deriving it.
+    ``banks`` and ``planes`` together record the knob plan the window
+    actually ran with (the QoS governor's latched D'/precision choice), so
+    energy accounting and plan audits read straight off the trace.
     """
 
     path: jax.Array        # [N_max] int32, PATH_* per proposal
@@ -138,11 +174,13 @@ class WindowTelemetry:
     reasoner_active: jax.Array  # [N_max] bool, reasoner ran (not gated)
     queue_depth: jax.Array # [] int32, backlog fed to H(N, q) this window
     high_load: jax.Array   # [] bool, H(N, q) as evaluated by Alg. 1
+    planes: jax.Array      # [] int32, enabled bit-slice planes this window
 
     def tree_flatten(self):
         return (
             (self.path, self.delta_count, self.banks, self.rho, self.n_valid,
-             self.reasoner_active, self.queue_depth, self.high_load),
+             self.reasoner_active, self.queue_depth, self.high_load,
+             self.planes),
             None,
         )
 

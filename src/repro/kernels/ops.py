@@ -11,6 +11,16 @@ per-window bank choice is latched on the host (exactly like the ASIC's
 window-latched registers, Sec. 4.6) and dispatches one of <= B specialized
 executables; the functionally-equivalent traced-banks path lives in
 ``repro.core.aligner`` for fully-jitted pipelines.
+
+Precision gating rides the same contract: ``planes`` (of ``plane_total``
+bit-slice planes, ``core.item_memory``'s plane striping) is a static knob
+from the latched QoS plan. With all planes kept, the enabled words are the
+bank prefix and the original fast path runs unchanged; with planes dropped,
+the wrappers select the enabled words *plane-major* — a contiguous
+per-plane-block prefix of the item memory's ``pmajor`` view when the caller
+provides it, a static column gather otherwise — so the XNOR-popcount scan
+genuinely reads fewer words, the TPU analogue of not reading the low-order
+bit-slice SRAMs.
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..core.item_memory import plane_sel
 from . import ref
 from .delta_update import delta_update as _delta_kernel
 from .sign_project import sign_project as _sign_kernel
@@ -47,25 +58,67 @@ def _batched_hamming(
     return ref.packed_hamming_ref(q, h)
 
 
+def _plan_columns(
+    arrays: tuple[jax.Array, ...],
+    banks: int,
+    bank_words: int,
+    planes: int | None,
+    plane_total: int,
+    pmajor: jax.Array | None = None,
+) -> tuple[tuple[jax.Array, ...], int]:
+    """Restrict packed-word arrays to a (banks, planes) plan's enabled words.
+
+    Returns the restricted arrays (all in the *same* column order — hamming
+    sums over columns, so any shared order is exact) and the effective
+    dimension. Full precision keeps the original contiguous bank-prefix
+    slice; reduced precision selects plane-major columns — via a contiguous
+    per-plane-block prefix of ``pmajor`` for the array it replaces (the
+    item memory, pre-permuted once at build), a static gather otherwise.
+    """
+    words_eff = banks * bank_words
+    if planes is None or planes >= plane_total:
+        return tuple(a[:, :words_eff] for a in arrays), 32 * words_eff
+    sel = plane_sel(words_eff, planes, plane_total)
+    out = []
+    for i, a in enumerate(arrays):
+        if i == len(arrays) - 1 and pmajor is not None:
+            # pmajor's plane blocks span all words; the plan's enabled
+            # prefix of plane block p starts at p * (total_words / P)
+            wpb = pmajor.shape[1] // plane_total
+            keep = words_eff // plane_total
+            out.append(jnp.concatenate(
+                [pmajor[:, p * wpb: p * wpb + keep] for p in range(planes)],
+                axis=1))
+        else:
+            out.append(a[:, sel])
+    return tuple(out), 32 * sel.size
+
+
 def packed_similarity(
     q_packed: jax.Array,     # uint32 [N, W_total]
     im_packed: jax.Array,    # uint32 [M, W_total]
     *,
     banks: int,
     bank_words: int,
+    planes: int | None = None,
+    plane_total: int = 4,
+    pmajor: jax.Array | None = None,
     interpret: bool = True,
     use_kernel: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
-    """Full-scan scores under D' = 32 * banks * bank_words enabled dims.
+    """Full-scan scores under the (banks, planes) plan's enabled dims.
 
-    Returns (acc int32 [N, M], cosine f32 [N, M]). N may be the flattened
-    proposal batch of many streams; the kernel processes a block of queries
-    per program, so each item-memory tile is read once per block.
+    D' = 32 * banks * bank_words * planes / plane_total. Returns
+    (acc int32 [N, M], cosine f32 [N, M]). N may be the flattened proposal
+    batch of many streams; the kernel processes a block of queries per
+    program, so each item-memory tile is read once per block. ``planes``
+    (static, from the latched QoS plan; None = all) drops low-order
+    bit-slice planes; pass ``pmajor`` (``ItemMemory.pmajor``) to read them
+    as contiguous plane-block prefixes instead of gathered columns.
     """
-    words_eff = banks * bank_words
-    d_eff = 32 * words_eff
-    q = q_packed[:, :words_eff]
-    h = im_packed[:, :words_eff]
+    (q, h), d_eff = _plan_columns(
+        (q_packed, im_packed), banks, bank_words, planes, plane_total,
+        pmajor=pmajor)
     ham = _batched_hamming(q, h, interpret=interpret, use_kernel=use_kernel)
     acc = d_eff - 2 * ham
     return acc, acc.astype(jnp.float32) / d_eff
@@ -78,6 +131,8 @@ def cache_nearest(
     *,
     banks: int,
     bank_words: int,
+    planes: int | None = None,
+    plane_total: int = 4,
     interpret: bool = True,
     use_kernel: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -85,16 +140,14 @@ def cache_nearest(
 
     Same micro-kernel as the full-path scan — the cache's packed queries
     stand in for the item memory — so full-path and cache-nearest lookups
-    share one specialized executable per D'. Returns
+    share one specialized executable per (D', planes) plan. Returns
     (idx int32 [N], rho f32 [N] per Eq. 5, hamming int32 [N]); invalid
     entries are pushed to rho = -inf as in ``core.query_cache.nearest``.
     """
-    words_eff = banks * bank_words
-    d_eff = float(32 * words_eff)
-    q = q_packed[:, :words_eff]
-    c = cache_packed[:, :words_eff]
+    (q, c), d_eff = _plan_columns(
+        (q_packed, cache_packed), banks, bank_words, planes, plane_total)
     ham = _batched_hamming(q, c, interpret=interpret, use_kernel=use_kernel)
-    rho = 1.0 - 2.0 * ham.astype(jnp.float32) / d_eff
+    rho = 1.0 - 2.0 * ham.astype(jnp.float32) / float(d_eff)
     rho = jnp.where(cache_valid[None, :], rho, -jnp.inf)
     idx = jnp.argmax(rho, axis=-1).astype(jnp.int32)
     n = jnp.arange(idx.shape[0])

@@ -11,6 +11,47 @@ Examples:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
         python -m repro.launch.serve --torr-streams 8 --torr-frames 30 \
         --async --mesh 4 --rt RT-60
+    # closed-loop QoS control plane (slack-driven bank/precision gating
+    # with the energy governor) on top of RT-60 admission control:
+    TORR_GOV_ENERGY_MJ=60 PYTHONPATH=src python -m repro.launch.serve \
+        --torr-streams 8 --torr-frames 30 --rt RT-60 --governor
+
+QoS control plane (``--governor``)
+==================================
+
+``--governor`` arms the closed loop of ``repro.control``: per dispatched
+step, the RT-deadline tracker's projected slack, the deepest per-slot
+backlog and an EWMA of modeled window energy (``perf.cycle_model`` priced
+on each window's own telemetry) drive a slack ladder of knob plans — D'
+bank caps, bit-slice precision (dropping low-order planes of the packed
+scan) and tau_q/tau_byp offsets — and the chosen plan is latched for the
+step exactly like the ASIC's window-latched registers. Requires (and with
+a bare ``--governor`` defaults to) an ``--rt`` operating point.
+
+Governor knobs, their hysteresis defaults, and env overrides (read once by
+``repro.control.governor.policy_from_env``):
+
+    knob              | env var               | default | meaning
+    ----------------- | --------------------- | ------- | -------------------
+    slack margin      | ``TORR_GOV_MARGIN``   |    0.25 | fraction of the RT
+                      |                       |         | budget held back as
+                      |                       |         | safety slack
+    recovery hold     | ``TORR_GOV_HOLD``     |       4 | consecutive
+                      |                       |         | comfortable windows
+                      |                       |         | before widening D'
+                      |                       |         | back out (one ladder
+                      |                       |         | level at a time)
+    energy budget     | ``TORR_GOV_ENERGY_MJ``|     off | mJ/window target the
+                      |                       |         | energy governor caps
+                      |                       |         | the ladder level to
+                      |                       |         | (0 disables)
+    energy EWMA alpha | ``TORR_GOV_ALPHA``    |     0.2 | weight of the newest
+                      |                       |         | window's modeled mJ
+
+Degrading is immediate (a missed deadline beats a narrow window);
+recovering takes ``TORR_GOV_HOLD`` comfortable windows per level so the
+plan latch doesn't thrash the specialized executables. Every window's
+telemetry records the (banks, planes) it actually ran with.
 """
 from __future__ import annotations
 
@@ -29,18 +70,26 @@ from ..serving import reranker as rr
 
 def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                      serial: bool = False, use_async: bool = False,
-                     mesh_devices: int = 0, rt: str = "") -> None:
+                     mesh_devices: int = 0, rt: str = "",
+                     governor: bool = False) -> None:
     """Serve S synthetic TOOD streams through the batched window engine.
 
     ``use_async`` routes through the dispatch/collect
     :class:`repro.serving.async_engine.AsyncStreamEngine`; ``mesh_devices``
     additionally shards the stream slots over that many devices (0 = all).
-    ``rt`` ("RT-30"/"RT-60") arms the deadline admission controller.
+    ``rt`` ("RT-30"/"RT-60") arms the deadline admission controller;
+    ``governor`` closes the QoS loop (slack-driven bank/precision gating
+    plus the energy governor — see the module docstring).
     """
     from ..core import hdc
     from ..data import tood_synth as ts
     from ..serving import tood_pipelines as tp
     from ..serving.stream_engine import StreamEngine
+
+    # deadline admission, sharding and the governor live on the async
+    # runtime; honor them for programmatic callers too, not just main()'s
+    # CLI plumbing
+    use_async = use_async or bool(rt) or governor or mesh_devices != 0
 
     # K >= N_max so a window cannot thrash its own cache out of reuse range
     cfg = TorrConfig(D=2048, B=8, M=64, K=16, N_max=16, delta_budget=256)
@@ -55,9 +104,16 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
         # (e.g. --torr-serial is valid async but cannot shard)
         mesh = None if mesh_devices == 0 else shd.stream_mesh(
             None if mesh_devices < 0 else mesh_devices)
+        if governor and not rt:
+            rt = "RT-60"    # the governor is slack-driven: needs a deadline
         tracker = DeadlineTracker(policy_for(rt)) if rt else None
+        gov = None
+        if governor:
+            from ..control import Governor, policy_from_env
+            gov = Governor(cfg, policy_from_env(rt))
         eng = AsyncStreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
-                                mesh=mesh, tracker=tracker, paused=True)
+                                mesh=mesh, tracker=tracker, governor=gov,
+                                paused=True)
     else:
         eng = StreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial)
 
@@ -138,6 +194,15 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                   f"jitter={summary['jitter_ms']:.2f} ms "
                   f"miss_rate={summary['miss_rate']:.3f} "
                   f"shed={summary['shed']} escalated={summary['escalated']}")
+        gsum = eng.governor_summary()
+        if gsum is not None:
+            print(f"[serve/torr] governor: level={gsum['level']}"
+                  f"/{gsum['n_levels'] - 1} "
+                  f"plan=(banks={gsum['plan_banks']}, "
+                  f"planes={gsum['plan_planes']}) "
+                  f"switches={gsum['plan_switches']} "
+                  f"energy_ewma={gsum['energy_ewma_mj']:.1f} mJ "
+                  f"windows_by_level={gsum['windows_by_level']}")
 
 
 def main() -> None:
@@ -168,14 +233,20 @@ def main() -> None:
     ap.add_argument("--rt", default="", choices=["", "RT-30", "RT-60"],
                     help="arm RT-deadline admission control at this "
                          "operating point (implies --async)")
+    ap.add_argument("--governor", action="store_true",
+                    help="close the QoS loop: slack-driven bank/precision "
+                         "gating with the energy governor (implies --async; "
+                         "defaults --rt to RT-60; see module docstring for "
+                         "TORR_GOV_* env overrides)")
     args = ap.parse_args()
 
     if args.torr_streams > 0:
         run_torr_streams(args.torr_streams, args.torr_frames,
                          args.torr_slots, serial=args.torr_serial,
                          use_async=(args.use_async or args.mesh != 0
-                                    or bool(args.rt)),
-                         mesh_devices=args.mesh, rt=args.rt)
+                                    or bool(args.rt) or args.governor),
+                         mesh_devices=args.mesh, rt=args.rt,
+                         governor=args.governor)
         return
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)

@@ -24,6 +24,7 @@ import dataclasses
 
 import numpy as np
 
+from ..core.policy import aligner_cycles, mw_cycles
 from ..core.types import PATH_BYPASS, PATH_DELTA, PATH_FULL, TorrConfig
 
 # --- Table 1 (TSMC 28 nm, 1 GHz): block peak powers in watts ---------------
@@ -105,10 +106,18 @@ def latency_summary(lat_s, budget_s: float) -> dict:
 def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
                 reasoner_active: np.ndarray, n_valid: int,
                 cfg: TorrConfig, rt_budget_s: float,
-                window_scale: float = 1.0) -> WindowCost:
-    """Cost of one window from its telemetry trace."""
-    mw = -(-cfg.M // cfg.W)
-    d_eff = banks * cfg.bank_dims
+                window_scale: float = 1.0,
+                d_eff: int | None = None) -> WindowCost:
+    """Cost of one window from its telemetry trace.
+
+    ``d_eff`` overrides the bank-implied effective dimension when the
+    window ran under a precision-gated knob plan (D' = banks * bank_dims *
+    planes / bit_planes); :func:`telemetry_cost` derives it from telemetry.
+    The aligner term comes from the shared Sec. 4.3 helper in
+    ``core.policy`` — the same math Alg. 1 and the QoS governor price with.
+    """
+    mw = mw_cycles(cfg)
+    d_eff = banks * cfg.bank_dims if d_eff is None else int(d_eff)
     path = np.asarray(path)[:n_valid]
     dc = np.asarray(delta_count)[:n_valid]
     ra = np.asarray(reasoner_active)[:n_valid]
@@ -117,7 +126,8 @@ def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
     n_delta = int(np.sum(path == PATH_DELTA))
     n_byp = int(np.sum(path == PATH_BYPASS))
 
-    aligner = n_full * d_eff * mw + int(np.sum(dc[path == PATH_DELTA])) * mw
+    aligner = int(aligner_cycles(
+        n_full, int(np.sum(dc[path == PATH_DELTA])), d_eff, mw))
     psu = n_valid * (d_eff // 32 + 8)
     reasoner = int(np.sum(ra)) * (mw + 4)
     sorter = (n_full + n_delta) * (cfg.M + 32)
@@ -147,6 +157,40 @@ def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
     power = P_STATIC + p_dyn
     energy = power * rt_budget_s          # frame-budget-locked energy
     return WindowCost(busy, total, energy, power)
+
+
+def telemetry_cost(tel, cfg: TorrConfig, rt_budget_s: float,
+                   window_scale: float = 1.0) -> WindowCost:
+    """Cost one served window straight from its (host-resident) telemetry.
+
+    Reads the knob plan the window *actually* ran with — ``banks`` and
+    ``planes`` are both recorded in :class:`~repro.core.types
+    .WindowTelemetry` — so the QoS governor's energy feedback and any
+    offline audit price precision-gated windows correctly.
+    """
+    banks = int(tel.banks)
+    planes = int(tel.planes)
+    return window_cost(
+        np.asarray(tel.path), np.asarray(tel.delta_count), banks,
+        np.asarray(tel.reasoner_active), int(tel.n_valid), cfg, rt_budget_s,
+        window_scale=window_scale,
+        d_eff=int(cfg.d_eff_planned(banks, planes)))
+
+
+def path_mix(rho: np.ndarray, delta: np.ndarray, high: bool,
+             cfg: TorrConfig) -> np.ndarray:
+    """Host-side (numpy) Alg. 1 path decision for trace simulation.
+
+    Mirrors ``core.policy.select_path`` with the accumulator tag assumed
+    valid — the shared decision table for every trace simulator
+    (``simulate_task`` here, ``benchmarks.table8_pareto``), so the
+    simulated path mix can't drift from the policy's rules.
+    """
+    path = np.full(rho.shape, PATH_FULL)
+    path[(rho >= cfg.tau_q) & (delta <= cfg.delta_budget)] = PATH_DELTA
+    if high:
+        path[rho >= cfg.tau_byp] = PATH_BYPASS
+    return path
 
 
 # ---------------------------------------------------------------------------
@@ -187,7 +231,7 @@ def simulate_task(task: str, rt: str = "RT-60", n_frames: int = 600,
     rng = np.random.default_rng(seed)
     budget = 1.0 / cfg.fps_target
     window_scale = 60.0 * budget           # 1.0 @ RT-60, 2.0 @ RT-30
-    mw = -(-cfg.M // cfg.W)
+    mw = mw_cycles(cfg)
 
     lat, power, energy, banks_hist, mix = [], [], [], [], []
     for _ in range(n_frames):
@@ -198,7 +242,7 @@ def simulate_task(task: str, rt: str = "RT-60", n_frames: int = 600,
         overhead = (HOST_OVERHEAD_CYCLES * window_scale
                     + n * ENCODER_CYCLES_PER_PROPOSAL * window_scale)
         for b in range(cfg.B, 0, -1):
-            worst = n * (b * cfg.bank_dims) * mw + overhead
+            worst = aligner_cycles(n, 0, b * cfg.bank_dims, mw) + overhead
             if worst <= budget * cfg.clock_hz / (1.0 + queue):
                 banks = b
                 break
@@ -213,10 +257,7 @@ def simulate_task(task: str, rt: str = "RT-60", n_frames: int = 600,
         rho = np.where(new_obj, rng.uniform(-0.1, 0.4, n), rho)
         delta = np.round((1 - rho) / 2 * d_eff).astype(int)
 
-        path = np.full(n, PATH_FULL)
-        path[(rho >= cfg.tau_q) & (delta <= cfg.delta_budget)] = PATH_DELTA
-        if high:
-            path[rho >= cfg.tau_byp] = PATH_BYPASS
+        path = path_mix(rho, delta, high, cfg)
         # reasoner gated on stable top-k: proxy with very high rho
         reasoner_active = (path != PATH_BYPASS) & (rho < 0.97)
 

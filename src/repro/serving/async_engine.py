@@ -52,6 +52,19 @@ window's queue-depth input to Alg. 1's load gate ``H(N, q)`` to at least
 window's future with ``WindowShed`` without spending a slot-step on it.
 The collector feeds measured step latencies back into the tracker's
 projection EMA and records per-window latency for jitter/miss telemetry.
+
+QoS governor: pass a ``Governor`` (``repro.control``) alongside the tracker
+to close the loop between slack and the compute path. Per dispatched step
+the dispatcher feeds the governor the head windows' projected slack (from
+the tracker's arrival stamps and step EMA) plus the deepest per-slot
+backlog; the governor returns a knob plan (D' cap, bit-slice precision,
+tau offsets) that is latched for the step — a static jit argument, so each
+plan runs its own specialized executable, and the governor's hysteresis
+keeps that latch from thrashing. The collector closes the energy loop:
+every served window's telemetry (which records the plan it actually ran
+with) is priced by ``perf.cycle_model.telemetry_cost`` and folded into the
+governor's EWMA energy estimate. With the governor pinned to the full plan
+(or absent) results are bit-identical to the ungoverned engine.
 """
 from __future__ import annotations
 
@@ -66,6 +79,7 @@ import numpy as np
 
 from ..core.item_memory import ItemMemory
 from ..core.types import TorrConfig
+from ..perf.cycle_model import telemetry_cost
 from ..runtime import sharding as shd
 from .deadline import Decision, DeadlineTracker, WindowShed
 from .stream_engine import (GATE_ADMIT, GATE_ESCALATE, GATE_SHED,
@@ -91,8 +105,13 @@ class AsyncStreamEngine(StreamEngine):
         mesh=None,
         pipeline_depth: int = 2,
         tracker: DeadlineTracker | None = None,
+        governor=None,
         paused: bool = False,
     ):
+        if governor is not None and tracker is None:
+            raise ValueError(
+                "the QoS governor is slack-driven: pass a DeadlineTracker "
+                "alongside governor=")
         if mesh is not None and mesh.devices.size > 1 and serial:
             raise ValueError(
                 "serial (lax.map) lowering is host-sequential and cannot "
@@ -114,6 +133,7 @@ class AsyncStreamEngine(StreamEngine):
             self._batch_sharding = NamedSharding(
                 self._mesh, PartitionSpec(shd.STREAM_AXIS))
         self._tracker = tracker
+        self._governor = governor
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)     # backlog arrived
@@ -286,6 +306,33 @@ class AsyncStreamEngine(StreamEngine):
 
         return self._assemble(gate)
 
+    def set_plan(self, plan) -> None:
+        if self._governor is not None:
+            raise RuntimeError(
+                "the plan latch is owned by the armed QoS governor (it is "
+                "re-latched every dispatched step); construct the engine "
+                "without governor= to pin plans manually")
+        super().set_plan(plan)
+
+    def _govern(self, served) -> None:
+        """Latch the governor's plan for the step about to dispatch.
+
+        Must run under the lock (the latch feeds ``_dispatch``). Slack is
+        the *tightest* head window's remaining time to deadline; backlog is
+        the deepest per-slot queue (each batched step drains one window per
+        slot, so that is the number of steps still owed) — read from the
+        pending queues, NOT the batch's qd lanes, which the admission gate
+        floors to cfg.q_hi for escalated windows."""
+        if self._governor is None or not served:
+            return
+        now = self._tracker.now()
+        wait = max(now - arrival for _sid, _slot, (_f, arrival) in served)
+        slack = self._tracker.policy.budget_s - wait
+        backlog = max(len(self._pending[slot]) for _sid, slot, _x in served)
+        self._plan = self._governor.update(
+            slack, self._tracker.step_ema_s, backlog=backlog,
+            n_windows=len(served))
+
     def _dispatch(self, q, v, b, qd):
         if self._mesh is None:
             return super()._dispatch(q, v, b, qd)
@@ -297,7 +344,8 @@ class AsyncStreamEngine(StreamEngine):
             queue_depth=jax.device_put(qd.astype(np.int32), s),
         )
         self._state, out, tel = self._step(
-            self._state, self.im, batch, self.cfg, serial=self._serial)
+            self._state, self.im, batch, self.cfg, serial=self._serial,
+            plan=self._plan)
         return out, tel
 
     def warmup(self) -> None:
@@ -324,6 +372,7 @@ class AsyncStreamEngine(StreamEngine):
                         break
                     q, v, b, qd, served = self._assemble_admitted(deferred)
                     if served:
+                        self._govern(served)
                         # dispatch under the lock: JAX async dispatch
                         # returns immediately, and admit/retire must not
                         # interleave a state rewrite between assemble and
@@ -374,6 +423,18 @@ class AsyncStreamEngine(StreamEngine):
                 now = (self._tracker.now() if self._tracker
                        else time.monotonic())
                 for stream_id, slot, (fut, arrival) in served:
+                    tel_w = jax.tree_util.tree_map(lambda x: x[slot], tel_h)
+                    if self._governor is not None:
+                        # close the energy loop: price the plan the window
+                        # actually ran with (recorded in its telemetry);
+                        # window_scale follows the cycle model's convention
+                        # (1.0 @ RT-60, 2.0 @ RT-30) so the live EWMA and
+                        # table8's modeled operating points agree
+                        budget_s = self._tracker.policy.budget_s
+                        wc = telemetry_cost(
+                            tel_w, self.cfg, budget_s,
+                            window_scale=60.0 * budget_s)
+                        self._governor.observe_energy(wc.energy_j * 1e3)
                     if fut.cancelled():
                         # orphaned mid-flight (stream retired): nobody
                         # consumes it, so keep it out of the deadline
@@ -381,7 +442,7 @@ class AsyncStreamEngine(StreamEngine):
                         continue
                     result = (
                         jax.tree_util.tree_map(lambda x: x[slot], out_h),
-                        jax.tree_util.tree_map(lambda x: x[slot], tel_h),
+                        tel_w,
                     )
                     if self._tracker is not None:
                         self._tracker.complete(arrival, now)
@@ -438,6 +499,14 @@ class AsyncStreamEngine(StreamEngine):
     def tracker(self) -> DeadlineTracker | None:
         return self._tracker
 
+    @property
+    def governor(self):
+        return self._governor
+
     def deadline_summary(self) -> Dict | None:
         """Jitter/miss-rate envelope (cycle-model-compatible keys)."""
         return self._tracker.summary() if self._tracker else None
+
+    def governor_summary(self) -> Dict | None:
+        """Plan level / switch / energy telemetry of the QoS governor."""
+        return self._governor.summary() if self._governor else None

@@ -88,9 +88,14 @@ class StreamEngine:
         # module-level function (not a per-engine partial) so engines with
         # the same cfg share one compiled executable.
         self._serial = serial
+        # The QoS control plane's latched knob plan: a static jit argument,
+        # so each distinct plan dispatches its own specialized executable
+        # (the window-latched register analogue). None = uncontrolled step.
+        self._plan = None
         step = pipeline.torr_stream_batch_step
         self._step = (
-            jax.jit(step, static_argnames=("cfg", "serial")) if jit else step
+            jax.jit(step, static_argnames=("cfg", "serial", "plan"))
+            if jit else step
         )
         self.stats = EngineStats()
         # reusable host-side pad buffers for batch assembly
@@ -193,6 +198,17 @@ class StreamEngine:
                 break
         return q, v, b, qd, served
 
+    def set_plan(self, plan) -> None:
+        """Latch a knob plan (``repro.control.plan.KnobPlan`` or None) for
+        subsequent steps. Host-side only: takes effect on the next dispatch."""
+        if plan is not None:
+            plan.validate(self.cfg)
+        self._plan = plan
+
+    @property
+    def plan(self):
+        return self._plan
+
     def _dispatch(self, q, v, b, qd):
         """Launch one batched step (asynchronously) and advance the state."""
         batch = StreamBatch(
@@ -201,6 +217,7 @@ class StreamEngine:
         )
         self._state, out, tel = self._step(
             self._state, self.im, batch, self.cfg, serial=self._serial,
+            plan=self._plan,
         )
         return out, tel
 
@@ -253,5 +270,5 @@ class StreamEngine:
             queue_depth=jnp.zeros((self.n_slots,), jnp.int32),
         )
         out = self._step(self._state, self.im, zero, self.cfg,
-                         serial=self._serial)
+                         serial=self._serial, plan=self._plan)
         jax.block_until_ready(out[1].scores)

@@ -62,7 +62,7 @@ def build_system(world: ts.World, cfg: TorrConfig, seed: int = 0) -> TorrSystem:
     rel = world.relevance                           # [T, M]
     acc = 1.5 * proj + (rel.T @ g)                  # [M, D]
     codes = np.where(acc >= 0, 1, -1).astype(np.int8)
-    im = build_item_memory(jnp.asarray(codes))
+    im = build_item_memory(jnp.asarray(codes), plane_total=cfg.bit_planes)
 
     task_w = np.stack([
         np.asarray(reasoner.task_weights(jnp.asarray(g[t]), im, cfg, cfg.B))

@@ -4,6 +4,9 @@ import sys
 # keep tests on 1 CPU device; multi-device tests spawn subprocesses
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so tests can import the benchmarks package (e.g. table8's
+# governor Pareto sim is acceptance-tested in test_control.py)
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def pytest_configure(config):

@@ -12,7 +12,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import hdc, pipeline
+from repro.core import hdc, pipeline, types
 from repro.core.item_memory import random_item_memory
 from repro.core.types import TorrConfig
 from repro.kernels import ops
@@ -201,7 +201,8 @@ def test_ops_cache_nearest_matches_core():
         qe = hdc.pack_bits(hdc.random_hv(jax.random.PRNGKey(10 + i), (cfg.D,)))
         cache = query_cache.write_entry(
             cache, jnp.int32(i), packed=qe,
-            acc=jnp.zeros((cfg.M,), jnp.int32), acc_banks=8,
+            acc=jnp.zeros((cfg.M,), jnp.int32),
+            acc_tag=types.plan_tag(8, cfg.bit_planes),
             out=jnp.zeros((cfg.M,), jnp.float32),
             topk_key=jnp.zeros((cfg.top_k,), jnp.int32), margin=jnp.float32(0))
     qs = jax.vmap(hdc.pack_bits)(hdc.random_hv(jax.random.PRNGKey(99), (6, cfg.D)))

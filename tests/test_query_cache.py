@@ -22,9 +22,11 @@ CFG = TorrConfig(D=1024, B=8, M=32, K=4, N_max=8, delta_budget=128,
 
 
 def _entry_kwargs(cfg, key, banks=8):
+    from repro.core.types import plan_tag
     q = hdc.pack_bits(hdc.random_hv(key, (cfg.D,)))
     return dict(
-        packed=q, acc=jnp.zeros((cfg.M,), jnp.int32), acc_banks=banks,
+        packed=q, acc=jnp.zeros((cfg.M,), jnp.int32),
+        acc_tag=plan_tag(banks, cfg.bit_planes),
         out=jnp.zeros((cfg.M,), jnp.float32),
         topk_key=jnp.zeros((cfg.top_k,), jnp.int32), margin=jnp.float32(0),
     )
