@@ -11,10 +11,14 @@ emits the winning shapes as a JSON artifact::
      "workload": {"N": .., "M": .., "D": ..}, "backend": "cpu-interpret"}
 
 Artifact path: ``TORR_AUTOTUNE_OUT`` env var, default
-``autotune_blocks.json`` in the working directory. On real TPU run the same
-sweep with a denser grid (the module docstring of ``xnor_popcount_sim``
-suggests TQ in {8,16,32} x TM in {128,256,512}); the defaults here are kept
-small so the CPU interpret-mode suite stays fast.
+``autotune_blocks.json`` in the working directory. Point ``TORR_TUNE_FILE``
+at the written artifact and every kernel consumer (the direct defaults,
+``kernels.ops``'s tile caps and the fused family) loads the swept winner at
+import — no hand-exported ``TORR_TQ``/``TORR_TM`` needed; explicit env vars
+still win (precedence table in ``kernels.xnor_popcount_sim``). On real TPU
+run the same sweep with a denser grid (the module docstring of
+``xnor_popcount_sim`` suggests TQ in {8,16,32} x TM in {128,256,512}); the
+defaults here are kept small so the CPU interpret-mode suite stays fast.
 
 Rows: ``autotune/tq<tq>_tm<tm>, <us>, us`` per candidate plus
 ``autotune/best, <us>, tq=..|tm=..``.
@@ -88,7 +92,8 @@ def run(tq_grid=(8, 16), tm_grid=(64, 128), N: int = 16, M: int = 256,
     rows = [(f"autotune/tq{r['tq']}_tm{r['tm']}", round(r["us"], 1), "us")
             for r in grid]
     rows.append(("autotune/best", round(best["us"], 1),
-                 f"tq={best['tq']}|tm={best['tm']}|json={out_path}"))
+                 f"tq={best['tq']}|tm={best['tm']}|json={out_path}"
+                 "|apply_via=TORR_TUNE_FILE"))
     return rows
 
 

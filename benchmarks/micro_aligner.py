@@ -2,21 +2,41 @@
 
 Measures (a) modeled accelerator cycles — the paper's cycles_full ~= D'*M/W
 vs cycles_delta ~= |Delta|*M/W scaling, (b) wall-clock of the jitted
-functional kernels on this host (interpret-mode Pallas + XLA), and (c) the
-bank-gating (D') sweep.
+functional kernels on this host (interpret-mode Pallas + XLA), (c) the
+bank-gating (D') sweep, and (d) the three-way full-path comparison at the
+table6 default shapes:
+
+  * ``fullpath_oracle``  — the legacy jitted full path: one masked
+    ``aligner.full_dot`` ([M, W] xor) per proposal inside a scan;
+  * ``fullpath_batched`` — the host-latched static-banks kernel wrapper
+    (``ops.packed_similarity``) over the whole proposal batch;
+  * ``fullpath_fused``   — the traced-banks fused dispatch the jitted
+    pipeline now defaults to (``aligner.full_scores_all``), in both the
+    ``switch`` and ``prefix`` lowerings.
+
+The fused-vs-oracle ratio is the PR's CPU acceptance gate (>= 1.3x at the
+table6 shapes). ``python -m benchmarks.micro_aligner --json PATH`` writes
+``{"rows": [[name, value, derived], ...]}`` for the bench-smoke CI
+artifact; rows are also printed as CSV either way.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hdc
-from repro.core.item_memory import random_item_memory
+from repro.core import aligner, hdc
+from repro.core.item_memory import random_item_memory, word_mask
 from repro.core.types import TorrConfig
 from repro.kernels import ops
+
+# the table6 multi-stream serving shapes — the fused-path acceptance point
+# (imported so a table6 retune moves this gate with it)
+from benchmarks.table6_multistream import CFG as TABLE6_CFG
 
 
 def _time(fn, *args, iters: int = 20):
@@ -26,6 +46,94 @@ def _time(fn, *args, iters: int = 20):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def fullpath_three_way(cfg: TorrConfig = TABLE6_CFG, n_streams: int = 64,
+                       iters: int = 30):
+    """Rows for oracle vs batched-kernel vs fused-path.
+
+    Measured on the flattened S x N_max proposal batch of one multi-stream
+    step (the default serving substrate since PR 1) — the shape at which
+    the fused dispatch is actually invoked by ``torr_multi_stream_step``.
+    All four variants are verified to produce identical integer
+    accumulators before timing; times are best-of-5 rounds.
+    """
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    n_rows = n_streams * cfg.N_max
+    qp = hdc.pack_bits(hdc.random_hv(jax.random.PRNGKey(1),
+                                     (n_rows, cfg.D)))
+    banks_t = jnp.int32(cfg.B)
+
+    # (1) legacy oracle: one masked full_dot per proposal inside a scan,
+    # traced banks — exactly the full path the jitted pipeline ran before
+    # the fused dispatch landed.
+    @jax.jit
+    def oracle(q, banks):
+        wm = word_mask(cfg, banks)
+
+        def body(c, qr):
+            return c, aligner.full_dot(qr, im, wm)
+
+        _, accs = jax.lax.scan(body, jnp.int32(0), q)
+        return accs
+
+    # (1b) batched oracle: ref-style whole-batch xor — materializes the
+    # [N, M, W] intermediate the fused path exists to kill.
+    @jax.jit
+    def oracle_batched(q, banks):
+        wm = word_mask(cfg, banks)
+        x = jnp.bitwise_xor(q[:, None, :], im.packed[None, :, :])
+        pc = jnp.where(wm[None, None, :],
+                       jax.lax.population_count(x).astype(jnp.int32), 0)
+        return 32 * jnp.sum(wm.astype(jnp.int32)) - 2 * jnp.sum(pc, -1)
+
+    # (2) host-latched batched kernel wrapper (static banks).
+    batched = jax.jit(lambda q: ops.packed_similarity(
+        q, im.packed, banks=cfg.B, bank_words=cfg.bank_words)[0])
+
+    # (3) traced-banks fused dispatch (what the jitted step now runs).
+    def fused(mode):
+        @jax.jit
+        def f(q, banks):
+            return aligner.full_scores_all(
+                q, im, banks, cfg, planes=cfg.bit_planes, cap=cfg.B,
+                mode=mode)
+        return f
+
+    f_switch, f_prefix = fused("switch"), fused("prefix")
+
+    # sanity: all variants produce identical integer accumulators
+    want = np.asarray(oracle(qp, banks_t))
+    for name, got in (("oracle_batched", oracle_batched(qp, banks_t)),
+                      ("batched", batched(qp)),
+                      ("switch", f_switch(qp, banks_t)),
+                      ("prefix", f_prefix(qp, banks_t))):
+        assert np.array_equal(np.asarray(got), want), name
+
+    def best_of(fn, rounds=5):
+        return min(_time(fn, iters=iters) for _ in range(rounds))
+
+    us_oracle = best_of(lambda: oracle(qp, banks_t))
+    us_oracle_b = best_of(lambda: oracle_batched(qp, banks_t))
+    us_batched = best_of(lambda: batched(qp))
+    us_switch = best_of(lambda: f_switch(qp, banks_t))
+    us_prefix = best_of(lambda: f_prefix(qp, banks_t))
+
+    shape = f"N{n_rows}_M{cfg.M}_D{cfg.D}"
+    best_fused = min(us_switch, us_prefix)
+    return [
+        (f"micro/fullpath_oracle_{shape}", round(us_oracle, 1), "us"),
+        (f"micro/fullpath_oracle_batched_{shape}", round(us_oracle_b, 1),
+         "us (materializes [N,M,W])"),
+        (f"micro/fullpath_batched_{shape}", round(us_batched, 1),
+         f"speedup_vs_oracle={us_oracle / us_batched:.2f}"),
+        (f"micro/fullpath_fused_switch_{shape}", round(us_switch, 1),
+         f"speedup_vs_oracle={us_oracle / us_switch:.2f}"),
+        (f"micro/fullpath_fused_prefix_{shape}", round(us_prefix, 1),
+         f"speedup_vs_oracle={us_oracle / us_prefix:.2f}"),
+        (f"micro/fullpath_fused_speedup_{shape}",
+         round(us_oracle / best_fused, 2), "acceptance: >= 1.3"),
+    ]
 
 
 def run() -> list[tuple]:
@@ -63,9 +171,28 @@ def run() -> list[tuple]:
     R = jax.random.normal(jax.random.PRNGKey(5), (cfg.D, 512))
     us = _time(lambda: ops.sign_project(z, R))
     rows.append(("micro/wallclock_sign_project", round(us, 1), "us"))
+    us = _time(lambda: ops.encode_packed(z, R))
+    rows.append(("micro/wallclock_encode_packed", round(us, 1),
+                 "us (fused sign+pack)"))
+
+    # (d) the three-way full-path comparison (PR acceptance gate)
+    rows.extend(fullpath_three_way())
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write rows as JSON to PATH")
+    args = ap.parse_args()
+    rows = run()
+    for r in rows:
         print(",".join(str(x) for x in r))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [list(r) for r in rows],
+                       "backend": jax.default_backend()}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,14 +13,23 @@ windows/sec as a function of concurrent stream count for
     sequentially inside one executable, keeping scalar branch economy
     while amortizing host dispatch (the CPU-shaped trade).
 
-All three serve identical frame sequences and produce bit-identical scores
-(tests/test_multistream.py), so the ratios are pure scheduling/lowering
-effects.
+Both batched engines now ride the *fused* full path by default (the
+``"prefix"`` kernel dispatch under vmap, ``"switch"`` under serial — see
+``repro.core.pipeline``); ``--lowering {vmap,serial,fused}`` restricts the
+measurement (``fused``, the default, measures both and records the winner
+per backend in the ``table6/winner_S*`` rows and the ``--json`` output —
+the re-measured vmap-vs-serial split from the ROADMAP).
+
+All engines serve identical frame sequences and produce bit-identical
+scores (tests/test_multistream.py), so the ratios are pure
+scheduling/lowering effects.
 
 Rows: ``table6/<engine>_S<streams>, windows_per_sec, speedup_vs_looped``.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -90,7 +99,15 @@ def _run_batched(cfg, im, task_w, streams, serial):
     return eng.stats.windows / dt
 
 
-def run(stream_counts=(1, 4, 16, 64), n_frames: int = 12) -> list[tuple]:
+def run(stream_counts=(1, 4, 16, 64), n_frames: int = 12,
+        lowering: str = "fused") -> list[tuple]:
+    """``lowering``: "vmap" / "serial" restrict to one batched lowering;
+    "fused" (default) measures both — each riding its fused full path —
+    and records the winner per backend."""
+    if lowering not in ("vmap", "serial", "fused"):
+        raise ValueError(f"lowering={lowering!r}")
+    do_vmap = lowering in ("vmap", "fused")
+    do_serial = lowering in ("serial", "fused")
     cfg = CFG
     im = random_item_memory(jax.random.PRNGKey(0), cfg)
     rows = []
@@ -98,23 +115,55 @@ def run(stream_counts=(1, 4, 16, 64), n_frames: int = 12) -> list[tuple]:
         task_w = np.asarray(
             jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
         streams = _make_streams(cfg, S, n_frames, seed=S)
-        # warm all three executables outside the timed region
+        # warm every executable outside the timed region
         warm = _make_streams(cfg, S, 1, seed=1000 + S)
         _run_looped(cfg, im, task_w, warm)
-        _run_batched(cfg, im, task_w, warm, serial=False)
-        _run_batched(cfg, im, task_w, warm, serial=True)
+        if do_vmap:
+            _run_batched(cfg, im, task_w, warm, serial=False)
+        if do_serial:
+            _run_batched(cfg, im, task_w, warm, serial=True)
 
         wps_loop = _run_looped(cfg, im, task_w, streams)
-        wps_vmap = _run_batched(cfg, im, task_w, streams, serial=False)
-        wps_ser = _run_batched(cfg, im, task_w, streams, serial=True)
         rows.append((f"table6/looped_S{S}", round(wps_loop, 1), "speedup=1.0"))
-        rows.append((f"table6/batched_vmap_S{S}", round(wps_vmap, 1),
-                     f"speedup={wps_vmap / wps_loop:.2f}"))
-        rows.append((f"table6/batched_serial_S{S}", round(wps_ser, 1),
-                     f"speedup={wps_ser / wps_loop:.2f}"))
+        wps = {}
+        if do_vmap:
+            wps["vmap"] = _run_batched(cfg, im, task_w, streams, serial=False)
+            rows.append((f"table6/batched_vmap_S{S}", round(wps["vmap"], 1),
+                         f"speedup={wps['vmap'] / wps_loop:.2f}"))
+        if do_serial:
+            wps["serial"] = _run_batched(cfg, im, task_w, streams, serial=True)
+            rows.append((f"table6/batched_serial_S{S}",
+                         round(wps["serial"], 1),
+                         f"speedup={wps['serial'] / wps_loop:.2f}"))
+        if len(wps) == 2:
+            winner = max(wps, key=wps.get)
+            rows.append((f"table6/winner_S{S}", winner,
+                         f"backend={jax.default_backend()}"))
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lowering", default="fused",
+                    choices=("vmap", "serial", "fused"),
+                    help="batched lowering(s) to measure; 'fused' measures "
+                         "both (each on its fused full path) and records "
+                         "the winner per backend")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write rows + per-S winners as JSON to PATH")
+    args = ap.parse_args()
+    rows = run(lowering=args.lowering)
+    for r in rows:
         print(",".join(str(x) for x in r))
+    if args.json:
+        winners = {r[0].split("_S")[-1]: r[1] for r in rows
+                   if r[0].startswith("table6/winner_S")}
+        with open(args.json, "w") as f:
+            json.dump({"rows": [list(r) for r in rows],
+                       "backend": jax.default_backend(),
+                       "lowering": args.lowering,
+                       "winner_by_streams": winners}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .item_memory import ItemMemory, word_mask
+from .item_memory import (ItemMemory, bank_plane_sel, pmajor_bank_blocks,
+                          word_mask)
 from .types import TorrConfig
 
 
@@ -83,6 +84,131 @@ def full_scores(
     acc = full_dot(q_packed, im, wmask)
     d_eff = jnp.asarray(banks, jnp.int32) * cfg.bank_dims
     return acc, readout(acc, d_eff)
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel dispatch shim (traced banks, static plan cap)
+# ---------------------------------------------------------------------------
+
+def _plan_columns_bank_major(
+    q_packed_all: jax.Array, im: ItemMemory, banks: int, planes: int,
+    cfg: TorrConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """(q_sel, im_sel) restricted to a *static* (banks, planes) plan's
+    enabled words, in the shared bank-major column order of
+    ``item_memory.bank_plane_sel`` (bank boundaries stay word prefixes, the
+    bank-prefix kernel's contract). Full precision keeps the original
+    contiguous bank prefix of ``packed``; reduced precision assembles
+    static contiguous slices of ``pmajor`` for the item memory and a static
+    gather for the (tiny) query batch."""
+    if planes >= cfg.bit_planes:
+        we = banks * cfg.bank_words
+        return q_packed_all[:, :we], im.packed[:, :we]
+    sel = bank_plane_sel(cfg, banks, planes)
+    return (q_packed_all[:, sel],
+            pmajor_bank_blocks(im.pmajor, cfg, banks, planes))
+
+
+def plan_prefix_hamming(
+    q_packed: jax.Array,       # uint32 [N, D//32] (N may be S*N_max flattened)
+    im: ItemMemory,
+    cfg: TorrConfig,
+    *,
+    planes: int,
+    cap: int,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Bank-prefix hamming over a (cap, planes) plan's enabled words:
+    int32 [N, M, cap]. Column selection + the ``bank_prefix_hamming``
+    kernel; the batched multi-stream step hoists this single call over its
+    flattened S x N_max proposal batch (one kernel pass per step — a
+    per-stream call under vmap would re-enter the grid once per stream)."""
+    from ..kernels import fused_window as fw
+
+    q_sel, im_sel = _plan_columns_bank_major(q_packed, im, cap, planes, cfg)
+    return fw.bank_prefix_hamming_any(q_sel, im_sel, cap=cap,
+                                      interpret=interpret,
+                                      use_kernel=use_kernel)
+
+
+def full_scores_all(
+    q_packed_all: jax.Array,   # uint32 [N, D//32] all proposals of a window
+    im: ItemMemory,
+    banks: jax.Array,          # traced int32 [] — Alg. 1's per-window choice
+    cfg: TorrConfig,
+    *,
+    planes: int,               # static (latched plan)
+    cap: int,                  # static plan cap on banks (cfg.B uncontrolled)
+    mode: str = "switch",
+    ham_prefix: jax.Array | None = None,  # precomputed [N, M, cap] (hoisted)
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Full-path integer accumulators for *all* proposals: int32 [N, M].
+
+    The traced-banks dispatch shim over ``kernels.fused_window``: the whole
+    window's proposal batch goes through one fused XNOR-popcount scan (the
+    item-memory tile is read once per query block and streamed through
+    VMEM), instead of one masked full-width ``[M, W]`` xor per proposal
+    inside the scan — bit-identical to :func:`full_dot` under the same
+    ``(banks, planes)``, because integer hamming sums are order-invariant
+    and the readout formula is shared.
+
+    Two lowerings of the traced ``banks``, both a bounded family of
+    <= B x P specialized executables keyed by the static ``(cap, planes)``:
+
+      * ``mode="switch"`` — ``lax.switch`` over the <= cap bank branches;
+        only the selected branch executes (reads exactly ``banks`` banks'
+        enabled words), the right trade wherever branches stay scalar
+        (single-stream jit, the lax.map serial lowering).
+      * ``mode="prefix"`` — one ``bank_prefix_hamming`` pass over the
+        plan-capped prefix emitting every bank boundary's count, then a
+        traced gather selects ``banks``. Under vmap a switch would execute
+        *every* branch on the whole batch; the prefix pass reads the capped
+        width once. The batched multi-stream step additionally hoists the
+        kernel call itself over the flattened S x N_max proposal batch and
+        passes the per-stream slice in as ``ham_prefix``.
+    """
+    from ..kernels import fused_window as fw
+
+    banks = jnp.clip(jnp.asarray(banks, jnp.int32), 1, cap)
+    if mode == "prefix":
+        ham_p = ham_prefix
+        if ham_p is None:
+            ham_p = plan_prefix_hamming(
+                q_packed_all, im, cfg, planes=planes, cap=cap,
+                interpret=interpret, use_kernel=use_kernel)  # [N, M, cap]
+        ham = ham_p[..., banks - 1]
+        d_eff = cfg.d_eff_planned(banks, planes)
+        return d_eff - 2 * ham
+    if mode != "switch":
+        raise ValueError(f"unknown fused dispatch mode {mode!r}")
+
+    def make_branch(b: int):
+        def branch(q):
+            q_sel, im_sel = _plan_columns_bank_major(q, im, b, planes, cfg)
+            acc, _best, _top2 = fw.fused_scores_any(
+                q_sel, im_sel, d_eff=int(cfg.d_eff_planned(b, planes)),
+                interpret=interpret, use_kernel=use_kernel)
+            return acc
+        return branch
+
+    return jax.lax.switch(
+        banks - 1, [make_branch(b) for b in range(1, cap + 1)], q_packed_all)
+
+
+def delta_apply(
+    acc: jax.Array, im: ItemMemory, idx: jax.Array, weight: jax.Array,
+    *, interpret: bool | None = None, use_kernel: bool = True,
+) -> jax.Array:
+    """Eq. 6 through the kernel family (`fused_window.delta_apply`):
+    scalar-prefetch row streaming instead of :func:`delta_correct`'s
+    [budget, M] gather+einsum. Bit-identical (integer adds)."""
+    from ..kernels import fused_window as fw
+
+    return fw.delta_apply(acc, im.dmajor, idx, weight, interpret=interpret,
+                          use_kernel=use_kernel)
 
 
 def full_dot_mxu(q_bipolar: jax.Array, im: ItemMemory,

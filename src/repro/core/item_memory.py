@@ -92,6 +92,45 @@ def plan_word_sel(cfg: TorrConfig, banks: int, planes: int) -> np.ndarray:
     return plane_sel(banks * cfg.bank_words, planes, cfg.bit_planes)
 
 
+def bank_plane_sel(cfg: TorrConfig, banks: int, planes: int) -> np.ndarray:
+    """Static enabled-word indices for a (banks, planes) plan in *bank-major*
+    order (bank 0's enabled words first, plane-major inside each bank).
+
+    This is the column order of the fused kernel path
+    (``core.aligner.full_scores_all``): every bank's enabled words form a
+    contiguous run, so the bank-prefix kernel can publish the hamming count
+    at each bank boundary, and each static plan reads exactly its enabled
+    words. Hamming sums over columns, so any shared q/im order is exact."""
+    return np.concatenate([
+        np.arange(b * cfg.bank_words + p, (b + 1) * cfg.bank_words,
+                  cfg.bit_planes)
+        for b in range(banks)
+        for p in range(planes)
+    ]).astype(np.int32)
+
+
+def pmajor_bank_blocks(
+    pmajor: jax.Array, cfg: TorrConfig, banks: int, planes: int
+) -> jax.Array:
+    """The (banks, planes) plan's enabled item-memory words in the
+    *bank-major* column order of :func:`bank_plane_sel`, assembled from
+    static contiguous slices of the ``pmajor`` view.
+
+    ``pmajor``'s plane-p block lays that plane's words out in packed word
+    order, so bank b's plane-p words are the contiguous run
+    ``[p * wpb + b * bank_plane_words, p * wpb + (b + 1) * bank_plane_words)``
+    — reduced plans genuinely *read* proportionally fewer bytes (static
+    slices), never a full-width gather or mask. uint32 [M, banks * planes *
+    plane_words]."""
+    wpb = pmajor.shape[-1] // cfg.bit_planes      # words per plane block
+    bpw = cfg.plane_words                         # bank's words per plane
+    return jnp.concatenate([
+        pmajor[..., p * wpb + b * bpw: p * wpb + (b + 1) * bpw]
+        for b in range(banks)
+        for p in range(planes)
+    ], axis=-1)
+
+
 def build_item_memory(bipolar: jax.Array, plane_total: int = 4) -> ItemMemory:
     """Derive all access-pattern views from bipolar codes [M, D].
 

@@ -9,6 +9,14 @@ entries written earlier in the same window — matching the ASIC's per-window
 FSM — and the three paths are real `lax.switch` branches, so only the
 selected path executes.
 
+By default the full path runs through the fused Pallas kernel family
+(``fused="switch"``/``"prefix"``, see :func:`torr_window_step`): the whole
+window's proposal batch takes one bank/plane-gated XNOR-popcount pass
+*before* the scan (the full branch then only gathers its row), and the
+delta branch's Eq. 6 correction streams through the scalar-prefetch
+kernel. ``fused="off"`` restores the per-proposal jnp-oracle executable,
+which the fused path is tested bit-identical against.
+
 The returned :class:`WindowTelemetry` trace is the input to the
 cycle-accurate model (`repro.perf.cycle_model`), keeping the functional and
 timing models in lock-step by construction.
@@ -16,7 +24,6 @@ timing models in lock-step by construction.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -65,14 +72,20 @@ class WindowOutput:
 
 
 def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, planes,
-                   wmask, high):
+                   wmask, high, acc_full_all=None, fused_delta=False):
     """Scan body over proposals for a fixed window context (all closures are
-    window-constant traced values; ``planes`` is static — the latched plan)."""
+    window-constant traced values; ``planes`` is static — the latched plan).
+
+    ``acc_full_all`` is the fused path's pre-computed int32 [N_max, M]
+    full-scan accumulator batch (``aligner.full_scores_all``): the full
+    branch then just gathers its row, so the scan never re-reads the item
+    memory. ``None`` keeps the legacy per-proposal jnp oracle in-branch
+    (the reference executable the fused path is tested against)."""
     d_eff = cfg.d_eff_planned(banks, planes)
     tag = plan_tag(banks, planes)
 
     def body(cache: CacheState, inp):
-        q_packed, valid = inp
+        q_packed, valid, i = inp
         idx, rho, _ham = query_cache.nearest(cache, q_packed, cfg, banks,
                                              planes)
         d_idx, d_weight, d_count = al.delta_indices(
@@ -88,7 +101,10 @@ def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, planes,
             return query_cache.touch(cache, idx), out, jnp.array(False)
 
         def delta_branch(cache):
-            acc = al.delta_correct(cache.acc[idx], im, d_idx, d_weight)
+            if fused_delta:
+                acc = al.delta_apply(cache.acc[idx], im, d_idx, d_weight)
+            else:
+                acc = al.delta_correct(cache.acc[idx], im, d_idx, d_weight)
             s = al.readout(acc, d_eff)
             out, active, key, margin = reasoner.gate_and_apply(
                 s, task_w, cache.out[idx], cache.topk_key[idx],
@@ -101,7 +117,10 @@ def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, planes,
             return cache, out, active
 
         def full_branch(cache):
-            acc = al.full_dot(q_packed, im, wmask)
+            if acc_full_all is None:
+                acc = al.full_dot(q_packed, im, wmask)
+            else:
+                acc = acc_full_all[i]
             s = al.readout(acc, d_eff)
             out, active, key, margin = reasoner.gate_and_apply(
                 s, task_w, cache.out[idx], cache.topk_key[idx],
@@ -138,6 +157,8 @@ def torr_window_step(
     queue_depth: jax.Array,    # int32 []
     cfg: TorrConfig,
     plan=None,                 # static KnobPlan (None = uncontrolled)
+    fused=None,                # static: "switch" | "prefix" | "off"
+    ham_prefix_all=None,       # int32 [N_max, M, cap] hoisted prefix counts
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """Process one window; returns (new_state, detections, telemetry).
 
@@ -146,12 +167,33 @@ def torr_window_step(
     is a bit-exact no-op), selects the bit-slice planes the scans read, and
     offsets the tau thresholds. ``plan=None`` (or the full plan) reproduces
     the uncontrolled step bit-for-bit.
+
+    ``fused`` (static) picks the full path's lowering. The default
+    (``None`` -> ``"switch"``) routes the whole window's full-path scan
+    through the Pallas kernel family (``aligner.full_scores_all``): all
+    N_max proposals go through one fused bank/plane-gated XNOR-popcount
+    pass *before* the scan, and the delta branch's Eq. 6 correction rides
+    the scalar-prefetch kernel — bit-identical to the jnp oracle.
+    ``"prefix"`` is the vmap-shaped lowering the batched multi-stream step
+    selects (one bank-prefix pass instead of a per-bank switch;
+    ``ham_prefix_all`` carries the counts when the caller hoisted the
+    kernel over a whole stream batch); ``"off"`` keeps the legacy
+    per-proposal oracle in-branch (the reference executable, and the
+    cheaper trade for windows that rarely take the full path on branchy
+    CPU backends — the hoisted scan runs per window, where the in-branch
+    oracle runs per full-path proposal).
     """
+    if fused is None:
+        fused = "switch"
+    if fused not in ("switch", "prefix", "off"):
+        raise ValueError(f"fused={fused!r} not in ('switch','prefix','off')")
     if plan is None:
         planes = cfg.bit_planes
+        cap = cfg.B
     else:
         plan.validate(cfg)
         planes = plan.planes
+        cap = min(plan.banks, cfg.B)
         cfg = plan.thresholds(cfg)
     n_valid = jnp.sum(valid.astype(jnp.int32))
     high = policy.high_load(n_valid, queue_depth, cfg)
@@ -160,9 +202,24 @@ def torr_window_step(
         banks = jnp.minimum(banks, jnp.int32(plan.banks))
     wmask = plan_word_mask(cfg, banks, planes)
 
+    acc_full_all = None
+    if fused != "off":
+        acc_full_all = al.full_scores_all(
+            q_packed_all, im, banks, cfg, planes=planes, cap=cap, mode=fused,
+            ham_prefix=ham_prefix_all)
+
+    # The scalar-prefetch delta kernel pays off where branch economy is
+    # real (the "switch" lowering: only the selected path executes). Under
+    # the vmapped "prefix" lowering every lane computes all three branches,
+    # and a budget-deep scalar-streaming grid per lane is the wrong shape —
+    # the vectorized jnp gather-einsum IS the batched scatter-accumulate
+    # there, so the oracle form is kept deliberately.
     body = _proposal_body(cfg, im, state.task_weights, banks, planes, wmask,
-                          high)
-    cache, (outs, telem) = jax.lax.scan(body, state.cache, (q_packed_all, valid))
+                          high, acc_full_all=acc_full_all,
+                          fused_delta=fused == "switch")
+    cache, (outs, telem) = jax.lax.scan(
+        body, state.cache,
+        (q_packed_all, valid, jnp.arange(cfg.N_max, dtype=jnp.int32)))
 
     actions, d_counts, rhos, active = telem
     # padding actions (3) are reported as bypass with zero cost
@@ -215,6 +272,7 @@ def torr_multi_stream_step(
     cfg: TorrConfig,
     serial: bool = False,      # static: lax.map instead of vmap
     plan=None,                 # static KnobPlan shared by all S windows
+    fused=None,                # static: "switch" | "prefix" | "off"
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """One compiled step over S streams' windows.
 
@@ -239,27 +297,59 @@ def torr_multi_stream_step(
         economy (only the selected path executes) while still amortizing
         the per-window host dispatch. The right trade on branchy CPU
         backends; ~2x over the per-stream Python loop in table6.
+
+    ``fused`` defaults per lowering: the vmap lowering takes the
+    ``"prefix"`` kernel dispatch (under vmap a per-bank ``lax.switch``
+    would execute every branch on the whole batch), the serial lowering
+    takes ``"switch"`` (branch economy survives inside ``lax.map``). In
+    prefix mode the bank-prefix kernel is hoisted *out* of the per-stream
+    lowering and runs once over the flattened S x N_max proposal batch —
+    the item-memory tile is read once per query block for the whole step,
+    and each stream's window selects its traced bank choice from the
+    precomputed boundary counts. All of it is bit-identical to
+    ``fused="off"``, the legacy oracle step.
     """
+    if fused is None:
+        fused = "switch" if serial else "prefix"
+
+    ham_prefix = None
+    if fused == "prefix":
+        if plan is None:
+            planes, cap = cfg.bit_planes, cfg.B
+        else:
+            plan.validate(cfg)
+            planes, cap = plan.planes, min(plan.banks, cfg.B)
+        S, N, W = q_packed_all.shape
+        ham_prefix = al.plan_prefix_hamming(
+            q_packed_all.reshape(S * N, W), im, cfg, planes=planes, cap=cap,
+        ).reshape(S, N, cfg.M, cap)
+
     if serial:
         def body(args):
-            st, q, v, b, qd = args
-            return torr_window_step(st, im, q, v, b, qd, cfg, plan=plan)
+            st, q, v, b, qd, hp = args
+            return torr_window_step(st, im, q, v, b, qd, cfg, plan=plan,
+                                    fused=fused, ham_prefix_all=hp)
 
         return jax.lax.map(
-            body, (state, q_packed_all, valid, boxes, queue_depth)
+            body,
+            (state, q_packed_all, valid, boxes, queue_depth, ham_prefix),
         )
-    step = functools.partial(torr_window_step, cfg=cfg, plan=plan)
-    return jax.vmap(step, in_axes=(0, None, 0, 0, 0, 0))(
-        state, im, q_packed_all, valid, boxes, queue_depth
+
+    def step(st, im_, q, v, b, qd, hp):
+        return torr_window_step(st, im_, q, v, b, qd, cfg, plan=plan,
+                                fused=fused, ham_prefix_all=hp)
+
+    return jax.vmap(step, in_axes=(0, None, 0, 0, 0, 0, 0))(
+        state, im, q_packed_all, valid, boxes, queue_depth, ham_prefix
     )
 
 
 def torr_stream_batch_step(
     state: TorrState, im: ItemMemory, batch: StreamBatch, cfg: TorrConfig,
-    serial: bool = False, plan=None,
+    serial: bool = False, plan=None, fused=None,
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """`torr_multi_stream_step` over a packed :class:`StreamBatch`."""
     return torr_multi_stream_step(
         state, im, batch.q_packed, batch.valid, batch.boxes,
-        batch.queue_depth, cfg, serial=serial, plan=plan,
+        batch.queue_depth, cfg, serial=serial, plan=plan, fused=fused,
     )

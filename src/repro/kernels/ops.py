@@ -9,8 +9,10 @@ on CPU; on TPU pass interpret=False (the BlockSpecs are TPU-shaped).
 Bank gating contract: ``banks`` is a *static* int here. The controller's
 per-window bank choice is latched on the host (exactly like the ASIC's
 window-latched registers, Sec. 4.6) and dispatches one of <= B specialized
-executables; the functionally-equivalent traced-banks path lives in
-``repro.core.aligner`` for fully-jitted pipelines.
+executables. Fully-jitted pipelines, where the per-window bank choice is a
+*traced* value, instead go through ``repro.core.aligner.full_scores_all`` —
+the ``lax.switch`` / bank-prefix dispatch over the same kernel family in
+``kernels.fused_window`` (see ``kernels/README.md`` for when to use which).
 
 Precision gating rides the same contract: ``planes`` (of ``plane_total``
 bit-slice planes, ``core.item_memory``'s plane striping) is a static knob
@@ -30,8 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.item_memory import plane_sel
-from . import ref
-from .delta_update import delta_update as _delta_kernel
+from . import fused_window, ref
 from .sign_project import sign_project as _sign_kernel
 from .xnor_popcount_sim import TM_DEFAULT, TQ_DEFAULT, TW, fit_tile as _tile
 from .xnor_popcount_sim import packed_hamming_batched as _ham_kernel
@@ -46,14 +47,20 @@ def _batched_hamming(
 ) -> jax.Array:
     """Shared dispatch for every packed-hamming consumer (full-path scans
     and cache-nearest lookups): the batched kernel when shapes tile, the
-    jnp oracle otherwise."""
+    jnp oracle otherwise. In interpret mode the word tile clips to the
+    largest divisor of the enabled word count (<= TW), so sub-lane-width
+    D' (small-D configs, deep reduced plans) still rides the kernel; the
+    compiled TPU path keeps the lane-width requirement (the BlockSpecs
+    are TPU-shaped) and falls back to the oracle off lane alignment."""
     M = h.shape[0]
     words_eff = q.shape[1]
     # tile caps honor the TORR_TQ/TORR_TM autotuning overrides (see the
     # defaults table in kernels.xnor_popcount_sim)
-    if use_kernel and words_eff % TW == 0 and M % 8 == 0:
+    lane_ok = interpret or words_eff % TW == 0
+    if use_kernel and M % 8 == 0 and lane_ok:
         return _ham_kernel(q, h, tq=_tile(q.shape[0], TQ_DEFAULT),
-                           tm=_tile(M, TM_DEFAULT), tw=TW,
+                           tm=_tile(M, TM_DEFAULT),
+                           tw=_tile(words_eff, TW),
                            interpret=interpret)
     return ref.packed_hamming_ref(q, h)
 
@@ -124,6 +131,62 @@ def packed_similarity(
     return acc, acc.astype(jnp.float32) / d_eff
 
 
+def fused_similarity(
+    q_packed: jax.Array,     # uint32 [N, W_total]
+    im_packed: jax.Array,    # uint32 [M, W_total]
+    *,
+    banks: int,
+    bank_words: int,
+    planes: int | None = None,
+    plane_total: int = 4,
+    pmajor: jax.Array | None = None,
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Host-latched entry to the *fused* window-step kernel
+    (``kernels.fused_window.fused_scores``): one grid fuses the gated
+    XNOR-popcount scan, the integer accumulation and the argmax/top-2
+    readout, so neither the ``[N, M, W]`` xor nor a separate readout pass
+    materializes. Same static ``(banks, planes)`` contract as
+    :func:`packed_similarity`. Returns (acc int32 [N, M], cosine f32 [N, M],
+    best int32 [N] — ``argmax(acc)``, top2 int32 [N, 2] — the two highest
+    accumulators; ``top2[:, 0] - top2[:, 1]`` is the integer margin).
+    """
+    (q, h), d_eff = _plan_columns(
+        (q_packed, im_packed), banks, bank_words, planes, plane_total,
+        pmajor=pmajor)
+    acc, best, top2 = fused_window.fused_scores_any(
+        q, h, d_eff=d_eff, interpret=interpret, use_kernel=use_kernel)
+    return acc, acc.astype(jnp.float32) / d_eff, best, top2
+
+
+def encode_packed(
+    z: jax.Array,   # f32 [N, d] encoder features
+    R: jax.Array,   # f32 [D, d] projection
+    *,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Fused encode front-end: uint32 [N, D//32] = pack(sign(z @ R.T)).
+
+    On the Pallas lowering one kernel (``fused_window.sign_project_pack``)
+    keeps the f32 projection *and* the int8 bipolar code in VMEM; only the
+    packed words are written. Off-TPU (and off-tile) the jnp form runs —
+    XLA fuses the sign into the matmul there, and the pack is cheap."""
+    N, _ = z.shape
+    D, _ = R.shape
+    lowering = fused_window._pallas_lowering(interpret)
+    if (use_kernel and lowering is not None
+            and D % 128 == 0 and N % 8 == 0):
+        td = 256 if D % 256 == 0 else 128
+        return fused_window.sign_project_pack(z, R, tn=8, td=td,
+                                              interpret=lowering)
+    return _encode_packed_jnp(z, R)
+
+
+_encode_packed_jnp = jax.jit(ref.sign_project_pack_ref)
+
+
 def cache_nearest(
     q_packed: jax.Array,      # uint32 [N, W_total] query batch
     cache_packed: jax.Array,  # uint32 [K, W_total] cached queries
@@ -160,17 +223,17 @@ def delta_update(
     idx: jax.Array,       # int32 [budget]
     weight: jax.Array,    # int32 [budget]
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     use_kernel: bool = True,
 ) -> jax.Array:
-    """Sparse Eq. 6 correction; falls back to the oracle off-tile."""
-    M = acc.shape[0]
-    if use_kernel and M % 8 == 0:
-        tm = M if M <= 128 else 128
-        while M % tm:
-            tm //= 2
-        return _delta_kernel(acc, dmajor, idx, weight, tm=tm, interpret=interpret)
-    return ref.delta_update_ref(acc, dmajor, idx, weight)
+    """Sparse Eq. 6 correction under the family's lowering-selection
+    contract (``fused_window.delta_apply``): the scalar-prefetch kernel on
+    the Pallas lowering, the vectorized O(|Delta| * M) gather-einsum
+    elsewhere, the oracle off-tile. ``interpret=True`` forces the
+    interpret-mode kernel grid (tests)."""
+    return fused_window.delta_apply(acc, dmajor, idx, weight,
+                                    interpret=interpret,
+                                    use_kernel=use_kernel)
 
 
 def sign_project(

@@ -11,6 +11,41 @@ def packed_hamming_ref(q_packed: jax.Array, im_packed: jax.Array) -> jax.Array:
     return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
 
 
+def fused_scores_ref(
+    q_packed: jax.Array, im_packed: jax.Array, *, d_eff: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(acc [N, M], best [N], top2 [N, 2]) — `fused_window.fused_scores`."""
+    acc = d_eff - 2 * packed_hamming_ref(q_packed, im_packed)
+    best = jnp.argmax(acc, axis=-1).astype(jnp.int32)
+    if acc.shape[-1] < 2:
+        top2 = jnp.concatenate(
+            [acc, jnp.full_like(acc, -(2 ** 31))], axis=-1)
+    else:
+        top2 = jax.lax.top_k(acc, 2)[0]
+    return acc, best, top2
+
+
+def bank_prefix_hamming_ref(
+    q_packed: jax.Array, im_packed: jax.Array, *, cap: int
+) -> jax.Array:
+    """int32 [N, M, cap] — `fused_window.bank_prefix_hamming` (materializes
+    the [N, M, W] xor; the kernel exists so the jitted path never does)."""
+    N, W = q_packed.shape
+    M = im_packed.shape[0]
+    epw = W // cap
+    x = jnp.bitwise_xor(q_packed[:, None, :], im_packed[None, :, :])
+    pc = jax.lax.population_count(x).astype(jnp.int32)          # [N, M, W]
+    per_bank = pc.reshape(N, M, cap, epw).sum(axis=-1)          # [N, M, cap]
+    return jnp.cumsum(per_bank, axis=-1)
+
+
+def sign_project_pack_ref(z: jax.Array, R: jax.Array) -> jax.Array:
+    """uint32 [N, D//32] — `fused_window.sign_project_pack`."""
+    from ..core import hdc   # function-level: core imports this package
+
+    return hdc.pack_bits(sign_project_ref(z, R))
+
+
 def delta_update_ref(
     acc: jax.Array, dmajor: jax.Array, idx: jax.Array, weight: jax.Array
 ) -> jax.Array:

@@ -22,26 +22,36 @@ The M x TW tile is broadcast against TQ query rows — the analogue of the
 ASIC's column broadcast to W class lanes, repeated over a query block.
 
 TPU autotuning without code edits: the ``tq``/``tm`` defaults are
-overridable through environment variables, read once at import.
+overridable through environment variables and/or the autotune sweep's JSON
+artifact, all read once at import. Precedence (highest first):
 
-    knob | env var   | default | constraint
-    ---- | --------- | ------- | -----------------------------------------
-    tq   | ``TORR_TQ`` |       8 | query-block rows; sublane multiple (8)
-         |           |         | preferred, clipped to divide N
-    tm   | ``TORR_TM`` |     128 | class-tile rows; multiple of 8, clipped
-         |           |         | to divide M
-    tw   | (fixed)   |     128 | word-tile = lane width; not tunable
+    knob | source              | default | constraint
+    ---- | ------------------- | ------- | ---------------------------------
+    tq   | ``TORR_TQ`` env     |       8 | query-block rows; sublane
+         | ``TORR_TUNE_FILE``  |         | multiple (8) preferred, clipped
+         | artifact ``best.tq``|         | to divide N
+    tm   | ``TORR_TM`` env     |     128 | class-tile rows; multiple of 8,
+         | ``TORR_TUNE_FILE``  |         | clipped to divide M
+         | artifact ``best.tm``|         |
+    tw   | (fixed)             |     128 | word-tile = lane width; not
+         |                     |         | tunable (clipped to divide W)
 
-The defaults are interpret-mode safe and VMEM-conservative
-(TQ*TM*TW*4B = 512 KiB intermediate at 8x128x128); on real TPU sweep
-``TORR_TQ in {8, 16, 32}`` x ``TORR_TM in {128, 256, 512}`` against
-``benchmarks/micro_aligner.py`` and export the winner — both the direct
-kernel defaults and the tile caps used by ``kernels.ops`` honor the
-override, so no call site changes.
+``TORR_TUNE_FILE`` points at the JSON artifact written by
+``benchmarks/autotune_blocks.py`` (``{"best": {"tq": .., "tm": ..}, ...}``),
+so a sweep's winner applies fleet-wide without hand-exported shape vars;
+an explicit ``TORR_TQ``/``TORR_TM`` still wins over the file, and a
+missing/corrupt file named by the env var is an error, not a silent
+fallback. The built-in defaults are interpret-mode safe and
+VMEM-conservative (TQ*TM*TW*4B = 512 KiB intermediate at 8x128x128); on
+real TPU sweep ``TORR_TQ in {8, 16, 32}`` x ``TORR_TM in {128, 256, 512}``
+against ``benchmarks/micro_aligner.py`` — the direct kernel defaults, the
+tile caps used by ``kernels.ops`` and the fused family in
+``kernels.fused_window`` all honor the overrides, so no call site changes.
 """
 from __future__ import annotations
 
 import functools
+import json
 import os
 
 import jax
@@ -49,22 +59,42 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _env_tile(name: str, default: int) -> int:
-    """Block-shape override from the environment (bad values rejected)."""
+def _tuned_tiles() -> dict:
+    """Block shapes from the ``TORR_TUNE_FILE`` autotune artifact (the JSON
+    written by ``benchmarks/autotune_blocks.py``); {} when unset."""
+    path = os.environ.get("TORR_TUNE_FILE", "")
+    if not path:
+        return {}
+    try:
+        with open(path) as f:
+            artifact = json.load(f)
+        best = artifact["best"]
+        return {"tq": int(best["tq"]), "tm": int(best["tm"])}
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        raise ValueError(
+            f"TORR_TUNE_FILE={path!r} is not a readable autotune artifact "
+            f"({{'best': {{'tq': .., 'tm': ..}}}}): {e}") from None
+
+
+def _env_tile(name: str, default: int, tuned: int | None = None) -> int:
+    """Block-shape override: env var wins, then the tune-file artifact,
+    then the built-in default (bad values rejected)."""
     raw = os.environ.get(name, "")
     if not raw:
-        return default
-    try:
-        val = int(raw)
-    except ValueError:
-        raise ValueError(f"{name}={raw!r} is not an integer") from None
+        val = default if tuned is None else tuned
+    else:
+        try:
+            val = int(raw)
+        except ValueError:
+            raise ValueError(f"{name}={raw!r} is not an integer") from None
     if val <= 0:
         raise ValueError(f"{name}={val} must be positive")
     return val
 
 
-TQ_DEFAULT = _env_tile("TORR_TQ", 8)
-TM_DEFAULT = _env_tile("TORR_TM", 128)
+_TUNED = _tuned_tiles()
+TQ_DEFAULT = _env_tile("TORR_TQ", 8, _TUNED.get("tq"))
+TM_DEFAULT = _env_tile("TORR_TM", 128, _TUNED.get("tm"))
 TW = 128   # lane width; fixed
 
 

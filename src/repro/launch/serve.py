@@ -71,7 +71,7 @@ from ..serving import reranker as rr
 def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                      serial: bool = False, use_async: bool = False,
                      mesh_devices: int = 0, rt: str = "",
-                     governor: bool = False) -> None:
+                     governor: bool = False, fused: str | None = None) -> None:
     """Serve S synthetic TOOD streams through the batched window engine.
 
     ``use_async`` routes through the dispatch/collect
@@ -79,7 +79,9 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
     additionally shards the stream slots over that many devices (0 = all).
     ``rt`` ("RT-30"/"RT-60") arms the deadline admission controller;
     ``governor`` closes the QoS loop (slack-driven bank/precision gating
-    plus the energy governor — see the module docstring).
+    plus the energy governor — see the module docstring). ``fused`` picks
+    the full path's kernel dispatch (None = the lowering-appropriate fused
+    default, "off" = the jnp-oracle step; see ``repro.core.pipeline``).
     """
     from ..core import hdc
     from ..data import tood_synth as ts
@@ -112,10 +114,11 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
             from ..control import Governor, policy_from_env
             gov = Governor(cfg, policy_from_env(rt))
         eng = AsyncStreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
-                                mesh=mesh, tracker=tracker, governor=gov,
-                                paused=True)
+                                fused=fused, mesh=mesh, tracker=tracker,
+                                governor=gov, paused=True)
     else:
-        eng = StreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial)
+        eng = StreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
+                           fused=fused)
 
     R = jnp.asarray(sys_.R)
     n_tasks = world.relevance.shape[0]
@@ -223,6 +226,11 @@ def main() -> None:
     ap.add_argument("--torr-serial", action="store_true",
                     help="lax.map lowering (scalar branching; CPU-friendly) "
                          "instead of vmap lanes")
+    ap.add_argument("--torr-fused", default="", metavar="MODE",
+                    choices=["", "switch", "prefix", "off"],
+                    help="full-path kernel dispatch: switch | prefix | off "
+                         "(oracle); default picks per lowering — see "
+                         "repro.core.pipeline.torr_window_step")
     ap.add_argument("--async", dest="use_async", action="store_true",
                     help="dispatch/collect split: overlap host window "
                          "assembly with device steps (AsyncStreamEngine)")
@@ -246,7 +254,8 @@ def main() -> None:
                          use_async=(args.use_async or args.mesh != 0
                                     or bool(args.rt) or args.governor),
                          mesh_devices=args.mesh, rt=args.rt,
-                         governor=args.governor)
+                         governor=args.governor,
+                         fused=args.torr_fused or None)
         return
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)

@@ -347,6 +347,56 @@ def _op_traffic(op: Op, shapes: dict, comps: dict | None,
     return float(out_b + in_b)
 
 
+def materialized_shapes(
+    text: str, include_fusion_interiors: bool = True
+) -> set:
+    """All (dtype, dims) pairs produced by real ops anywhere in the module.
+
+    The fused-kernel acceptance check: the jitted window step must not
+    contain an ``[N, M, W]``-shaped xor/popcount intermediate anywhere —
+    not even inside a fusion computation (a fusion interior is VMEM-resident
+    on TPU, but an intermediate that *exists* in the program still bounds
+    the fusion's working set; the fused kernel keeps it tile-sized by
+    construction). ``include_fusion_interiors=False`` restricts to
+    top-level ops of executed computations (the HBM-materialization view).
+    Shape-plumbing ops (parameter/tuple/bitcast/iota/...) are skipped.
+    """
+    comps = parse_hlo(text)
+    skip = _SKIP_BYTES_KINDS | {"broadcast", "reshape", "transpose", "copy"}
+    # which computations are fusion interiors (called via calls= from a
+    # fusion op) — only needed for the restricted view
+    interior = set()
+    if not include_fusion_interiors:
+        for comp in comps.values():
+            for op in comp.ops:
+                if op.kind == "fusion":
+                    for m in re.finditer(r"calls=%([\w\.\-]+)", op.tail):
+                        interior.add(m.group(1))
+    out = set()
+    for name, comp in comps.items():
+        if name == "__entry__" or name in interior:
+            continue
+        for op in comp.ops:
+            if op.kind in skip:
+                continue
+            for dt, dims in _SHAPE_RE.findall(op.shape_str):
+                out.add((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def has_materialized_shape(
+    text: str, dims, dtype: str | None = None,
+    include_fusion_interiors: bool = True,
+) -> bool:
+    """True iff some real op in the module produces a ``dims``-shaped value
+    (of ``dtype``, any when None). See :func:`materialized_shapes`."""
+    dims = tuple(dims)
+    return any(
+        d == dims and (dtype is None or dt == dtype)
+        for dt, d in materialized_shapes(text, include_fusion_interiors)
+    )
+
+
 @dataclasses.dataclass
 class Analysis:
     flops: float

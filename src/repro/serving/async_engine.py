@@ -102,6 +102,7 @@ class AsyncStreamEngine(StreamEngine):
         n_slots: int = 16,
         jit: bool = True,
         serial: bool = False,
+        fused: str | None = None,
         mesh=None,
         pipeline_depth: int = 2,
         tracker: DeadlineTracker | None = None,
@@ -119,7 +120,7 @@ class AsyncStreamEngine(StreamEngine):
         self._mesh = mesh if mesh is not None and mesh.devices.size > 1 else None
         super().__init__(cfg, im,
                          n_slots=shd.pad_stream_slots(n_slots, self._mesh),
-                         jit=jit, serial=serial)
+                         jit=jit, serial=serial, fused=fused)
         if self._mesh is not None:
             # stacked per-stream state sharded on the slot axis; item memory
             # (shared task knowledge) replicated on every device
@@ -345,7 +346,7 @@ class AsyncStreamEngine(StreamEngine):
         )
         self._state, out, tel = self._step(
             self._state, self.im, batch, self.cfg, serial=self._serial,
-            plan=self._plan)
+            plan=self._plan, fused=self._fused)
         return out, tel
 
     def warmup(self) -> None:

@@ -73,6 +73,7 @@ class StreamEngine:
         n_slots: int = 16,
         jit: bool = True,
         serial: bool = False,
+        fused: str | None = None,
     ):
         self.cfg = cfg
         self.im = im
@@ -88,13 +89,17 @@ class StreamEngine:
         # module-level function (not a per-engine partial) so engines with
         # the same cfg share one compiled executable.
         self._serial = serial
+        # `fused` picks the full path's kernel dispatch (None = the
+        # lowering-appropriate fused default; "off" = the jnp-oracle
+        # reference step). Static, like `serial`.
+        self._fused = fused
         # The QoS control plane's latched knob plan: a static jit argument,
         # so each distinct plan dispatches its own specialized executable
         # (the window-latched register analogue). None = uncontrolled step.
         self._plan = None
         step = pipeline.torr_stream_batch_step
         self._step = (
-            jax.jit(step, static_argnames=("cfg", "serial", "plan"))
+            jax.jit(step, static_argnames=("cfg", "serial", "plan", "fused"))
             if jit else step
         )
         self.stats = EngineStats()
@@ -217,7 +222,7 @@ class StreamEngine:
         )
         self._state, out, tel = self._step(
             self._state, self.im, batch, self.cfg, serial=self._serial,
-            plan=self._plan,
+            plan=self._plan, fused=self._fused,
         )
         return out, tel
 
@@ -270,5 +275,6 @@ class StreamEngine:
             queue_depth=jnp.zeros((self.n_slots,), jnp.int32),
         )
         out = self._step(self._state, self.im, zero, self.cfg,
-                         serial=self._serial, plan=self._plan)
+                         serial=self._serial, plan=self._plan,
+                         fused=self._fused)
         jax.block_until_ready(out[1].scores)

@@ -28,6 +28,7 @@ from ..core import hdc, pipeline, reasoner
 from ..core.item_memory import build_item_memory
 from ..core.types import TorrConfig
 from ..data import tood_synth as ts
+from ..kernels import ops
 
 
 @dataclasses.dataclass
@@ -114,7 +115,9 @@ def run_torr(sys: TorrSystem, frames, task_id: int, queue_depth: int = 0):
     R = jnp.asarray(sys.R)
     for f in frames:
         z = jnp.asarray(f.feats)
-        q = hdc.pack_bits(hdc.sign_project(z, R))
+        # fused encode front-end: projection + sign + bit-pack in one kernel
+        # (bit-identical to hdc.pack_bits(hdc.sign_project(z, R)))
+        q = ops.encode_packed(z, R)
         state, res, tel = step(state, sys.im, q, jnp.asarray(f.valid),
                                jnp.asarray(f.boxes),
                                jnp.asarray(queue_depth, jnp.int32), cfg)

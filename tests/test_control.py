@@ -225,6 +225,158 @@ def test_plan_switch_rejects_stale_delta(seed, pa, pb):
                                   np.asarray(want)), (pa, pb, n)
 
 
+# --- fused full path vs oracle (ISSUE 4 tentpole) ---------------------------
+
+TELEM_CHECK = ("path", "delta_count", "banks", "rho", "planes", "high_load")
+
+
+def _run_windows(cfg, im, task_w, plan, fused, n_windows=3, qd_seq=None,
+                 seed=11):
+    """Drive a warm full -> delta -> bypass sequence through one lowering;
+    returns (state, [(out, tel), ...])."""
+    step = jax.jit(pipeline.torr_window_step,
+                   static_argnames=("cfg", "plan", "fused"))
+    state = pipeline.init_state(cfg, task_w)
+    q_bip, valid, boxes = _window(cfg, seed=seed)
+    outs = []
+    for t in range(n_windows):
+        q = jax.vmap(hdc.pack_bits)(
+            q_bip.at[:, t::131].multiply(-1) if t else q_bip)
+        qd = jnp.int32((qd_seq or [0] * n_windows)[t])
+        state, out, tel = step(state, im, q, valid, boxes, qd, cfg,
+                               plan=plan, fused=fused)
+        outs.append((out, tel))
+    return state, outs
+
+
+@pytest.mark.parametrize("banks,planes", PLANS)
+@pytest.mark.parametrize("mode", ["switch", "prefix"])
+def test_fused_full_path_bit_identical_over_plan_grid(banks, planes, mode):
+    """Acceptance (ISSUE 4): the fused jitted full path is bit-identical to
+    the jnp-oracle step — argmax, scores, telemetry AND cache state — for
+    every (banks, planes) plan in the ladder, in both fused lowerings,
+    over a warm window sequence that exercises full, delta and bypass."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,))
+    plan = _plan(banks, planes)
+    qd_seq = [0, 0, cfg.q_hi]
+
+    st0, base = _run_windows(cfg, im, task_w, plan, "off", qd_seq=qd_seq)
+    st1, got = _run_windows(cfg, im, task_w, plan, mode, qd_seq=qd_seq)
+    for t, ((o0, t0), (o1, t1)) in enumerate(zip(base, got)):
+        assert np.array_equal(np.asarray(o0.scores), np.asarray(o1.scores))
+        assert np.array_equal(np.asarray(o0.best), np.asarray(o1.best))
+        for f in TELEM_CHECK:
+            assert np.array_equal(np.asarray(getattr(t0, f)),
+                                  np.asarray(getattr(t1, f))), (t, f)
+    for a, b in zip(jax.tree_util.tree_leaves(st0.cache),
+                    jax.tree_util.tree_leaves(st1.cache)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("mode", ["switch", "prefix"])
+def test_fused_ragged_fallback_bit_identical(mode):
+    """Ragged M (not a multiple of 8) rides the transparent oracle
+    fallback inside the fused dispatch — still bit-identical end to end."""
+    cfg = TorrConfig(D=1024, B=8, M=27, K=4, N_max=5, delta_budget=128,
+                     feat_dim=64)
+    im = random_item_memory(jax.random.PRNGKey(3), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(4), (cfg.M,))
+    _, base = _run_windows(cfg, im, task_w, None, "off", seed=5)
+    _, got = _run_windows(cfg, im, task_w, None, mode, seed=5)
+    for (o0, _), (o1, _) in zip(base, got):
+        assert np.array_equal(np.asarray(o0.scores), np.asarray(o1.scores))
+
+
+@pytest.mark.parametrize("mode", ["switch", "prefix"])
+def test_fused_delta_then_full_exact_after_plan_switch(mode):
+    """Eq. 6 exactness through the fused path: delta-correct under plan A,
+    then a plan switch forces a full re-scan whose scores equal the oracle
+    restricted to plan B — same invariant as the oracle-path property test,
+    run end-to-end on the fused lowering."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,))
+    step = jax.jit(pipeline.torr_window_step,
+                   static_argnames=("cfg", "plan", "fused"))
+    plan_a, plan_b = _plan(8, 4), _plan(4, 2)
+    q_bip, valid, boxes = _window(cfg, seed=7)
+    nv = int(np.sum(np.asarray(valid)))
+    q0 = jax.vmap(hdc.pack_bits)(q_bip)
+    q1 = jax.vmap(hdc.pack_bits)(q_bip.at[:, :4].multiply(-1))
+
+    state = pipeline.init_state(cfg, task_w)
+    state, _, tel0 = step(state, im, q0, valid, boxes, jnp.int32(0), cfg,
+                          plan=plan_a, fused=mode)
+    assert (np.asarray(tel0.path)[:nv] == PATH_FULL).all()
+    st_a, _, tel_a = step(state, im, q1, valid, boxes, jnp.int32(0), cfg,
+                          plan=plan_a, fused=mode)
+    assert (np.asarray(tel_a.path)[:nv] == PATH_DELTA).all()
+    # delta-corrected accumulators are exact (== a fresh full scan would be)
+    wmask_a = plan_word_mask(cfg, plan_a.banks, plan_a.planes)
+    for n in range(nv):
+        acc = np.asarray(aligner.full_dot(q1[n], im, wmask_a))
+        slot = int(np.argwhere(
+            (np.asarray(st_a.cache.packed) == np.asarray(q1[n])).all(-1)
+        )[0, 0])
+        assert np.array_equal(np.asarray(st_a.cache.acc[slot]), acc), n
+
+    # plan switch: stale tag -> full re-scan, exact under plan B
+    _, out_b, tel_b = step(st_a, im, q1, valid, boxes, jnp.int32(0), cfg,
+                           plan=plan_b, fused=mode)
+    assert (np.asarray(tel_b.path)[:nv] == PATH_FULL).all()
+    wmask_b = plan_word_mask(cfg, plan_b.banks, plan_b.planes)
+    d_eff_b = int(cfg.d_eff_planned(plan_b.banks, plan_b.planes))
+    for n in range(nv):
+        if bool(tel_b.reasoner_active[n]):
+            acc = aligner.full_dot(q1[n], im, wmask_b)
+            want = acc.astype(jnp.float32) / d_eff_b * task_w
+            assert np.array_equal(np.asarray(out_b.scores[n]),
+                                  np.asarray(want)), n
+
+
+@pytest.mark.parametrize("serial", [False, True])
+def test_fused_multi_stream_bit_identical(serial):
+    """Both batched lowerings (vmap -> hoisted prefix kernel, lax.map ->
+    switch) are bit-identical to the oracle step under heterogeneous
+    per-stream load (different Alg. 1 bank choices per slot)."""
+    cfg = TorrConfig(D=1024, B=8, M=32, K=4, N_max=8, delta_budget=128,
+                     feat_dim=64, fps_target=40000.0)
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    S = 4
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M))
+    step = jax.jit(pipeline.torr_multi_stream_step,
+                   static_argnames=("cfg", "serial", "plan", "fused"))
+    q_bip = hdc.random_hv(jax.random.PRNGKey(2), (S, cfg.N_max, cfg.D))
+    valid = jnp.asarray(np.arange(cfg.N_max) < 6)[None].repeat(S, 0)
+    boxes = jnp.zeros((S, cfg.N_max, 4), jnp.float32)
+    qd = jnp.asarray([0, 2, 8, 30], jnp.int32)   # forces banks 8/8/3/1
+
+    res = {}
+    for fused in ("off", None):
+        st = pipeline.init_multi_stream_state(cfg, task_w)
+        outs = []
+        for t in range(3):
+            q = jax.vmap(jax.vmap(hdc.pack_bits))(
+                q_bip.at[:, :, t::97].multiply(-1) if t else q_bip)
+            st, out, tel = step(st, im, q, valid, boxes, qd, cfg,
+                                serial=serial, fused=fused)
+            outs.append((out, tel))
+        res[fused] = (st, outs)
+    banks_seen = np.asarray(res[None][1][0][1].banks)
+    assert len(set(banks_seen.tolist())) > 1, "want heterogeneous banks"
+    for t in range(3):
+        (o0, t0), (o1, t1) = res["off"][1][t], res[None][1][t]
+        assert np.array_equal(np.asarray(o0.scores), np.asarray(o1.scores))
+        for f in TELEM_CHECK:
+            assert np.array_equal(np.asarray(getattr(t0, f)),
+                                  np.asarray(getattr(t1, f))), (t, f)
+    for a, b in zip(jax.tree_util.tree_leaves(res["off"][0].cache),
+                    jax.tree_util.tree_leaves(res[None][0].cache)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
 # --- governor dynamics ------------------------------------------------------
 
 def test_ladder_shape_and_costs():
