@@ -22,6 +22,9 @@ Semantics (all exact, nothing approximate):
   * ``tau_q_off`` / ``tau_byp_off`` shift the Alg. 1 thresholds (negative
     offsets make the cheap delta/bypass paths easier to enter). Zero
     offsets leave the config object untouched.
+  * ``bucket_cap`` latches the compact dispatch's bucket tier
+    (``fused="compact"``; see ``core.pipeline``). Pure scheduling — every
+    tier is bit-exact, so it never participates in :attr:`is_full`.
 
 Exactness under switching: the query cache tags each accumulator with
 ``types.plan_tag(banks, planes)``; after any plan switch the tag mismatches
@@ -44,6 +47,12 @@ class KnobPlan:
     plane_total: int         # cfg.bit_planes at build time (denominator)
     tau_q_off: float = 0.0   # shift on the delta-vs-full threshold
     tau_byp_off: float = 0.0 # shift on the bypass threshold
+    # compact-dispatch bucket capacity (fused="compact"): the latched tier
+    # of core.policy.bucket_ladder the full-path proposals compact to. A
+    # *scheduling* knob, never a numeric one — any tier is bit-exact
+    # (overflow falls back to the hoisted scan); None defers to the step's
+    # bucket_cap argument / full capacity.
+    bucket_cap: int | None = None
 
     def __post_init__(self):
         if not 1 <= self.planes <= self.plane_total:
@@ -51,6 +60,9 @@ class KnobPlan:
                 f"planes={self.planes} outside 1..{self.plane_total}")
         if self.banks < 1:
             raise ValueError(f"banks={self.banks} must be >= 1")
+        if self.bucket_cap is not None and self.bucket_cap < 1:
+            raise ValueError(
+                f"bucket_cap={self.bucket_cap} must be >= 1 (or None)")
 
     @property
     def is_full(self) -> bool:

@@ -50,9 +50,19 @@ def delta_indices(
     count = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32))
     shifts = jnp.arange(32, dtype=jnp.uint32)
     flip_bits = ((xor[:, None] >> shifts) & jnp.uint32(1)).reshape(D)   # [D] 0/1
-    (idx,) = jnp.nonzero(flip_bits, size=budget, fill_value=0)
-    idx = idx.astype(jnp.int32)
-    in_budget = jnp.arange(budget, dtype=jnp.int32) < count
+    # first `budget` flipped dims in ascending order, 0-padded — exactly
+    # jnp.nonzero(size=budget, fill_value=0), but as a binary search over
+    # the flip-rank cumsum: the k-th flipped dim is the smallest d whose
+    # cumulative flip count reaches k+1. Sized-nonzero lowers to a full
+    # [D] sort and a scatter formulation hits XLA-CPU's scalar scatter
+    # loop; at one call per proposal per window either dominated the whole
+    # scan (~0.2 ms/call on CPU — ~8x the searchsorted form).
+    cum = jnp.cumsum(flip_bits)
+    k = jnp.arange(budget, dtype=jnp.int32)
+    in_budget = k < count
+    idx = jnp.where(
+        in_budget,
+        jnp.searchsorted(cum, k + 1, side="left").astype(jnp.int32), 0)
     # q_new bit at flipped idx: +1 bit -> new value +1 -> correction +2.
     new_bits = (q_new_packed[idx // 32] >> (idx % 32).astype(jnp.uint32)) & jnp.uint32(1)
     weight = jnp.where(new_bits == 1, 2, -2).astype(jnp.int32)
@@ -196,6 +206,74 @@ def full_scores_all(
 
     return jax.lax.switch(
         banks - 1, [make_branch(b) for b in range(1, cap + 1)], q_packed_all)
+
+
+def prefix_select(
+    ham_prefix: jax.Array,     # int32 [..., M, cap] bank-boundary counts
+    banks: jax.Array,          # int32 [...] traced per-row bank choice
+    planes: int,
+    cfg: TorrConfig,
+) -> jax.Array:
+    """Accumulators from bank-prefix hamming counts: each row selects its
+    traced bank boundary and normalizes by its own D'. int32 [..., M]."""
+    ham = jnp.take_along_axis(
+        ham_prefix, (banks - 1)[..., None, None], axis=-1)[..., 0]
+    d_eff = cfg.d_eff_planned(banks, planes)
+    return d_eff[..., None] - 2 * ham
+
+
+def compact_full_scores(
+    q_flat: jax.Array,         # uint32 [R, D//32] flattened proposal batch
+    full_mask: jax.Array,      # bool [R] rows whose window FSM chose FULL
+    banks_flat: jax.Array,     # int32 [R] each row's window's bank choice
+    im: ItemMemory,
+    cfg: TorrConfig,
+    *,
+    planes: int,               # static (latched plan)
+    cap: int,                  # static plan cap on banks
+    bucket_cap: int,           # static bucket capacity (the ladder tier)
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Compact-then-compute full-path accumulators: int32 [R, M], exact on
+    every ``full_mask`` row (other rows are zero — the apply pass never
+    reads them).
+
+    The third dispatch contract (``kernels/README.md``): the decide pass
+    already produced the path vector, so the fused XNOR-popcount scan runs
+    **only over the full-path rows**, compacted by a sized ``nonzero``
+    gather into a dense bucket padded to the *static* ``bucket_cap`` (a
+    ``core.policy.bucket_ladder`` tier — the executable family stays
+    bounded at ladder x plan). Each bucket row selects its own window's
+    traced bank boundary from the prefix counts, and the results scatter
+    back to their flat positions. If the window mix overflows the latched
+    tier (``n_full > bucket_cap``) a *scalar* ``lax.cond`` falls back to
+    the hoisted all-rows prefix pass — bit-exact always, merely slower, so
+    an engine's tier mispredict can never corrupt results.
+    """
+    R = q_flat.shape[0]
+    bucket_cap = min(int(bucket_cap), R)
+    banks_flat = jnp.clip(jnp.asarray(banks_flat, jnp.int32), 1, cap)
+    n_full = jnp.sum(full_mask.astype(jnp.int32))
+
+    def from_bucket():
+        (rows,) = jnp.nonzero(full_mask, size=bucket_cap, fill_value=R)
+        safe = jnp.minimum(rows, R - 1)
+        ham_b = plan_prefix_hamming(
+            q_flat[safe], im, cfg, planes=planes, cap=cap,
+            interpret=interpret, use_kernel=use_kernel)     # [cap_b, M, cap]
+        acc_b = prefix_select(ham_b, banks_flat[safe], planes, cfg)
+        return jnp.zeros((R, cfg.M), jnp.int32).at[rows].set(
+            acc_b, mode="drop")
+
+    def hoisted():
+        ham = plan_prefix_hamming(
+            q_flat, im, cfg, planes=planes, cap=cap,
+            interpret=interpret, use_kernel=use_kernel)     # [R, M, cap]
+        acc = prefix_select(ham, banks_flat, planes, cfg)
+        return jnp.where(full_mask[:, None], acc, 0)
+
+    return jax.lax.cond(n_full <= bucket_cap, from_bucket, hoisted)
 
 
 def delta_apply(

@@ -17,6 +17,13 @@ delta branch's Eq. 6 correction streams through the scalar-prefetch
 kernel. ``fused="off"`` restores the per-proposal jnp-oracle executable,
 which the fused path is tested bit-identical against.
 
+``fused="compact"`` goes one step further (the reuse-aware dispatch): a
+metadata-only *decide* pass produces the window's path vector first, and
+the fused scan then runs only over the full-path proposals, compacted into
+a dense bucket padded to a static ``bucket_cap`` tier
+(``core.policy.bucket_ladder``). Cache hits *skip* the scan instead of
+merely masking it — the kernel bytes scale with the miss rate.
+
 The returned :class:`WindowTelemetry` trace is the input to the
 cycle-accurate model (`repro.perf.cycle_model`), keeping the functional and
 timing models in lock-step by construction.
@@ -32,8 +39,8 @@ from . import aligner as al
 from . import policy, query_cache, reasoner
 from .item_memory import ItemMemory, plan_word_mask
 from .query_cache import CacheState
-from .types import (PATH_BYPASS, StreamBatch, TorrConfig, WindowTelemetry,
-                    plan_tag)
+from .types import (PATH_BYPASS, PATH_FULL, StreamBatch, TorrConfig,
+                    WindowTelemetry, plan_tag)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -72,7 +79,8 @@ class WindowOutput:
 
 
 def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, planes,
-                   wmask, high, acc_full_all=None, fused_delta=False):
+                   wmask, high, acc_full_all=None, fused_delta=False,
+                   decided=False):
     """Scan body over proposals for a fixed window context (all closures are
     window-constant traced values; ``planes`` is static — the latched plan).
 
@@ -80,21 +88,34 @@ def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, planes,
     full-scan accumulator batch (``aligner.full_scores_all``): the full
     branch then just gathers its row, so the scan never re-reads the item
     memory. ``None`` keeps the legacy per-proposal jnp oracle in-branch
-    (the reference executable the fused path is tested against)."""
+    (the reference executable the fused path is tested against).
+
+    ``decided=True`` is the compact dispatch's apply pass: the scan input
+    additionally carries the decide pass's per-proposal decisions
+    (action, nearest idx, LRU slot, delta indices/weights/count, rho), so
+    the body skips the PSU/Alg. 1 work entirely and only applies the
+    value-carrying branch — its cache updates replay the decide pass's
+    metadata updates exactly, keeping the two passes in lock-step."""
     d_eff = cfg.d_eff_planned(banks, planes)
     tag = plan_tag(banks, planes)
 
     def body(cache: CacheState, inp):
-        q_packed, valid, i = inp
-        idx, rho, _ham = query_cache.nearest(cache, q_packed, cfg, banks,
-                                             planes)
-        d_idx, d_weight, d_count = al.delta_indices(
-            q_packed, cache.packed[idx], wmask, cfg.delta_budget, cfg.D
-        )
-        # Eq. 6 exactness: the cached accumulator is only delta-correctable
-        # under the exact (banks, planes) it was computed with
-        tag_ok = cache.acc_tag[idx] == tag
-        action = policy.select_path(rho, d_count, tag_ok, high, cfg)
+        if decided:
+            (q_packed, valid, i,
+             action, idx, lru, d_idx, d_weight, d_count, rho) = inp
+        else:
+            q_packed, valid, i = inp
+            lru = None
+            idx, rho, _ham = query_cache.nearest(cache, q_packed, cfg, banks,
+                                                 planes)
+            d_idx, d_weight, d_count = al.delta_indices(
+                q_packed, cache.packed[idx], wmask, cfg.delta_budget, cfg.D
+            )
+            # Eq. 6 exactness: the cached accumulator is only
+            # delta-correctable under the exact (banks, planes) it was
+            # computed with
+            tag_ok = cache.acc_tag[idx] == tag
+            action = policy.select_path(rho, d_count, tag_ok, high, cfg)
 
         def bypass_branch(cache):
             out = cache.out[idx]
@@ -126,7 +147,7 @@ def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, planes,
                 s, task_w, cache.out[idx], cache.topk_key[idx],
                 cache.margin[idx], cfg,
             )
-            slot = query_cache.lru_slot(cache)
+            slot = query_cache.lru_slot(cache) if lru is None else lru
             cache = query_cache.write_entry(
                 cache, slot, packed=q_packed, acc=acc, acc_tag=tag,
                 out=out, topk_key=key, margin=margin,
@@ -137,15 +158,111 @@ def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, planes,
         def pad_branch(cache):
             return cache, jnp.zeros((cfg.M,), jnp.float32), jnp.array(False)
 
-        eff_action = jnp.where(valid, action, jnp.int32(3))
+        if decided:
+            eff_action = action       # the decide pass already padded it
+            d_count_t, rho_t = d_count, rho
+        else:
+            eff_action = jnp.where(valid, action, jnp.int32(3))
+            d_count_t = jnp.where(valid, d_count, 0)
+            rho_t = jnp.where(valid, rho, 0.0)
         cache, out, active = jax.lax.switch(
             eff_action, [bypass_branch, delta_branch, full_branch, pad_branch], cache
         )
-        telem = (eff_action, jnp.where(valid, d_count, 0),
-                 jnp.where(valid, rho, 0.0), active)
+        telem = (eff_action, d_count_t, rho_t, active)
         return cache, (out, telem)
 
     return body
+
+
+def _decide_body(cfg: TorrConfig, banks, planes, wmask, high):
+    """Metadata-only FSM pass: the compact dispatch's *decide* scan.
+
+    Runs Alg. 1 per proposal (cache-nearest, delta feasibility, path
+    selection) and applies only the cache-*metadata* updates later
+    proposals' decisions can observe — packed query, plan tag, age,
+    validity — preserving the per-window FSM's intra-window hit semantics
+    without touching a single item-memory row. The scan carries a
+    :class:`query_cache.MetaCache`, NOT the full cache: the [K, M] value
+    arrays (``acc``/``out``) must never ride the decide carry, or moving
+    them through the loop costs more than the scan this pass exists to
+    skip. The value-carrying work (full scans, Eq. 6 corrections,
+    reasoner) is deferred to the apply pass, which replays these exact
+    decisions."""
+    tag = plan_tag(banks, planes)
+
+    def body(meta: query_cache.MetaCache, inp):
+        q_packed, valid = inp
+        idx, rho, _ham = query_cache.nearest(meta, q_packed, cfg, banks,
+                                             planes)
+        d_idx, d_weight, d_count = al.delta_indices(
+            q_packed, meta.packed[idx], wmask, cfg.delta_budget, cfg.D
+        )
+        tag_ok = meta.acc_tag[idx] == tag
+        action = policy.select_path(rho, d_count, tag_ok, high, cfg)
+        eff = jnp.where(valid, action, jnp.int32(3))
+        # the LRU choice the apply pass's full branch will make — computed
+        # here because both passes see identical age/validity sequences
+        lru = query_cache.lru_slot(meta)
+
+        def bypass_branch(meta):
+            return query_cache.meta_touch(meta, idx)
+
+        def delta_branch(meta):
+            return query_cache.meta_write(meta, idx, packed=q_packed,
+                                          acc_tag=tag)
+
+        def full_branch(meta):
+            return query_cache.meta_write(meta, lru, packed=q_packed,
+                                          acc_tag=tag)
+
+        def pad_branch(meta):
+            return meta
+
+        meta = jax.lax.switch(
+            eff, [bypass_branch, delta_branch, full_branch, pad_branch], meta
+        )
+        dec = (eff, idx, lru, d_idx, d_weight,
+               jnp.where(valid, d_count, 0), jnp.where(valid, rho, 0.0))
+        return meta, dec
+
+    return body
+
+
+def _decide_pass(cache: CacheState, q_packed_all, valid, cfg: TorrConfig,
+                 banks, planes, high):
+    """Run the decide scan over one window; returns the per-proposal
+    decision arrays (action, idx, lru, d_idx, d_weight, d_count, rho)."""
+    wmask = plan_word_mask(cfg, banks, planes)
+    _, dec = jax.lax.scan(
+        _decide_body(cfg, banks, planes, wmask, high),
+        query_cache.meta_view(cache), (q_packed_all, valid))
+    return dec
+
+
+_FUSED_MODES = ("switch", "prefix", "compact", "off")
+
+
+def _plan_static(plan, cfg: TorrConfig):
+    """Resolve the latched plan to its static knobs: (planes, cap, cfg')."""
+    if plan is None:
+        return cfg.bit_planes, cfg.B, cfg
+    plan.validate(cfg)
+    return plan.planes, min(plan.banks, cfg.B), plan.thresholds(cfg)
+
+
+def _resolve_bucket_cap(bucket_cap, plan, n_rows: int) -> int:
+    """Static bucket capacity for the compact dispatch: the explicit
+    ``bucket_cap`` argument wins, else the latched plan's, else full
+    capacity (no overflow possible, no savings either)."""
+    cap = bucket_cap
+    if cap is None and plan is not None:
+        cap = plan.bucket_cap
+    if cap is None:
+        cap = n_rows
+    cap = int(cap)
+    if cap < 1:
+        raise ValueError(f"bucket_cap={cap} must be >= 1")
+    return min(cap, n_rows)
 
 
 def torr_window_step(
@@ -157,8 +274,9 @@ def torr_window_step(
     queue_depth: jax.Array,    # int32 []
     cfg: TorrConfig,
     plan=None,                 # static KnobPlan (None = uncontrolled)
-    fused=None,                # static: "switch" | "prefix" | "off"
+    fused=None,                # static: "switch" | "prefix" | "compact" | "off"
     ham_prefix_all=None,       # int32 [N_max, M, cap] hoisted prefix counts
+    bucket_cap=None,           # static compact-dispatch bucket capacity
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """Process one window; returns (new_state, detections, telemetry).
 
@@ -177,50 +295,76 @@ def torr_window_step(
     ``"prefix"`` is the vmap-shaped lowering the batched multi-stream step
     selects (one bank-prefix pass instead of a per-bank switch;
     ``ham_prefix_all`` carries the counts when the caller hoisted the
-    kernel over a whole stream batch); ``"off"`` keeps the legacy
+    kernel over a whole stream batch); ``"compact"`` is the reuse-aware
+    compact-then-compute dispatch: a metadata-only decide pass produces the
+    path vector first, the fused scan runs only over the full-path
+    proposals compacted to the static ``bucket_cap`` tier (see
+    ``aligner.compact_full_scores`` — overflow falls back exactly), and an
+    apply pass replays the decisions; ``"off"`` keeps the legacy
     per-proposal oracle in-branch (the reference executable, and the
     cheaper trade for windows that rarely take the full path on branchy
     CPU backends — the hoisted scan runs per window, where the in-branch
     oracle runs per full-path proposal).
+
+    ``bucket_cap`` (static, ``fused="compact"`` only) caps the compacted
+    bucket; ``None`` defers to the latched plan's ``bucket_cap``, else full
+    capacity. Engines pick it per window from the telemetry path-mix EWMA
+    (``fused="auto"``), bounded by ``core.policy.bucket_ladder``.
     """
     if fused is None:
         fused = "switch"
-    if fused not in ("switch", "prefix", "off"):
-        raise ValueError(f"fused={fused!r} not in ('switch','prefix','off')")
-    if plan is None:
-        planes = cfg.bit_planes
-        cap = cfg.B
-    else:
-        plan.validate(cfg)
-        planes = plan.planes
-        cap = min(plan.banks, cfg.B)
-        cfg = plan.thresholds(cfg)
+    if fused not in _FUSED_MODES:
+        raise ValueError(f"fused={fused!r} not in {_FUSED_MODES}")
+    planes, cap, cfg = _plan_static(plan, cfg)
     n_valid = jnp.sum(valid.astype(jnp.int32))
     high = policy.high_load(n_valid, queue_depth, cfg)
     banks = policy.select_banks(n_valid, queue_depth, cfg)
     if plan is not None and plan.banks < cfg.B:
         banks = jnp.minimum(banks, jnp.int32(plan.banks))
     wmask = plan_word_mask(cfg, banks, planes)
+    arange = jnp.arange(cfg.N_max, dtype=jnp.int32)
 
-    acc_full_all = None
-    if fused != "off":
-        acc_full_all = al.full_scores_all(
-            q_packed_all, im, banks, cfg, planes=planes, cap=cap, mode=fused,
-            ham_prefix=ham_prefix_all)
+    if fused == "compact":
+        dec = _decide_pass(state.cache, q_packed_all, valid, cfg, banks,
+                           planes, high)
+        acc_rows = al.compact_full_scores(
+            q_packed_all, dec[0] == PATH_FULL,
+            jnp.broadcast_to(banks, (cfg.N_max,)), im, cfg, planes=planes,
+            cap=cap, bucket_cap=_resolve_bucket_cap(bucket_cap, plan,
+                                                    cfg.N_max))
+        body = _proposal_body(cfg, im, state.task_weights, banks, planes,
+                              wmask, high, acc_full_all=acc_rows,
+                              fused_delta=True, decided=True)
+        cache, (outs, telem) = jax.lax.scan(
+            body, state.cache, (q_packed_all, valid, arange) + dec)
+    else:
+        acc_full_all = None
+        if fused != "off":
+            acc_full_all = al.full_scores_all(
+                q_packed_all, im, banks, cfg, planes=planes, cap=cap,
+                mode=fused, ham_prefix=ham_prefix_all)
 
-    # The scalar-prefetch delta kernel pays off where branch economy is
-    # real (the "switch" lowering: only the selected path executes). Under
-    # the vmapped "prefix" lowering every lane computes all three branches,
-    # and a budget-deep scalar-streaming grid per lane is the wrong shape —
-    # the vectorized jnp gather-einsum IS the batched scatter-accumulate
-    # there, so the oracle form is kept deliberately.
-    body = _proposal_body(cfg, im, state.task_weights, banks, planes, wmask,
-                          high, acc_full_all=acc_full_all,
-                          fused_delta=fused == "switch")
-    cache, (outs, telem) = jax.lax.scan(
-        body, state.cache,
-        (q_packed_all, valid, jnp.arange(cfg.N_max, dtype=jnp.int32)))
+        # The scalar-prefetch delta kernel pays off where branch economy is
+        # real (the "switch" lowering: only the selected path executes).
+        # Under the vmapped "prefix" lowering every lane computes all three
+        # branches, and a budget-deep scalar-streaming grid per lane is the
+        # wrong shape — the vectorized jnp gather-einsum IS the batched
+        # scatter-accumulate there, so the oracle form is kept deliberately.
+        body = _proposal_body(cfg, im, state.task_weights, banks, planes,
+                              wmask, high, acc_full_all=acc_full_all,
+                              fused_delta=fused == "switch")
+        cache, (outs, telem) = jax.lax.scan(
+            body, state.cache, (q_packed_all, valid, arange))
 
+    return _finish_window(cache, state.task_weights, outs, telem, valid,
+                          boxes, queue_depth, banks, n_valid, high, planes)
+
+
+def _finish_window(cache, task_w, outs, telem, valid, boxes, queue_depth,
+                   banks, n_valid, high, planes):
+    """Assemble (state, output, telemetry) from one window's scan results —
+    shared by every lowering of the step so the trace vocabulary cannot
+    drift between them."""
     actions, d_counts, rhos, active = telem
     # padding actions (3) are reported as bypass with zero cost
     path = jnp.where(actions == 3, PATH_BYPASS, actions)
@@ -240,7 +384,7 @@ def torr_window_step(
         best=jnp.argmax(outs, axis=-1).astype(jnp.int32),
         boxes=boxes,
     )
-    return TorrState(cache=cache, task_weights=state.task_weights), out, telemetry
+    return TorrState(cache=cache, task_weights=task_w), out, telemetry
 
 
 # ---------------------------------------------------------------------------
@@ -272,7 +416,8 @@ def torr_multi_stream_step(
     cfg: TorrConfig,
     serial: bool = False,      # static: lax.map instead of vmap
     plan=None,                 # static KnobPlan shared by all S windows
-    fused=None,                # static: "switch" | "prefix" | "off"
+    fused=None,                # static: "switch"|"prefix"|"compact"|"off"
+    bucket_cap=None,           # static compact-dispatch bucket capacity
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """One compiled step over S streams' windows.
 
@@ -308,17 +453,27 @@ def torr_multi_stream_step(
     and each stream's window selects its traced bank choice from the
     precomputed boundary counts. All of it is bit-identical to
     ``fused="off"``, the legacy oracle step.
+
+    ``fused="compact"`` is the reuse-aware third lowering: the decide pass
+    runs per stream (vmapped — metadata only, no item-memory reads), the
+    full-path proposals of *all* S windows are compacted together into one
+    static ``bucket_cap``-sized bucket (``core.policy.bucket_ladder`` tiers
+    up to S x N_max), one fused kernel pass scans only the bucket, and the
+    apply pass (vmap or lax.map per ``serial``) replays the decisions.
+    Bit-identical to ``fused="off"`` for any tier — an overflowing bucket
+    falls back to the hoisted all-rows pass via a scalar cond.
     """
     if fused is None:
         fused = "switch" if serial else "prefix"
 
+    if fused == "compact":
+        return _multi_stream_compact_step(
+            state, im, q_packed_all, valid, boxes, queue_depth, cfg,
+            serial=serial, plan=plan, bucket_cap=bucket_cap)
+
     ham_prefix = None
     if fused == "prefix":
-        if plan is None:
-            planes, cap = cfg.bit_planes, cfg.B
-        else:
-            plan.validate(cfg)
-            planes, cap = plan.planes, min(plan.banks, cfg.B)
+        planes, cap, _ = _plan_static(plan, cfg)
         S, N, W = q_packed_all.shape
         ham_prefix = al.plan_prefix_hamming(
             q_packed_all.reshape(S * N, W), im, cfg, planes=planes, cap=cap,
@@ -344,12 +499,74 @@ def torr_multi_stream_step(
     )
 
 
+def _multi_stream_compact_step(
+    state: TorrState, im: ItemMemory, q_packed_all, valid, boxes,
+    queue_depth, cfg: TorrConfig, *, serial: bool, plan, bucket_cap,
+) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
+    """The batched compact-then-compute lowering (``fused="compact"``).
+
+    Three hoisted stages instead of one monolithic per-stream FSM:
+
+      1. *decide* — the metadata-only Alg. 1 pass runs per stream (vmapped;
+         it reads the depth-K cache, never the item memory), yielding each
+         window's path vector and per-proposal decisions;
+      2. *compact + compute* — the full-path rows of all S windows are
+         compacted together into one static ``bucket_cap`` bucket and a
+         single fused kernel pass scans only the bucket
+         (``aligner.compact_full_scores``), so the XNOR-popcount bytes
+         scale with the *miss* rate, not the proposal count;
+      3. *apply* — the value-carrying scan replays the recorded decisions
+         per stream (vmap lanes, or lax.map when ``serial`` for scalar
+         branch economy), gathering full-path accumulators from the bucket.
+    """
+    planes, cap, cfg = _plan_static(plan, cfg)
+    S, N, W = q_packed_all.shape
+    bcap = _resolve_bucket_cap(bucket_cap, plan, S * N)
+
+    n_valid = jnp.sum(valid.astype(jnp.int32), axis=-1)        # [S]
+    high = policy.high_load(n_valid, queue_depth, cfg)          # [S]
+    banks = jax.vmap(lambda n, qd: policy.select_banks(n, qd, cfg))(
+        n_valid, queue_depth)                                   # [S]
+    if plan is not None and plan.banks < cfg.B:
+        banks = jnp.minimum(banks, jnp.int32(plan.banks))
+
+    dec = jax.vmap(
+        lambda c, q, v, b, h: _decide_pass(c, q, v, cfg, b, planes, h)
+    )(state.cache, q_packed_all, valid, banks, high)
+
+    acc_rows = al.compact_full_scores(
+        q_packed_all.reshape(S * N, W),
+        (dec[0] == PATH_FULL).reshape(S * N),
+        jnp.broadcast_to(banks[:, None], (S, N)).reshape(S * N),
+        im, cfg, planes=planes, cap=cap, bucket_cap=bcap,
+    ).reshape(S, N, cfg.M)
+
+    def apply_one(args):
+        st, q, v, b, qd, bk, h, nv, dec_s, accs = args
+        wmask = plan_word_mask(cfg, bk, planes)
+        body = _proposal_body(cfg, im, st.task_weights, bk, planes, wmask,
+                              h, acc_full_all=accs, fused_delta=serial,
+                              decided=True)
+        cache, (outs, telem) = jax.lax.scan(
+            body, st.cache,
+            (q, v, jnp.arange(cfg.N_max, dtype=jnp.int32)) + dec_s)
+        return _finish_window(cache, st.task_weights, outs, telem, v, b, qd,
+                              bk, nv, h, planes)
+
+    args = (state, q_packed_all, valid, boxes, queue_depth, banks, high,
+            n_valid, dec, acc_rows)
+    if serial:
+        return jax.lax.map(apply_one, args)
+    return jax.vmap(apply_one)(args)
+
+
 def torr_stream_batch_step(
     state: TorrState, im: ItemMemory, batch: StreamBatch, cfg: TorrConfig,
-    serial: bool = False, plan=None, fused=None,
+    serial: bool = False, plan=None, fused=None, bucket_cap=None,
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """`torr_multi_stream_step` over a packed :class:`StreamBatch`."""
     return torr_multi_stream_step(
         state, im, batch.q_packed, batch.valid, batch.boxes,
         batch.queue_depth, cfg, serial=serial, plan=plan, fused=fused,
+        bucket_cap=bucket_cap,
     )

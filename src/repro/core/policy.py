@@ -93,6 +93,39 @@ def window_cycles(
     return window_cycles_deff(n_full, n_delta, banks * cfg.bank_dims, cfg)
 
 
+# ---------------------------------------------------------------------------
+# Compact-dispatch bucket ladder. The compact full-path lowering
+# (core.pipeline, fused="compact") pads the compacted full-path proposals to
+# a *static* bucket capacity so the executable family stays bounded; the
+# capacities form a power-of-two ladder shared by the pipeline, the serving
+# engines' load-aware auto-dispatch and the cycle model's lowering-aware
+# pricing. Host-side python ints only (the capacity is a static jit arg).
+# ---------------------------------------------------------------------------
+
+def bucket_ladder(n_rows: int) -> tuple[int, ...]:
+    """Static bucket capacities for a flattened batch of ``n_rows``: powers
+    of two up to ``n_rows``, plus ``n_rows`` itself (the no-savings tier —
+    compaction at full capacity degenerates to the hoisted scan)."""
+    if n_rows < 1:
+        raise ValueError(f"n_rows={n_rows} must be >= 1")
+    caps = []
+    c = 1
+    while c < n_rows:
+        caps.append(c)
+        c *= 2
+    caps.append(n_rows)
+    return tuple(caps)
+
+
+def bucket_tier(n_rows: int, want: int) -> int:
+    """Smallest ladder capacity >= ``want`` (clamped to [1, n_rows])."""
+    want = max(1, min(int(want), n_rows))
+    for c in bucket_ladder(n_rows):
+        if c >= want:
+            return c
+    return n_rows
+
+
 def select_banks(
     n_objects: jax.Array, queue_depth: jax.Array, cfg: TorrConfig
 ) -> jax.Array:

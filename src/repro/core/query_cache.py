@@ -14,6 +14,7 @@ Each entry carries everything the three execution paths need:
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +90,9 @@ def nearest(
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Nearest cached query over the dims a (banks, planes) plan enables.
 
+    Duck-typed over :class:`CacheState` and :class:`MetaCache` (reads only
+    ``packed``/``valid``), as is :func:`lru_slot` (``age``/``valid``) —
+    the decide pass scans the metadata view through the same functions.
     Returns (idx [] int32, rho [] f32 per Eq. 5, hamming [] int32).
     ``planes`` is the static bit-plane knob (None = all planes, the
     pre-control-plane behavior). Invalid entries are pushed to rho = -inf;
@@ -137,6 +141,51 @@ def write_entry(
         margin=cache.margin.at[slot].set(margin),
         age=age,
         valid=cache.valid.at[slot].set(True),
+    )
+
+
+class MetaCache(NamedTuple):
+    """The decision-relevant slice of :class:`CacheState`.
+
+    Everything later *path decisions* in the same window can observe —
+    packed queries, plan tags, age, validity — and nothing else: the
+    compact dispatch's decide pass (``core.pipeline``) scans over this
+    view so the (much larger) ``acc``/``out`` value arrays never ride the
+    scan carry. Duck-typed into :func:`nearest` / :func:`lru_slot`, which
+    only touch these four fields.
+    """
+
+    packed: jax.Array    # uint32 [K, D//32]
+    acc_tag: jax.Array   # int32  [K]
+    age: jax.Array       # int32  [K]
+    valid: jax.Array     # bool   [K]
+
+
+def meta_view(cache: CacheState) -> MetaCache:
+    return MetaCache(packed=cache.packed, acc_tag=cache.acc_tag,
+                     age=cache.age, valid=cache.valid)
+
+
+def meta_touch(meta: MetaCache, slot: jax.Array) -> MetaCache:
+    """Metadata image of :func:`touch`: rejuvenate, content untouched."""
+    age = meta.age + 1
+    return meta._replace(age=age.at[slot].set(0))
+
+
+def meta_write(
+    meta: MetaCache, slot: jax.Array, *, packed: jax.Array,
+    acc_tag: jax.Array,
+) -> MetaCache:
+    """Metadata image of :func:`write_entry`: refresh one entry's packed
+    query + plan tag and rejuvenate it (everyone else ages), without the
+    value fields the decide pass cannot yet know. The two must stay
+    update-for-update identical or the decide and apply passes diverge."""
+    age = meta.age + 1
+    return MetaCache(
+        packed=meta.packed.at[slot].set(packed),
+        acc_tag=meta.acc_tag.at[slot].set(jnp.asarray(acc_tag, jnp.int32)),
+        age=age.at[slot].set(0),
+        valid=meta.valid.at[slot].set(True),
     )
 
 

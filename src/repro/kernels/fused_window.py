@@ -21,6 +21,10 @@ instead (``core.aligner.full_scores_all`` is the traced-banks shim):
     *every* bank boundary ``[N, cap, M]``. A traced ``banks`` then selects
     its prefix with one gather — the vmap-safe dispatch the multi-stream
     engine uses, where ``lax.switch`` would execute every branch per batch.
+    The reuse-aware compact dispatch (``core.aligner.compact_full_scores``,
+    the third contract in ``README.md``) runs this same kernel over a
+    *bucket* of only the full-path proposals, so ``N`` shrinks with the
+    cache hit rate instead of staying pinned at the batch size.
   * :func:`delta_apply` — the delta path's scatter-accumulate (Eq. 6),
     dispatching to the scalar-prefetch ``delta_update`` kernel so the
     bypass/delta/full trio all avoid the jnp oracle inside the jitted step.

@@ -12,7 +12,9 @@ window-latched registers, Sec. 4.6) and dispatches one of <= B specialized
 executables. Fully-jitted pipelines, where the per-window bank choice is a
 *traced* value, instead go through ``repro.core.aligner.full_scores_all`` —
 the ``lax.switch`` / bank-prefix dispatch over the same kernel family in
-``kernels.fused_window`` (see ``kernels/README.md`` for when to use which).
+``kernels.fused_window`` — or, when the path mix is known first, the
+compacted-bucket dispatch ``repro.core.aligner.compact_full_scores``
+(see ``kernels/README.md`` for the three contracts and when to use which).
 
 Precision gating rides the same contract: ``planes`` (of ``plane_total``
 bit-slice planes, ``core.item_memory``'s plane striping) is a static knob

@@ -52,6 +52,23 @@ Degrading is immediate (a missed deadline beats a narrow window);
 recovering takes ``TORR_GOV_HOLD`` comfortable windows per level so the
 plan latch doesn't thrash the specialized executables. Every window's
 telemetry records the (banks, planes) it actually ran with.
+
+Reuse-aware kernel dispatch (``--torr-fused``)
+==============================================
+
+``--torr-fused`` pins the full path's kernel dispatch. Besides the PR-4
+lowerings (``switch``/``prefix``/``off``), ``compact`` selects the
+compact-then-compute dispatch — a metadata-only decide pass produces the
+path vector, and the fused XNOR-popcount scan runs only over the
+full-path proposals, compacted to a static power-of-two bucket tier
+(``core.policy.bucket_ladder``; any tier is bit-exact, overflow falls
+back to the hoisted scan) — and ``auto`` lets the engine pick compact vs
+hoisted (and the bucket tier) per step from the telemetry path-mix EWMA,
+so reuse-heavy traffic stops paying the full scan over lanes that resolve
+via bypass/delta:
+
+    PYTHONPATH=src python -m repro.launch.serve --torr-streams 8 \\
+        --torr-frames 30 --torr-fused auto
 """
 from __future__ import annotations
 
@@ -227,10 +244,15 @@ def main() -> None:
                     help="lax.map lowering (scalar branching; CPU-friendly) "
                          "instead of vmap lanes")
     ap.add_argument("--torr-fused", default="", metavar="MODE",
-                    choices=["", "switch", "prefix", "off"],
-                    help="full-path kernel dispatch: switch | prefix | off "
-                         "(oracle); default picks per lowering — see "
-                         "repro.core.pipeline.torr_window_step")
+                    choices=["", "switch", "prefix", "compact", "auto",
+                             "off"],
+                    help="full-path kernel dispatch: switch | prefix | "
+                         "compact (reuse-aware compact-then-compute) | "
+                         "auto (load-aware: the engine picks compact vs "
+                         "hoisted per step from the telemetry path-mix "
+                         "EWMA) | off (oracle); default picks per "
+                         "lowering — see repro.core.pipeline."
+                         "torr_window_step")
     ap.add_argument("--async", dest="use_async", action="store_true",
                     help="dispatch/collect split: overlap host window "
                          "assembly with device steps (AsyncStreamEngine)")

@@ -24,7 +24,7 @@ import dataclasses
 
 import numpy as np
 
-from ..core.policy import aligner_cycles, mw_cycles
+from ..core.policy import aligner_cycles, bucket_tier, mw_cycles
 from ..core.types import PATH_BYPASS, PATH_DELTA, PATH_FULL, TorrConfig
 
 # --- Table 1 (TSMC 28 nm, 1 GHz): block peak powers in watts ---------------
@@ -103,11 +103,41 @@ def latency_summary(lat_s, budget_s: float) -> dict:
     }
 
 
+def lowering_scan_rows(n_full: int, n_valid: int, fused: str = "switch",
+                       bucket_cap: int | None = None) -> int:
+    """Full-scan rows a *lowering* actually pays for one window.
+
+    The ASIC (and the branch-economy ``"switch"``/``"off"`` lowerings) scan
+    exactly the full-path proposals; the hoisted ``"prefix"`` lowering
+    scans every row of the window regardless of the path mix; the
+    reuse-aware ``"compact"`` lowering scans its static bucket tier — the
+    smallest ``core.policy.bucket_ladder`` capacity holding the full-path
+    rows when ``bucket_cap`` is None (a perfectly-tiered dispatcher), or
+    the latched tier, degrading to every row when the bucket overflows
+    (the exact fallback rescans the window). This is what makes modeled
+    cycles shrink with the *hit rate* under compact dispatch while the
+    always-hoisted lowering stays flat.
+    """
+    if fused in ("off", "switch"):
+        return n_full
+    if fused == "prefix":
+        return n_valid
+    if fused == "compact":
+        if n_valid < 1:
+            return 0
+        cap = bucket_tier(n_valid, max(n_full, 1)) if bucket_cap is None \
+            else min(int(bucket_cap), n_valid)
+        return cap if n_full <= cap else n_valid
+    raise ValueError(f"unknown lowering {fused!r}")
+
+
 def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
                 reasoner_active: np.ndarray, n_valid: int,
                 cfg: TorrConfig, rt_budget_s: float,
                 window_scale: float = 1.0,
-                d_eff: int | None = None) -> WindowCost:
+                d_eff: int | None = None,
+                fused: str = "switch",
+                bucket_cap: int | None = None) -> WindowCost:
     """Cost of one window from its telemetry trace.
 
     ``d_eff`` overrides the bank-implied effective dimension when the
@@ -115,6 +145,9 @@ def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
     planes / bit_planes); :func:`telemetry_cost` derives it from telemetry.
     The aligner term comes from the shared Sec. 4.3 helper in
     ``core.policy`` — the same math Alg. 1 and the QoS governor price with.
+    ``fused``/``bucket_cap`` price the aligner's scan rows per the actual
+    lowering (:func:`lowering_scan_rows`); the default (``"switch"``) is
+    the ASIC-faithful per-full-proposal cost.
     """
     mw = mw_cycles(cfg)
     d_eff = banks * cfg.bank_dims if d_eff is None else int(d_eff)
@@ -126,8 +159,9 @@ def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
     n_delta = int(np.sum(path == PATH_DELTA))
     n_byp = int(np.sum(path == PATH_BYPASS))
 
+    scan_rows = lowering_scan_rows(n_full, int(n_valid), fused, bucket_cap)
     aligner = int(aligner_cycles(
-        n_full, int(np.sum(dc[path == PATH_DELTA])), d_eff, mw))
+        scan_rows, int(np.sum(dc[path == PATH_DELTA])), d_eff, mw))
     psu = n_valid * (d_eff // 32 + 8)
     reasoner = int(np.sum(ra)) * (mw + 4)
     sorter = (n_full + n_delta) * (cfg.M + 32)

@@ -397,6 +397,17 @@ def has_materialized_shape(
     )
 
 
+def analyze_jit(fn, *args, **kwargs) -> "Analysis":
+    """Lower + compile a jitted callable and analyze its optimized HLO.
+
+    Convenience for per-executable acceptance checks (e.g. the compact
+    dispatch's bytes-vs-bucket-tier curve): ``fn`` must be a ``jax.jit``
+    wrapper; ``args``/``kwargs`` are its example inputs (static kwargs
+    included). Returns the same :class:`Analysis` as :func:`analyze_text`.
+    """
+    return analyze_text(fn.lower(*args, **kwargs).compile().as_text())
+
+
 @dataclasses.dataclass
 class Analysis:
     flops: float

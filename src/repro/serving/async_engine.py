@@ -60,7 +60,11 @@ the tracker's arrival stamps and step EMA) plus the deepest per-slot
 backlog; the governor returns a knob plan (D' cap, bit-slice precision,
 tau offsets) that is latched for the step — a static jit argument, so each
 plan runs its own specialized executable, and the governor's hysteresis
-keeps that latch from thrashing. The collector closes the energy loop:
+keeps that latch from thrashing. ``fused="auto"`` arms the load-aware
+kernel dispatch the same way: the collector folds each step's full-path
+fraction into a host-side EWMA, and the dispatcher picks the compact
+bucket tier (or the hoisted default) per step — see
+``StreamEngine._resolve_fused``. The collector closes the energy loop:
 every served window's telemetry (which records the plan it actually ran
 with) is priced by ``perf.cycle_model.telemetry_cost`` and folded into the
 governor's EWMA energy estimate. With the governor pinned to the full plan
@@ -103,6 +107,7 @@ class AsyncStreamEngine(StreamEngine):
         jit: bool = True,
         serial: bool = False,
         fused: str | None = None,
+        bucket_cap: int | None = None,
         mesh=None,
         pipeline_depth: int = 2,
         tracker: DeadlineTracker | None = None,
@@ -120,7 +125,8 @@ class AsyncStreamEngine(StreamEngine):
         self._mesh = mesh if mesh is not None and mesh.devices.size > 1 else None
         super().__init__(cfg, im,
                          n_slots=shd.pad_stream_slots(n_slots, self._mesh),
-                         jit=jit, serial=serial, fused=fused)
+                         jit=jit, serial=serial, fused=fused,
+                         bucket_cap=bucket_cap)
         if self._mesh is not None:
             # stacked per-stream state sharded on the slot axis; item memory
             # (shared task knowledge) replicated on every device
@@ -334,6 +340,15 @@ class AsyncStreamEngine(StreamEngine):
             slack, self._tracker.step_ema_s, backlog=backlog,
             n_windows=len(served))
 
+    def _fold_telemetry(self) -> None:
+        # the dispatcher must never block on device telemetry; the
+        # collector already holds host-resident traces and feeds
+        # _observe_path_mix from there (a benign cross-thread float write)
+        pass
+
+    def _note_step_telemetry(self, tel) -> None:
+        pass
+
     def _dispatch(self, q, v, b, qd):
         if self._mesh is None:
             return super()._dispatch(q, v, b, qd)
@@ -344,9 +359,10 @@ class AsyncStreamEngine(StreamEngine):
             boxes=jax.device_put(b, s),
             queue_depth=jax.device_put(qd.astype(np.int32), s),
         )
+        fused, bucket_cap = self._resolve_fused()
         self._state, out, tel = self._step(
             self._state, self.im, batch, self.cfg, serial=self._serial,
-            plan=self._plan, fused=self._fused)
+            plan=self._plan, fused=fused, bucket_cap=bucket_cap)
         return out, tel
 
     def warmup(self) -> None:
@@ -419,6 +435,10 @@ class AsyncStreamEngine(StreamEngine):
                 # one device->host move per step, then cheap numpy slicing
                 out_h = jax.tree_util.tree_map(np.asarray, out)
                 tel_h = jax.tree_util.tree_map(np.asarray, tel)
+                if self._auto:
+                    # feed the load-aware dispatcher's path-mix EWMA from
+                    # the host-resident trace (never blocks the dispatcher)
+                    self._observe_path_mix(tel_h.path, tel_h.n_valid)
                 if self._tracker is not None:
                     self._tracker.observe_step(dur)
                 now = (self._tracker.now() if self._tracker

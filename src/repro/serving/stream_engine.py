@@ -23,6 +23,15 @@ Scheduling contract:
 
 Because the batched step is an exact vmap of the window FSM, results are
 bit-identical to running each stream alone (tests/test_multistream.py).
+
+``fused="auto"`` arms the load-aware kernel dispatch: every step the
+engine folds the previous step's full-path fraction into an EWMA and picks
+between the hoisted lowering default and the reuse-aware compact dispatch
+(``fused="compact"`` with a ``core.policy.bucket_ladder`` tier sized to the
+predicted miss count) — reuse-heavy traffic stops paying the full
+XNOR-popcount scan over lanes that resolve via bypass/delta. Every choice
+is bit-identical (compact overflow falls back exactly), so auto is purely
+a scheduling knob.
 """
 from __future__ import annotations
 
@@ -34,15 +43,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import pipeline, query_cache
+from ..core import pipeline, policy, query_cache
 from ..core.item_memory import ItemMemory
 from ..core.pipeline import TorrState, WindowOutput
-from ..core.types import StreamBatch, TorrConfig, WindowTelemetry
+from ..core.types import PATH_FULL, StreamBatch, TorrConfig, WindowTelemetry
 
 # admission-gate verdicts for `_assemble(gate=...)`; values align with
 # `repro.serving.deadline.Decision` (an IntEnum) so trackers can be used
 # as gates without this module importing the deadline layer
 GATE_ADMIT, GATE_ESCALATE, GATE_SHED = 0, 1, 2
+
+# load-aware fused="auto" dispatch: EWMA weight of the newest step's
+# full-path fraction, and the headroom multiplier the predicted full count
+# is padded by before rounding up to a bucket-ladder tier (a mispredict is
+# never wrong — the compact dispatch falls back exactly on overflow — but
+# the fallback rescans every row, so headroom is cheap insurance)
+AUTO_ALPHA = 0.3
+AUTO_HEADROOM = 2.0
 
 
 @dataclasses.dataclass
@@ -74,6 +91,7 @@ class StreamEngine:
         jit: bool = True,
         serial: bool = False,
         fused: str | None = None,
+        bucket_cap: int | None = None,
     ):
         self.cfg = cfg
         self.im = im
@@ -91,15 +109,26 @@ class StreamEngine:
         self._serial = serial
         # `fused` picks the full path's kernel dispatch (None = the
         # lowering-appropriate fused default; "off" = the jnp-oracle
-        # reference step). Static, like `serial`.
-        self._fused = fused
+        # reference step). Static, like `serial`. "auto" arms the
+        # load-aware dispatcher: each step picks compact-vs-hoisted (and
+        # the compact bucket tier) from the telemetry path-mix EWMA.
+        self._auto = fused == "auto"
+        self._fused = None if self._auto else fused
+        self._bucket_cap = bucket_cap
+        # full-path fraction EWMA; starts pessimistic (a cold cache makes
+        # every proposal a miss), so auto begins on the hoisted lowering.
+        # The backlog holds telemetry of in-flight steps; only entries at
+        # least one dispatch old are folded (see _fold_telemetry).
+        self._full_ewma = 1.0
+        self._tel_backlog: collections.deque = collections.deque()
         # The QoS control plane's latched knob plan: a static jit argument,
         # so each distinct plan dispatches its own specialized executable
         # (the window-latched register analogue). None = uncontrolled step.
         self._plan = None
         step = pipeline.torr_stream_batch_step
         self._step = (
-            jax.jit(step, static_argnames=("cfg", "serial", "plan", "fused"))
+            jax.jit(step, static_argnames=("cfg", "serial", "plan", "fused",
+                                           "bucket_cap"))
             if jit else step
         )
         self.stats = EngineStats()
@@ -214,16 +243,78 @@ class StreamEngine:
     def plan(self):
         return self._plan
 
+    # -- load-aware fused="auto" dispatch ------------------------------------
+
+    def _observe_path_mix(self, path, n_valid) -> None:
+        """Fold one (host-resident) step's full-path fraction into the EWMA.
+
+        ``path`` is the step's [S, N_max] path trace, ``n_valid`` the [S]
+        valid counts; pad lanes report bypass, so the full count needs no
+        masking. Called by :meth:`_fold_telemetry` (sync engine) or the
+        async collector, whichever owns host-side telemetry."""
+        nv = int(np.sum(n_valid))
+        if nv:
+            f = float(np.sum(np.asarray(path) == PATH_FULL)) / nv
+            self._full_ewma += AUTO_ALPHA * (f - self._full_ewma)
+
+    def _fold_telemetry(self) -> None:
+        """Sync-engine EWMA feed: fold telemetry of steps that are at
+        least one dispatch old. The newest entry stays in the backlog —
+        reading it here would block on the step that may still be running
+        on-device, serializing the host against the device every step;
+        leaving one in flight preserves the dispatch/compute overlap
+        (double buffering). The async engine overrides this with a no-op —
+        its collector thread feeds :meth:`_observe_path_mix` from already
+        host-resident traces without ever touching the dispatcher."""
+        while len(self._tel_backlog) > 1:
+            tel = self._tel_backlog.popleft()
+            self._observe_path_mix(np.asarray(tel.path),
+                                   np.asarray(tel.n_valid))
+
+    def _resolve_fused(self):
+        """(fused, bucket_cap) for the next dispatch.
+
+        Pinned modes pass straight through. In auto mode the predicted
+        full-path rows (path-mix EWMA x total lanes, padded by
+        ``AUTO_HEADROOM``) round up to a ``core.policy.bucket_ladder``
+        tier: a tier below full capacity dispatches the compact lowering,
+        full capacity falls back to the lowering-appropriate hoisted
+        default (compaction would save nothing). The executable family
+        stays bounded at ladder x plan — the recompile-guard test pins it.
+        """
+        if not self._auto:
+            return self._fused, self._bucket_cap
+        self._fold_telemetry()
+        n_rows = self.n_slots * self.cfg.N_max
+        want = int(np.ceil(self._full_ewma * n_rows * AUTO_HEADROOM))
+        tier = policy.bucket_tier(n_rows, want)
+        if tier >= n_rows:
+            return None, None           # hoisted default for this lowering
+        return "compact", tier
+
+    def _note_step_telemetry(self, tel) -> None:
+        """Remember the step's telemetry for a later EWMA fold (sync path;
+        the async engine's collector observes host telemetry instead)."""
+        if self._auto:
+            self._tel_backlog.append(tel)
+
+    @property
+    def full_path_ewma(self) -> float:
+        """The auto dispatcher's current full-path-fraction estimate."""
+        return self._full_ewma
+
     def _dispatch(self, q, v, b, qd):
         """Launch one batched step (asynchronously) and advance the state."""
         batch = StreamBatch(
             q_packed=jnp.asarray(q), valid=jnp.asarray(v),
             boxes=jnp.asarray(b), queue_depth=jnp.asarray(qd),
         )
+        fused, bucket_cap = self._resolve_fused()
         self._state, out, tel = self._step(
             self._state, self.im, batch, self.cfg, serial=self._serial,
-            plan=self._plan, fused=self._fused,
+            plan=self._plan, fused=fused, bucket_cap=bucket_cap,
         )
+        self._note_step_telemetry(tel)
         return out, tel
 
     def step(self) -> Dict[object, tuple[WindowOutput, WindowTelemetry]]:
@@ -274,7 +365,8 @@ class StreamEngine:
                 self._b0, (self.n_slots,) + self._b0.shape)),
             queue_depth=jnp.zeros((self.n_slots,), jnp.int32),
         )
+        fused, bucket_cap = self._resolve_fused()
         out = self._step(self._state, self.im, zero, self.cfg,
                          serial=self._serial, plan=self._plan,
-                         fused=self._fused)
+                         fused=fused, bucket_cap=bucket_cap)
         jax.block_until_ready(out[1].scores)

@@ -1,0 +1,439 @@
+"""Reuse-aware compact-then-compute dispatch (ISSUE 5 tentpole).
+
+The invariants:
+
+  * ``fused="compact"`` is *bit-identical* to the ``fused="off"`` oracle —
+    scores, argmax, telemetry AND cache state — across the (banks, planes)
+    plan grid, ragged windows, delta-then-full plan switches, reuse mixes
+    {0, 0.5, 0.99} and every bucket tier (including tiers the window mix
+    overflows: the scalar-cond fallback must be exact, merely slower);
+  * driving the bucket ladder across a churny trace compiles a *bounded*
+    executable family (<= len(ladder) x len(plan family));
+  * ``fused="auto"`` in the engines converges to the compact dispatch on
+    reuse-heavy traffic, stays on the hoisted default on full-heavy
+    traffic, and never changes a single output bit.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.control import KnobPlan
+from repro.core import hdc, pipeline, policy
+from repro.core.item_memory import random_item_memory
+from repro.core.types import PATH_DELTA, PATH_FULL, TorrConfig
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CFG = TorrConfig(D=1024, B=8, M=32, K=4, N_max=8, delta_budget=128,
+                 feat_dim=64)
+
+TELEM_CHECK = ("path", "delta_count", "banks", "rho", "planes", "high_load")
+
+
+def _plan(banks, planes, cfg=CFG, **kw):
+    return KnobPlan(banks=banks, planes=planes, plane_total=cfg.bit_planes,
+                    **kw)
+
+
+def _window(cfg, seed, n_valid=None):
+    q_bip = hdc.random_hv(jax.random.PRNGKey(seed), (cfg.N_max, cfg.D))
+    valid = np.arange(cfg.N_max) < (
+        n_valid if n_valid is not None else cfg.K - 1)
+    return q_bip, jnp.asarray(valid), jnp.zeros((cfg.N_max, 4), jnp.float32)
+
+
+STEP = jax.jit(pipeline.torr_window_step,
+               static_argnames=("cfg", "plan", "fused", "bucket_cap"))
+MSTEP = jax.jit(pipeline.torr_multi_stream_step,
+                static_argnames=("cfg", "serial", "plan", "fused",
+                                 "bucket_cap"))
+
+
+def _run_windows(cfg, im, task_w, plan, fused, bucket_cap=None, n_windows=3,
+                 qd_seq=None, seed=11):
+    """Warm full -> delta -> bypass sequence through one lowering."""
+    state = pipeline.init_state(cfg, task_w)
+    q_bip, valid, boxes = _window(cfg, seed=seed)
+    outs = []
+    for t in range(n_windows):
+        q = jax.vmap(hdc.pack_bits)(
+            q_bip.at[:, t::131].multiply(-1) if t else q_bip)
+        qd = jnp.int32((qd_seq or [0] * n_windows)[t])
+        state, out, tel = STEP(state, im, q, valid, boxes, qd, cfg,
+                               plan=plan, fused=fused, bucket_cap=bucket_cap)
+        outs.append((out, tel))
+    return state, outs
+
+
+def _assert_runs_equal(base, got, ctx=()):
+    st0, outs0 = base
+    st1, outs1 = got
+    for t, ((o0, t0), (o1, t1)) in enumerate(zip(outs0, outs1)):
+        assert np.array_equal(np.asarray(o0.scores),
+                              np.asarray(o1.scores)), (*ctx, t)
+        assert np.array_equal(np.asarray(o0.best),
+                              np.asarray(o1.best)), (*ctx, t)
+        for f in TELEM_CHECK:
+            assert np.array_equal(np.asarray(getattr(t0, f)),
+                                  np.asarray(getattr(t1, f))), (*ctx, t, f)
+    for a, b in zip(jax.tree_util.tree_leaves(st0.cache),
+                    jax.tree_util.tree_leaves(st1.cache)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), ctx
+
+
+# --- bit-identity over the plan grid x bucket tiers --------------------------
+
+PLANS = [(8, 4), (8, 2), (4, 4), (4, 1), (2, 2), (1, 1)]
+
+
+@pytest.mark.parametrize("banks,planes", PLANS)
+@pytest.mark.parametrize("tier", [1, 4, None])
+def test_compact_bit_identical_over_plan_grid(banks, planes, tier):
+    """Acceptance: compact == the oracle for every (banks, planes) plan and
+    every bucket tier — tier 1 overflows the warm all-full window, proving
+    the fallback path, tier None is full capacity."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,))
+    plan = _plan(banks, planes)
+    qd_seq = [0, 0, cfg.q_hi]
+    base = _run_windows(cfg, im, task_w, plan, "off", qd_seq=qd_seq)
+    got = _run_windows(cfg, im, task_w, plan, "compact", bucket_cap=tier,
+                       qd_seq=qd_seq)
+    _assert_runs_equal(base, got, (banks, planes, tier))
+
+
+def test_compact_bucket_cap_latched_via_plan():
+    """KnobPlan.bucket_cap is the latched tier when the step gets none."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,))
+    base = _run_windows(cfg, im, task_w, _plan(8, 4), "off")
+    got = _run_windows(cfg, im, task_w, _plan(8, 4, bucket_cap=2), "compact")
+    _assert_runs_equal(base, got, ("plan-latched",))
+    with pytest.raises(ValueError):
+        _plan(8, 4, bucket_cap=0)
+
+
+def test_compact_ragged_fallback_bit_identical():
+    """Ragged M rides the transparent oracle fallback inside the compacted
+    kernel dispatch — still bit-identical end to end."""
+    cfg = TorrConfig(D=1024, B=8, M=27, K=4, N_max=5, delta_budget=128,
+                     feat_dim=64)
+    im = random_item_memory(jax.random.PRNGKey(3), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(4), (cfg.M,))
+    base = _run_windows(cfg, im, task_w, None, "off", seed=5)
+    got = _run_windows(cfg, im, task_w, None, "compact", bucket_cap=2, seed=5)
+    _assert_runs_equal(base, got, ("ragged",))
+
+
+def test_compact_delta_then_full_after_plan_switch():
+    """Eq. 6 exactness through the compact path: delta under plan A, then a
+    plan switch forces a full re-scan routed through the bucket."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,))
+    plan_a, plan_b = _plan(8, 4), _plan(4, 2)
+    q_bip, valid, boxes = _window(cfg, seed=7)
+    nv = int(np.sum(np.asarray(valid)))
+    q0 = jax.vmap(hdc.pack_bits)(q_bip)
+    q1 = jax.vmap(hdc.pack_bits)(q_bip.at[:, :4].multiply(-1))
+
+    def run(fused, tier):
+        st = pipeline.init_state(cfg, task_w)
+        st, _, tel0 = STEP(st, im, q0, valid, boxes, jnp.int32(0), cfg,
+                           plan=plan_a, fused=fused, bucket_cap=tier)
+        assert (np.asarray(tel0.path)[:nv] == PATH_FULL).all()
+        st, _, tel_a = STEP(st, im, q1, valid, boxes, jnp.int32(0), cfg,
+                            plan=plan_a, fused=fused, bucket_cap=tier)
+        assert (np.asarray(tel_a.path)[:nv] == PATH_DELTA).all()
+        st, out_b, tel_b = STEP(st, im, q1, valid, boxes, jnp.int32(0), cfg,
+                                plan=plan_b, fused=fused, bucket_cap=tier)
+        assert (np.asarray(tel_b.path)[:nv] == PATH_FULL).all()
+        return st, out_b
+
+    st0, out0 = run("off", None)
+    for tier in (2, cfg.N_max):
+        st1, out1 = run("compact", tier)
+        assert np.array_equal(np.asarray(out0.scores),
+                              np.asarray(out1.scores)), tier
+        for a, b in zip(jax.tree_util.tree_leaves(st0.cache),
+                        jax.tree_util.tree_leaves(st1.cache)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), tier
+
+
+# --- reuse mixes over the batched step ---------------------------------------
+
+def _mix_steps(cfg, mix, S, T, seed=0):
+    """T windows of the shared reuse-mix synthesizer (window 0 warms the
+    cache all-full; queue depth pinned high so bypass can fire) — the same
+    traces the CI-tracked bench rows measure, so the bit-identity tests
+    and the reuse-mix benchmark cannot drift apart."""
+    from benchmarks.micro_aligner import _mix_trace
+
+    return _mix_trace(cfg, mix, S, T - 1, seed=seed, numpy=True)
+
+
+@pytest.mark.parametrize("mix", [0.0, 0.5, 0.99])
+@pytest.mark.parametrize("serial", [False, True])
+def test_compact_multi_stream_reuse_mixes(mix, serial):
+    """Acceptance: the batched compact step == the oracle at reuse mixes
+    {0, 0.5, 0.99} in both lowerings, with a tier the mixes over- and
+    under-flow."""
+    cfg = TorrConfig(D=1024, B=8, M=32, K=8, N_max=8, delta_budget=128,
+                     feat_dim=64)
+    S, T = 4, 4
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M))
+    steps = _mix_steps(cfg, mix, S, T, seed=int(mix * 100))
+    tier = policy.bucket_tier(S * cfg.N_max, S * cfg.N_max // 4)
+
+    def run(fused, bucket_cap=None):
+        st = pipeline.init_multi_stream_state(cfg, task_w)
+        outs = []
+        for q, v, b, qd in steps:
+            st, out, tel = MSTEP(st, im, jnp.asarray(q), jnp.asarray(v),
+                                 jnp.asarray(b), jnp.asarray(qd), cfg,
+                                 serial=serial, fused=fused,
+                                 bucket_cap=bucket_cap)
+            outs.append((out, tel))
+        return st, outs
+
+    _assert_runs_equal(run("off"), run("compact", tier), (mix, serial))
+
+
+def test_compact_multi_stream_heterogeneous_banks():
+    """Per-stream Alg. 1 bank choices route through one shared bucket: each
+    compacted row must select its own window's bank boundary."""
+    cfg = TorrConfig(D=1024, B=8, M=32, K=4, N_max=8, delta_budget=128,
+                     feat_dim=64, fps_target=40000.0)
+    S = 4
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M))
+    q_bip = hdc.random_hv(jax.random.PRNGKey(2), (S, cfg.N_max, cfg.D))
+    valid = jnp.asarray(np.arange(cfg.N_max) < 6)[None].repeat(S, 0)
+    boxes = jnp.zeros((S, cfg.N_max, 4), jnp.float32)
+    qd = jnp.asarray([0, 2, 8, 30], jnp.int32)   # forces banks 8/8/3/1
+
+    def run(fused, tier=None):
+        st = pipeline.init_multi_stream_state(cfg, task_w)
+        outs = []
+        for t in range(3):
+            q = jax.vmap(jax.vmap(hdc.pack_bits))(
+                q_bip.at[:, :, t::97].multiply(-1) if t else q_bip)
+            st, out, tel = MSTEP(st, im, q, valid, boxes, qd, cfg,
+                                 fused=fused, bucket_cap=tier)
+            outs.append((out, tel))
+        return st, outs
+
+    base = run("off")
+    banks_seen = np.asarray(base[1][0][1].banks)
+    assert len(set(banks_seen.tolist())) > 1, "want heterogeneous banks"
+    for tier in (8, None):
+        _assert_runs_equal(base, run("compact", tier), (tier,))
+
+
+# --- bounded executable family -----------------------------------------------
+
+def test_bucket_ladder_helpers():
+    assert policy.bucket_ladder(8) == (1, 2, 4, 8)
+    assert policy.bucket_ladder(24) == (1, 2, 4, 8, 16, 24)
+    assert policy.bucket_tier(24, 5) == 8
+    assert policy.bucket_tier(24, 0) == 1
+    assert policy.bucket_tier(24, 99) == 24
+    with pytest.raises(ValueError):
+        policy.bucket_ladder(0)
+
+
+def test_bucket_ladder_bounded_recompiles():
+    """Recompile-count guard: driving every ladder tier x a 2-plan family
+    across a churny trace compiles at most len(ladder) x len(plans)
+    executables — the bucket capacity is a latched static, not a leak."""
+    cfg = TorrConfig(D=1024, B=8, M=32, K=4, N_max=4, delta_budget=128,
+                     feat_dim=64)
+    S = 2
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M))
+
+    # a locally-defined wrapper gets a private jit cache, so the count
+    # below can't be polluted by other tests jitting the same step
+    def _mstep(state, im, q, valid, boxes, qd, cfg, plan=None, fused=None,
+               bucket_cap=None):
+        return pipeline.torr_multi_stream_step(
+            state, im, q, valid, boxes, qd, cfg, plan=plan, fused=fused,
+            bucket_cap=bucket_cap)
+
+    step = jax.jit(_mstep,
+                   static_argnames=("cfg", "plan", "fused", "bucket_cap"))
+    ladder = policy.bucket_ladder(S * cfg.N_max)
+    plans = (None, _plan(8, 2, cfg))
+    st = pipeline.init_multi_stream_state(cfg, task_w)
+    rng = np.random.default_rng(0)
+    for t in range(3 * len(ladder) * len(plans)):    # churny: revisit tiers
+        q = np.asarray(jax.vmap(hdc.pack_bits)(jnp.asarray(
+            (rng.integers(0, 2, (S, cfg.N_max, cfg.D)) * 2 - 1)
+            .astype(np.int8))))
+        st, _, _ = step(st, im, jnp.asarray(q),
+                        jnp.ones((S, cfg.N_max), bool),
+                        jnp.zeros((S, cfg.N_max, 4), jnp.float32),
+                        jnp.zeros((S,), jnp.int32), cfg,
+                        plan=plans[t % len(plans)], fused="compact",
+                        bucket_cap=ladder[t % len(ladder)])
+    assert step._cache_size() <= len(ladder) * len(plans), (
+        step._cache_size(), len(ladder), len(plans))
+
+
+# --- load-aware fused="auto" in the engines ----------------------------------
+
+def _submit_all(eng, task_w, steps, S):
+    for s in range(S):
+        eng.admit(s, task_w[s])
+        for q, v, b, _qd in steps:
+            eng.submit(s, q[s], v[s], b[s])
+
+
+def test_stream_engine_auto_converges_to_compact_on_reuse():
+    """Reuse-heavy traffic: the EWMA collapses and the engine dispatches
+    the compact lowering with a small ladder tier; outputs stay
+    bit-identical to the oracle engine."""
+    from repro.serving.stream_engine import StreamEngine
+
+    cfg = TorrConfig(D=1024, B=8, M=32, K=16, N_max=8, delta_budget=128,
+                     feat_dim=64)
+    S, T = 2, 6
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1),
+                                           (S, cfg.M)))
+    steps = _mix_steps(cfg, 1.0, S, T)     # identical/drifting windows only
+
+    def run(fused):
+        eng = StreamEngine(cfg, im, n_slots=S, fused=fused)
+        _submit_all(eng, task_w, steps, S)
+        res = eng.drain()
+        return eng, res
+
+    eng, res = run("auto")
+    assert eng.full_path_ewma < 0.5
+    mode, tier = eng._resolve_fused()
+    assert mode == "compact" and tier < S * cfg.N_max
+    _, base = run("off")
+    for s in range(S):
+        for t in range(T):
+            assert np.array_equal(np.asarray(res[s][t][0].scores),
+                                  np.asarray(base[s][t][0].scores)), (s, t)
+            assert np.array_equal(np.asarray(res[s][t][1].path),
+                                  np.asarray(base[s][t][1].path)), (s, t)
+
+
+def test_stream_engine_auto_stays_hoisted_on_full_traffic():
+    from repro.serving.stream_engine import StreamEngine
+
+    cfg = TorrConfig(D=1024, B=8, M=32, K=4, N_max=8, delta_budget=128,
+                     feat_dim=64)
+    S, T = 2, 4
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1),
+                                           (S, cfg.M)))
+    steps = _mix_steps(cfg, 0.0, S, T)     # fresh queries every window
+    eng = StreamEngine(cfg, im, n_slots=S, fused="auto")
+    _submit_all(eng, task_w, steps, S)
+    eng.drain()
+    assert eng.full_path_ewma > 0.5
+    mode, tier = eng._resolve_fused()
+    assert mode is None and tier is None   # the hoisted lowering default
+
+
+def test_async_engine_auto_bit_identical():
+    """The async engine's collector-fed EWMA never blocks the dispatcher
+    and never changes a bit vs the ungoverned sync engine."""
+    from repro.serving.async_engine import AsyncStreamEngine
+    from repro.serving.stream_engine import StreamEngine
+
+    cfg = TorrConfig(D=1024, B=8, M=32, K=16, N_max=8, delta_budget=128,
+                     feat_dim=64)
+    S, T = 2, 5
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1),
+                                           (S, cfg.M)))
+    steps = _mix_steps(cfg, 0.9, S, T, seed=3)
+
+    sync = StreamEngine(cfg, im, n_slots=S, fused="off")
+    _submit_all(sync, task_w, steps, S)
+    base = sync.drain()
+
+    with AsyncStreamEngine(cfg, im, n_slots=S, fused="auto",
+                           paused=True) as eng:
+        futs = {s: [] for s in range(S)}
+        for s in range(S):
+            eng.admit(s, task_w[s])
+            for q, v, b, _qd in steps:
+                futs[s].append(eng.submit(s, q[s], v[s], b[s]))
+        eng.start()
+        eng.flush(timeout=300)
+        for s in range(S):
+            for t, f in enumerate(futs[s]):
+                aout, _atel = f.result(timeout=10)
+                assert np.array_equal(aout.scores,
+                                      np.asarray(base[s][t][0].scores)), \
+                    (s, t)
+        assert eng.full_path_ewma < 1.0    # the collector fed the EWMA
+
+
+def test_compact_four_fake_devices():
+    """Acceptance: the compact dispatch is bit-identical to the oracle with
+    the stream axis sharded over 4 fake devices (subprocess: the forked
+    runtime must see XLA_FLAGS before jax initializes)."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+assert jax.device_count() == 4, jax.devices()
+from repro.core import pipeline
+from repro.core.item_memory import random_item_memory
+from repro.core.types import TorrConfig
+from repro.runtime import sharding as shd
+from repro.serving.async_engine import AsyncStreamEngine
+from repro.serving.stream_engine import StreamEngine
+from tests.test_compact_dispatch import _mix_steps, _submit_all
+
+cfg = TorrConfig(D=1024, B=8, M=32, K=8, N_max=8, delta_budget=128,
+                 feat_dim=64)
+S, T = 4, 3
+im = random_item_memory(jax.random.PRNGKey(0), cfg)
+task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+steps = _mix_steps(cfg, 0.5, S, T)
+
+sync = StreamEngine(cfg, im, n_slots=S, fused="off")
+_submit_all(sync, task_w, steps, S)
+base = sync.drain()
+
+eng = AsyncStreamEngine(cfg, im, n_slots=S, mesh=shd.stream_mesh(),
+                        fused="compact", bucket_cap=8, paused=True)
+futs = {s: [] for s in range(S)}
+for s in range(S):
+    eng.admit(s, task_w[s])
+    for q, v, b, _qd in steps:
+        futs[s].append(eng.submit(s, q[s], v[s], b[s]))
+eng.start()
+eng.flush(timeout=300)
+for s in range(S):
+    for t, f in enumerate(futs[s]):
+        aout, atel = f.result(timeout=10)
+        assert np.array_equal(aout.scores,
+                              np.asarray(base[s][t][0].scores)), (s, t)
+        assert np.array_equal(np.asarray(atel.path),
+                              np.asarray(base[s][t][1].path)), (s, t)
+eng.close()
+print("COMPACT-SHARDED-MATCH")
+"""
+    env = dict(os.environ,
+               PYTHONPATH=SRC + os.pathsep + os.path.dirname(SRC),
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "COMPACT-SHARDED-MATCH" in out.stdout

@@ -158,6 +158,70 @@ def test_fused_step_bytes_scale_with_plan():
     assert measured[-1] < measured[0]
 
 
+def test_compact_step_bytes_scale_with_bucket_tier():
+    """Acceptance (ISSUE 5): ``hlo_analyze.bytes_traffic`` of the compacted
+    multi-stream executable decreases strictly with the bucket tier —
+    smaller buckets genuinely move fewer bytes, they don't mask them."""
+    from repro.core import pipeline
+
+    from repro.core.item_memory import random_item_memory
+
+    cfg = TorrConfig(D=2048, B=8, M=48, K=4, N_max=8, delta_budget=128,
+                     feat_dim=64)
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    S = 4
+    st = pipeline.init_multi_stream_state(cfg, jnp.zeros((S, cfg.M)))
+    args = (st, im,
+            jnp.zeros((S, cfg.N_max, cfg.words), jnp.uint32),
+            jnp.ones((S, cfg.N_max), bool),
+            jnp.zeros((S, cfg.N_max, 4), jnp.float32),
+            jnp.zeros((S,), jnp.int32))
+    step = jax.jit(pipeline.torr_multi_stream_step,
+                   static_argnames=("cfg", "serial", "plan", "fused",
+                                    "bucket_cap"))
+    measured = [
+        hlo_analyze.analyze_jit(step, *args, cfg, serial=False,
+                                fused="compact", bucket_cap=tier)
+        .bytes_traffic
+        for tier in (32, 16, 8, 4)
+    ]
+    for hi, lo in zip(measured, measured[1:]):
+        assert lo < hi, measured
+
+
+def test_lowering_scan_rows_shrink_with_hit_rate():
+    """The lowering-aware cycle model: under compact dispatch the modeled
+    window cycles shrink as the hit rate rises (the bucket tier tracks the
+    miss count); the always-hoisted prefix lowering stays flat; an
+    overflowed bucket degrades to the all-rows fallback."""
+    from repro.perf.cycle_model import lowering_scan_rows
+
+    n_valid = 64
+    for n_full, tier in ((64, 64), (16, 16), (4, 4), (1, 1)):
+        assert lowering_scan_rows(n_full, n_valid, "compact") == tier
+    assert lowering_scan_rows(3, n_valid, "compact") == 4      # ladder pad
+    assert lowering_scan_rows(16, n_valid, "prefix") == n_valid
+    assert lowering_scan_rows(16, n_valid, "switch") == 16
+    # latched tier: used when it holds, all-rows fallback when it overflows
+    assert lowering_scan_rows(5, n_valid, "compact", bucket_cap=8) == 8
+    assert lowering_scan_rows(9, n_valid, "compact", bucket_cap=8) == n_valid
+
+    cfg = TorrConfig(D=8192, B=8, M=1024, W=64, N_max=64, delta_budget=1024)
+    budget = 1 / 60
+
+    def scan_cycles(n_full, fused):
+        path = np.concatenate([np.full(n_full, PATH_FULL),
+                               np.full(64 - n_full, PATH_BYPASS)])
+        return window_cost(path, np.zeros(64, int), 8, np.ones(64, bool),
+                           64, cfg, budget, fused=fused).cycles["aligner"]
+
+    compact = [scan_cycles(n, "compact") for n in (64, 16, 4)]
+    prefix = [scan_cycles(n, "prefix") for n in (64, 16, 4)]
+    assert compact[0] > compact[1] > compact[2]
+    assert prefix[0] == prefix[1] == prefix[2]
+    assert compact[-1] < prefix[-1]
+
+
 def test_shape_bytes_parsing():
     assert hlo_analyze._shape_elems_bytes("bf16[8,128]{1,0}") == (1024, 2048)
     assert hlo_analyze._shape_elems_bytes("(f32[4], s8[8])") == (12, 24)
