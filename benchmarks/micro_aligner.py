@@ -20,7 +20,11 @@ synthetic traces at fixed bypass/delta/full ratios, comparing the
 always-hoisted ``prefix`` scan against the reuse-aware ``compact``
 dispatch at both the full-path-dispatch and end-to-end-step level (see
 ``reuse_mix_rows``) — the ISSUE 5 acceptance gate is compact >= 1.3x
-prefix dispatch windows/sec at mix 0.9, S = 64, on CPU.
+prefix dispatch windows/sec at mix 0.9, S = 64, on CPU. The same sweep
+also reports step-level windows/sec for the compact dispatch under the
+*sequential* vs *batched* decide pass (``decide="scan"`` vs
+``"batched"``): the ISSUE 6 acceptance gate is batched >= 3x the
+sequential-decide baseline at mix 0.9, S = 64, M = 1024, on CPU.
 ``python -m benchmarks.micro_aligner --json PATH`` writes ``{"rows":
 [[name, value, derived], ...]}`` for the bench-smoke CI artifact; rows are
 also printed as CSV either way.
@@ -209,31 +213,36 @@ def reuse_mix_rows(mixes=(0.0, 0.5, 0.9, 0.99), cfg: TorrConfig = REUSE_CFG,
         paper's memory-traffic claim — hits *skip* the scan — and carries
         the ISSUE 5 acceptance gate (>= 1.3x at mix 0.9, S = 64, CPU).
       * ``*_step_*`` — the end-to-end jitted multi-stream step under each
-        lowering. On CPU the sequential per-proposal FSM machinery floors
-        every lowering (~0.6 s/step at M = 1024 regardless of the scan),
-        so these ratios compress toward 1; they are reported to keep the
-        end-to-end trajectory honest — on TPU, where the scan share
-        dominates, this is the number that should move.
+        lowering. The ``decide_scan`` row pins the sequential reference
+        pipeline end-to-end (per-proposal decide FSM + per-proposal apply
+        scan — the step as it stood before the batched decide), while
+        ``decide_batched`` is the compact default: batched decide plus the
+        batched apply (``pipeline._apply_pass_batched``), which hoists the
+        Eq. 6 corrections into one dense matmul and the reasoner top-k
+        into one dispatch-wide pass. This is the ISSUE 6 step-level gate
+        (>= 3x at mix 0.9, S = 64, M = 1024, CPU): the sequential FSM
+        machinery used to floor every lowering at ~0.6 s/step on CPU; the
+        batched pipeline is the first to break that floor.
     """
     im = random_item_memory(jax.random.PRNGKey(0), cfg)
     task_w = jax.random.uniform(jax.random.PRNGKey(1), (n_streams, cfg.M))
     step = jax.jit(pipeline.torr_multi_stream_step,
                    static_argnames=("cfg", "serial", "plan", "fused",
-                                    "bucket_cap"))
+                                    "bucket_cap", "decide"))
     R = n_streams * cfg.N_max
     rows = []
     for mix in mixes:
         windows = _mix_trace(cfg, mix, n_streams, n_windows)
         warm, timed = windows[0], windows[1:]
 
-        def drive(fused, bucket_cap=None, collect=False):
+        def drive(fused, bucket_cap=None, collect=False, decide=None):
             st = pipeline.init_multi_stream_state(cfg, task_w)
             st, _, _ = step(st, im, *warm, cfg, fused=fused,
-                            bucket_cap=bucket_cap)
+                            bucket_cap=bucket_cap, decide=decide)
             tels = []
             for q, v, b, qd in timed:
                 st, _out, tel = step(st, im, q, v, b, qd, cfg, fused=fused,
-                                     bucket_cap=bucket_cap)
+                                     bucket_cap=bucket_cap, decide=decide)
                 if collect:
                     tels.append(tel)
             jax.block_until_ready(st.cache.age)
@@ -266,7 +275,10 @@ def reuse_mix_rows(mixes=(0.0, 0.5, 0.9, 0.99), cfg: TorrConfig = REUSE_CFG,
 
         n_win = n_streams * len(timed)
         t_sprefix = best_of(lambda: drive("prefix"))
+        # compact's decide default IS "batched"; time the sequential-decide
+        # baseline separately for the ISSUE 6 step-level gate
         t_scompact = best_of(lambda: drive("compact", tier))
+        t_sscan = best_of(lambda: drive("compact", tier, decide="scan"))
 
         # dispatch-only: the recorded path vectors replay through the two
         # full-path scoring dispatches (what the decide pass hands them)
@@ -311,6 +323,13 @@ def reuse_mix_rows(mixes=(0.0, 0.5, 0.9, 0.99), cfg: TorrConfig = REUSE_CFG,
             (f"micro/reuse_{tag}_step_compact_wps",
              round(n_win / t_scompact, 1),
              f"tier={tier};speedup_vs_prefix={t_sprefix / t_scompact:.2f}"),
+            (f"micro/reuse_{tag}_step_decide_scan_wps",
+             round(n_win / t_sscan, 1),
+             "windows/sec, compact step, sequential decide FSM"),
+            (f"micro/reuse_{tag}_step_decide_batched_wps",
+             round(n_win / t_scompact, 1),
+             f"speedup_vs_scan={t_sscan / t_scompact:.2f}"
+             + (";acceptance: >= 3.0" if mix == 0.9 else "")),
         ])
     return rows
 

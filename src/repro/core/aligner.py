@@ -81,6 +81,33 @@ def delta_correct(
     return acc + jnp.einsum("k,km->m", weight, rows)
 
 
+def delta_corrections(
+    d_idx: jax.Array,     # int32 [L, budget] flipped dims (0-padded)
+    d_weight: jax.Array,  # int32 [L, budget] in {-2, 0, +2} (0 = padding)
+    im: ItemMemory,
+    D: int,
+) -> jax.Array:
+    """Eq. 6 correction *terms* for a whole proposal batch: int32 [L, M]
+    with ``corr[l] = sum_k d_weight[l, k] * dmajor[d_idx[l, k]]``.
+
+    The correction is independent of the accumulator it lands on
+    (:func:`delta_correct` is ``acc + corr``), so the batched apply pass
+    hoists it out of the per-proposal scan. Lowered as a dense f32 matmul:
+    the sparse per-row weights scatter into a [L, D] vector and one
+    GEMM against the D-major item memory reads every matrix once —
+    instead of gathering ``budget`` [M] rows per lane (~4x the bytes at
+    serving shapes). Bit-identical to the int32 gather-einsum: weights are
+    in {-2, 0, +2}, dmajor entries in {-1, +1} and each row has at most
+    ``budget`` nonzero terms, so every f32 partial sum is an integer of
+    magnitude <= 2*budget << 2^24 — exact under any accumulation order.
+    Padding entries scatter weight 0 onto dim 0, contributing nothing even
+    when dim 0 is a genuine flip."""
+    L = d_idx.shape[0]
+    wvec = jnp.zeros((L, D), jnp.float32).at[
+        jnp.arange(L)[:, None], d_idx].add(d_weight.astype(jnp.float32))
+    return jnp.round(wvec @ im.dmajor.astype(jnp.float32)).astype(jnp.int32)
+
+
 def readout(acc: jax.Array, d_eff: jax.Array | int) -> jax.Array:
     """Cosine scores from integer accumulators (normalization 'shift')."""
     return acc.astype(jnp.float32) / jnp.asarray(d_eff, jnp.float32)
@@ -274,6 +301,25 @@ def compact_full_scores(
         return jnp.where(full_mask[:, None], acc, 0)
 
     return jax.lax.cond(n_full <= bucket_cap, from_bucket, hoisted)
+
+
+def lookup_hamming_all(
+    q_packed_all: jax.Array,   # uint32 [N, W] query batch
+    entries: jax.Array,        # uint32 [K, W] lookup entries
+    wmask: jax.Array,          # bool [W] plan-enabled words (may be traced)
+    *, interpret: bool | None = None, use_kernel: bool = True,
+) -> jax.Array:
+    """Batched associative-lookup hamming table: int32 [N, K] masked
+    distances of every query against every entry (``ops.masked_hamming_all``
+    — the batched decide pass's PSU primitive). ``entries`` may be the
+    cache snapshot's packed queries or the proposal batch itself (the
+    intra-window writer table); bit-identical to the per-proposal masked
+    popcount in ``query_cache.nearest`` because disabled words are zeroed
+    on both operands before the plain hamming sum."""
+    from ..kernels import ops
+
+    return ops.masked_hamming_all(q_packed_all, entries, wmask,
+                                  interpret=interpret, use_kernel=use_kernel)
 
 
 def delta_apply(

@@ -24,6 +24,20 @@ a dense bucket padded to a static ``bucket_cap`` tier
 (``core.policy.bucket_ladder``). Cache hits *skip* the scan instead of
 merely masking it — the kernel bytes scale with the miss rate.
 
+The decide pass itself has two bit-identical lowerings (static
+``decide`` knob): the sequential per-proposal FSM scan (``"scan"``, the
+reference oracle) and the batched intra-window decide (``"batched"``, the
+default) — one wide snapshot-nearest pass plus a K-metadata
+conflict-resolution scan that replays the FSM's intra-window coupling
+(self-hits on slots written earlier in the window, LRU eviction chains)
+update-for-update. On the vmapped multi-stream lowering the batched
+decide's writer chains additionally unlock the *batched apply*
+(:func:`_apply_pass_batched`): Eq. 6 corrections become one dense matmul,
+the reasoner's top-k one dispatch-wide pass, and the per-proposal scan
+reduces to two cheap chain-resolution loops — the first lowering to break
+the sequential FSM machinery's CPU floor, still bit-exact against the
+oracle (``tests/test_decide_batched.py``).
+
 The returned :class:`WindowTelemetry` trace is the input to the
 cycle-accurate model (`repro.perf.cycle_model`), keeping the functional and
 timing models in lock-step by construction.
@@ -31,6 +45,7 @@ timing models in lock-step by construction.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -174,6 +189,138 @@ def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, planes,
     return body
 
 
+def _apply_pass_batched(state: TorrState, im: ItemMemory, q_packed_all,
+                        valid, boxes, queue_depth, cfg: TorrConfig, banks,
+                        planes, high, n_valid, dec, aux, acc_rows):
+    """Batched apply: replay a whole [S, N] dispatch's decisions without a
+    value-carrying scan — the ``decide="batched"`` counterpart of the
+    per-proposal :func:`_proposal_body` apply scan, bit-identical to it.
+
+    The apply scan's floor at serving shapes is not the cache scatter (the
+    [K, M] carry updates are cheap) but the per-lane *value math* it
+    serializes: the Eq. 6 gather-einsum and the reasoner's top-k run once
+    per proposal per stream. With the decisions — and the decide pass's
+    conflict byproducts (``aux``: the per-proposal writer ``src`` and the
+    final slot metadata) — known up front, every value becomes a batched
+    dispatch-wide computation:
+
+      1. Eq. 6 corrections are *accumulator-independent*
+         (``delta_correct = acc + corr``), so one dense
+         :func:`aligner.delta_corrections` matmul covers all S x N lanes;
+      2. accumulators resolve along writer chains in an N-step scan whose
+         per-step work is one [S, M] gather + add (``src`` says whether a
+         proposal reads its slot's snapshot row or an earlier proposal's
+         result — the intra-window coupling invariant, now data);
+      3. the gate's top-k key/margin depend only on each proposal's own
+         scores, so one batched ``lax.top_k`` covers the dispatch, and the
+         *cached* key/margin each proposal compares against is a direct
+         ``src`` gather (the writer's stored key IS its computed key);
+      4. gated outputs resolve in a second N-step scan (a match forwards
+         the read value, which may itself be a forwarded value);
+      5. the final cache is assembled in one shot: each slot takes its
+         last writer's resolved values (``aux``'s final writer table), and
+         age/validity come from the decide carry, which already replayed
+         ``meta_touch``/``meta_write`` update-for-update.
+
+    Bit-exactness: every per-element op (int32 adds, the f32 readout
+    divide, ``top_k`` tie order, the margin compare, ``scores * weights``)
+    is the same op the scan body runs, merely batched — enforced by the
+    differential harness in ``tests/test_decide_batched.py``."""
+    eff, idx, lru, d_idx, d_weight, d_count, rho = dec
+    src, writer_f, age_f, valid_f = aux
+    cache = state.cache
+    S, N, _W = q_packed_all.shape
+    M = cfg.M
+    del lru  # already folded into the decide pass's writer table
+
+    is_byp = eff == jnp.int32(0)
+    is_full = eff == jnp.int32(2)
+    is_pad = eff == jnp.int32(3)
+    is_write = jnp.logical_or(eff == jnp.int32(1), is_full)
+
+    d_eff = cfg.d_eff_planned(jnp.asarray(banks, jnp.int32), planes)  # [S]
+    tag = jnp.asarray(plan_tag(banks, planes), jnp.int32)             # [S]
+    corr = al.delta_corrections(
+        d_idx.reshape(S * N, -1), d_weight.reshape(S * N, -1), im, cfg.D
+    ).reshape(S, N, M)
+
+    # each proposal's snapshot view of its nearest slot
+    snap_acc = jnp.take_along_axis(cache.acc, idx[..., None], axis=1)
+    snap_out = jnp.take_along_axis(cache.out, idx[..., None], axis=1)
+    snap_key = jnp.take_along_axis(cache.topk_key, idx[..., None], axis=1)
+    snap_margin = jnp.take_along_axis(cache.margin, idx, axis=1)
+    s_ix = jnp.arange(S)
+    src_safe = jnp.maximum(src, 0)
+
+    def acc_body(acc_res, i):
+        read = jnp.where(src[:, i, None] < 0, snap_acc[:, i],
+                         acc_res[s_ix, src_safe[:, i]])
+        acc_i = jnp.where(is_full[:, i, None], acc_rows[:, i],
+                          read + corr[:, i])
+        return acc_res.at[:, i].set(acc_i), None
+
+    acc_res, _ = jax.lax.scan(acc_body, jnp.zeros((S, N, M), jnp.int32),
+                              jnp.arange(N))
+
+    s_all = al.readout(acc_res, d_eff[:, None, None])        # [S, N, M]
+    vals, kidx = jax.lax.top_k(s_all.reshape(S * N, M), cfg.top_k)
+    # without this barrier XLA-CPU sees the sliced/reshaped consumers and
+    # re-lowers TopK as a full row sort — ~5x the whole pass at M = 1024
+    vals, kidx = jax.lax.optimization_barrier((vals, kidx))
+    key_all = kidx.astype(jnp.int32).reshape(S, N, cfg.top_k)
+    margin_all = (vals[:, 0] - vals[:, 1]).reshape(S, N)
+    cached_key = jnp.where(
+        src[..., None] < 0, snap_key,
+        jnp.take_along_axis(key_all, src_safe[..., None], axis=1))
+    cached_margin = jnp.where(
+        src < 0, snap_margin,
+        jnp.take_along_axis(margin_all, src_safe, axis=1))
+    match = jnp.logical_and(
+        jnp.all(key_all == cached_key, axis=-1),
+        jnp.abs(margin_all - cached_margin) <= cfg.margin_eps)
+    reasoned = s_all * state.task_weights[:, None, :]
+    active = jnp.logical_and(is_write, jnp.logical_not(match))
+
+    def out_body(out_res, i):
+        read = jnp.where(src[:, i, None] < 0, snap_out[:, i],
+                         out_res[s_ix, src_safe[:, i]])
+        out_w = jnp.where(match[:, i, None], read, reasoned[:, i])
+        emit = jnp.where(is_pad[:, i, None], 0.0,
+                         jnp.where(is_byp[:, i, None], read, out_w))
+        return out_res.at[:, i].set(out_w), emit
+
+    out_res, outs = jax.lax.scan(out_body, jnp.zeros((S, N, M), jnp.float32),
+                                 jnp.arange(N))
+    outs = jnp.moveaxis(outs, 0, 1)                          # [S, N, M]
+
+    written = writer_f >= 0                                  # [S, K]
+    wsafe = jnp.maximum(writer_f, 0)
+    w2 = written[..., None]
+
+    def last_write(arr_prop, arr_snap):
+        return jnp.where(
+            w2, jnp.take_along_axis(arr_prop, wsafe[..., None], axis=1),
+            arr_snap)
+
+    cache = CacheState(
+        packed=last_write(q_packed_all, cache.packed),
+        acc=last_write(acc_res, cache.acc),
+        acc_tag=jnp.where(written, tag[:, None], cache.acc_tag),
+        out=last_write(out_res, cache.out),
+        topk_key=last_write(key_all, cache.topk_key),
+        margin=jnp.where(written,
+                         jnp.take_along_axis(margin_all, wsafe, axis=1),
+                         cache.margin),
+        age=age_f,
+        valid=valid_f,
+    )
+    telem = (eff, d_count, rho, active)
+    return jax.vmap(_finish_window,
+                    in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))(
+        cache, state.task_weights, outs, telem, valid, boxes, queue_depth,
+        banks, n_valid, high, planes)
+
+
 def _decide_body(cfg: TorrConfig, banks, planes, wmask, high):
     """Metadata-only FSM pass: the compact dispatch's *decide* scan.
 
@@ -230,8 +377,15 @@ def _decide_body(cfg: TorrConfig, banks, planes, wmask, high):
 
 def _decide_pass(cache: CacheState, q_packed_all, valid, cfg: TorrConfig,
                  banks, planes, high):
-    """Run the decide scan over one window; returns the per-proposal
-    decision arrays (action, idx, lru, d_idx, d_weight, d_count, rho)."""
+    """Run the sequential decide scan over one window; returns the
+    per-proposal decision arrays (action, idx, lru, d_idx, d_weight,
+    d_count, rho).
+
+    This is the *reference oracle* for the batched decide
+    (:func:`_decide_pass_batched`, ``decide="batched"``): the differential
+    harness in ``tests/test_decide_batched.py`` asserts the two produce
+    bit-identical decision tuples and final cache state. Keep them
+    update-for-update in lock-step."""
     wmask = plan_word_mask(cfg, banks, planes)
     _, dec = jax.lax.scan(
         _decide_body(cfg, banks, planes, wmask, high),
@@ -239,7 +393,128 @@ def _decide_pass(cache: CacheState, q_packed_all, valid, cfg: TorrConfig,
     return dec
 
 
+def _decide_pass_batched_aux(cache: CacheState, q_packed_all, valid,
+                             cfg: TorrConfig, banks, planes, high):
+    """Batched intra-window decide: one wide similarity pass + a cheap
+    conflict-resolution scan, bit-identical to :func:`_decide_pass`.
+
+    The sequential scan's per-proposal cost is a K-entry masked nearest
+    ([K, W] xor-popcount) plus an O(D) delta-index search — serialized
+    N_max times. Here the similarity work is hoisted into two batched
+    lookup passes over the *frozen* window-entry snapshot (the PSU's
+    one-wide-pass shape):
+
+      * ``ham_snap`` [N, K] — every proposal vs every snapshot entry;
+      * ``ham_prop`` [N, N] — every proposal vs every *other proposal*,
+        because the only packed values an intra-window write can install
+        are earlier proposals' own queries (``meta_write(packed=q_j)``).
+
+    The conflict pass is then a scan whose carry is only K-sized metadata
+    — ``writer`` (which proposal last wrote each slot, -1 = snapshot),
+    ``age`` and ``valid`` — so each step is O(K) gathers from the
+    precomputed tables instead of popcount work: slot k's hamming is
+    ``ham_snap[i, k]`` while untouched and ``ham_prop[i, writer[k]]``
+    after a write. This preserves the intra-window coupling invariant
+    (``policy.intra_window_coupled``): self-hits on slots written earlier
+    in the window, LRU eviction chains and plan-tag refreshes resolve
+    exactly as the sequential FSM would, because the carried metadata
+    replays ``meta_touch``/``meta_write`` update-for-update. rho keeps
+    Eq. 5's f32 arithmetic and argmax's first-max tie-breaking, so
+    decisions are bit-exact, not merely equivalent.
+
+    Delta-index extraction (the other per-proposal O(D) cost) is deferred
+    to one vmapped pass after the scan, against each proposal's *resolved*
+    old entry (snapshot row or earlier proposal's query, per the recorded
+    writer).
+
+    Returns ``(dec, aux)``: ``dec`` is the decision 7-tuple in the exact
+    layout of :func:`_decide_pass` (the apply scan replays it unchanged),
+    ``aux`` the conflict pass's byproducts the *batched* apply pass
+    (:func:`_apply_pass_batched`) needs to resolve intra-window read
+    chains without a value-carrying scan: ``src`` [N] (which earlier
+    proposal wrote each proposal's nearest slot at decision time, -1 =
+    snapshot) and the final ``(writer, age, valid)`` [K] metadata."""
+    wmask = plan_word_mask(cfg, banks, planes)
+    tag = plan_tag(banks, planes)
+    meta = query_cache.meta_view(cache)
+    ham_snap = query_cache.hamming_all(meta, q_packed_all, cfg, banks,
+                                       planes)                    # [N, K]
+    ham_prop = al.lookup_hamming_all(q_packed_all, q_packed_all,
+                                     wmask)                       # [N, N]
+    d_eff = jnp.asarray(
+        cfg.d_eff_planned(jnp.asarray(banks, jnp.int32), planes), jnp.float32)
+    snap_tag_ok = meta.acc_tag == tag                             # [K]
+    int_max = jnp.iinfo(jnp.int32).max
+
+    def body(carry, inp):
+        writer, age, valid_k = carry
+        hs, hp, v, i = inp
+        live = writer >= 0
+        ham_k = jnp.where(live, hp[jnp.maximum(writer, 0)], hs)   # [K]
+        rho_k = 1.0 - 2.0 * ham_k.astype(jnp.float32) / d_eff     # Eq. 5
+        rho_k = jnp.where(valid_k, rho_k, -jnp.inf)
+        idx = jnp.argmax(rho_k).astype(jnp.int32)
+        rho = rho_k[idx]
+        d_count = ham_k[idx]
+        src = writer[idx]
+        tag_ok = jnp.where(live[idx], True, snap_tag_ok[idx])
+        action = policy.select_path(rho, d_count, tag_ok, high, cfg)
+        eff = jnp.where(v, action, jnp.int32(3))
+        lru = jnp.argmax(jnp.where(valid_k, age, int_max)).astype(jnp.int32)
+
+        # replay the meta_touch / meta_write metadata updates
+        is_pad = eff == jnp.int32(3)
+        is_write = jnp.logical_or(eff == jnp.int32(1), eff == jnp.int32(2))
+        slot = jnp.where(eff == jnp.int32(2), lru, idx)
+        bump = jnp.logical_not(is_pad)
+        age = age + bump.astype(jnp.int32)
+        age = age.at[slot].set(jnp.where(bump, 0, age[slot]))
+        writer = writer.at[slot].set(jnp.where(is_write, i, writer[slot]))
+        valid_k = valid_k.at[slot].set(
+            jnp.logical_or(valid_k[slot], is_write))
+        out = (eff, idx, lru, jnp.where(v, d_count, 0),
+               jnp.where(v, rho, 0.0), src)
+        return (writer, age, valid_k), out
+
+    writer0 = jnp.full((cfg.K,), -1, jnp.int32)
+    arange = jnp.arange(cfg.N_max, dtype=jnp.int32)
+    carry_f, (eff, idx, lru, d_count, rho, src) = jax.lax.scan(
+        body, (writer0, meta.age, meta.valid),
+        (ham_snap, ham_prop, valid, arange))
+
+    # one vmapped delta-index pass against the resolved old entries
+    old_packed = jnp.where(src[:, None] < 0, cache.packed[idx],
+                           q_packed_all[jnp.maximum(src, 0)])
+    d_idx, d_weight, _cnt = jax.vmap(
+        lambda qn, qo: al.delta_indices(qn, qo, wmask, cfg.delta_budget,
+                                        cfg.D))(q_packed_all, old_packed)
+    dec = (eff, idx, lru, d_idx, d_weight, d_count, rho)
+    return dec, (src,) + carry_f
+
+
+def _decide_pass_batched(cache: CacheState, q_packed_all, valid,
+                         cfg: TorrConfig, banks, planes, high):
+    """:func:`_decide_pass_batched_aux` restricted to the decision 7-tuple
+    — the drop-in signature-compatible counterpart of :func:`_decide_pass`
+    for callers that replay decisions through the apply *scan*."""
+    dec, _aux = _decide_pass_batched_aux(cache, q_packed_all, valid, cfg,
+                                         banks, planes, high)
+    return dec
+
+
 _FUSED_MODES = ("switch", "prefix", "compact", "off")
+_DECIDE_MODES = ("scan", "batched")
+
+
+def _resolve_decide(decide) -> str:
+    """Static decide-pass lowering for the compact dispatch: the batched
+    intra-window decide by default, ``"scan"`` pinning the sequential
+    reference oracle."""
+    if decide is None:
+        decide = "batched"
+    if decide not in _DECIDE_MODES:
+        raise ValueError(f"decide={decide!r} not in {_DECIDE_MODES}")
+    return decide
 
 
 def _plan_static(plan, cfg: TorrConfig):
@@ -251,18 +526,34 @@ def _plan_static(plan, cfg: TorrConfig):
 
 
 def _resolve_bucket_cap(bucket_cap, plan, n_rows: int) -> int:
-    """Static bucket capacity for the compact dispatch: the explicit
-    ``bucket_cap`` argument wins, else the latched plan's, else full
-    capacity (no overflow possible, no savings either)."""
-    cap = bucket_cap
+    """Static bucket capacity for the compact dispatch. Precedence (pinned
+    by ``tests/test_decide_batched.py::test_bucket_cap_precedence``): the
+    explicit ``bucket_cap`` argument wins, else the latched plan's
+    ``KnobPlan.bucket_cap``, else full capacity (no overflow possible, no
+    savings either).
+
+    An explicit capacity above the dispatch's row count is clamped — a
+    bucket can never hold more rows than exist — but *warns* (at trace
+    time; the cap is static): silently shrinking a user's tier would let a
+    ladder misconfigured for a different batch shape (e.g. an engine plan
+    sized for S x N_max latched onto a single-window step) masquerade as a
+    deliberate full-capacity choice."""
+    cap, src = bucket_cap, "bucket_cap"
     if cap is None and plan is not None:
-        cap = plan.bucket_cap
+        cap, src = plan.bucket_cap, "plan.bucket_cap"
     if cap is None:
-        cap = n_rows
+        return n_rows
     cap = int(cap)
     if cap < 1:
         raise ValueError(f"bucket_cap={cap} must be >= 1")
-    return min(cap, n_rows)
+    if cap > n_rows:
+        warnings.warn(
+            f"{src}={cap} exceeds the dispatch's {n_rows} rows; clamping to "
+            f"full capacity (the no-savings tier). The latched ladder was "
+            f"likely sized for a different batch shape.",
+            stacklevel=3)
+        cap = n_rows
+    return cap
 
 
 def torr_window_step(
@@ -277,6 +568,7 @@ def torr_window_step(
     fused=None,                # static: "switch" | "prefix" | "compact" | "off"
     ham_prefix_all=None,       # int32 [N_max, M, cap] hoisted prefix counts
     bucket_cap=None,           # static compact-dispatch bucket capacity
+    decide=None,               # static: "batched" | "scan" (compact only)
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """Process one window; returns (new_state, detections, telemetry).
 
@@ -310,6 +602,15 @@ def torr_window_step(
     bucket; ``None`` defers to the latched plan's ``bucket_cap``, else full
     capacity. Engines pick it per window from the telemetry path-mix EWMA
     (``fused="auto"``), bounded by ``core.policy.bucket_ladder``.
+
+    ``decide`` (static, ``fused="compact"`` only) picks the decide pass's
+    lowering: ``"batched"`` (the ``None`` default) runs the batched
+    intra-window decide — one wide snapshot-nearest pass plus the
+    conflict-resolution scan (:func:`_decide_pass_batched`) — while
+    ``"scan"`` pins the sequential per-proposal FSM
+    (:func:`_decide_pass`), kept as the reference oracle. Both are
+    bit-identical by construction; the differential harness in
+    ``tests/test_decide_batched.py`` enforces it.
     """
     if fused is None:
         fused = "switch"
@@ -325,8 +626,11 @@ def torr_window_step(
     arange = jnp.arange(cfg.N_max, dtype=jnp.int32)
 
     if fused == "compact":
-        dec = _decide_pass(state.cache, q_packed_all, valid, cfg, banks,
-                           planes, high)
+        decide_fn = (_decide_pass_batched
+                     if _resolve_decide(decide) == "batched"
+                     else _decide_pass)
+        dec = decide_fn(state.cache, q_packed_all, valid, cfg, banks,
+                        planes, high)
         acc_rows = al.compact_full_scores(
             q_packed_all, dec[0] == PATH_FULL,
             jnp.broadcast_to(banks, (cfg.N_max,)), im, cfg, planes=planes,
@@ -418,6 +722,7 @@ def torr_multi_stream_step(
     plan=None,                 # static KnobPlan shared by all S windows
     fused=None,                # static: "switch"|"prefix"|"compact"|"off"
     bucket_cap=None,           # static compact-dispatch bucket capacity
+    decide=None,               # static: "batched" | "scan" (compact only)
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """One compiled step over S streams' windows.
 
@@ -469,7 +774,7 @@ def torr_multi_stream_step(
     if fused == "compact":
         return _multi_stream_compact_step(
             state, im, q_packed_all, valid, boxes, queue_depth, cfg,
-            serial=serial, plan=plan, bucket_cap=bucket_cap)
+            serial=serial, plan=plan, bucket_cap=bucket_cap, decide=decide)
 
     ham_prefix = None
     if fused == "prefix":
@@ -502,6 +807,7 @@ def torr_multi_stream_step(
 def _multi_stream_compact_step(
     state: TorrState, im: ItemMemory, q_packed_all, valid, boxes,
     queue_depth, cfg: TorrConfig, *, serial: bool, plan, bucket_cap,
+    decide=None,
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """The batched compact-then-compute lowering (``fused="compact"``).
 
@@ -530,9 +836,17 @@ def _multi_stream_compact_step(
     if plan is not None and plan.banks < cfg.B:
         banks = jnp.minimum(banks, jnp.int32(plan.banks))
 
-    dec = jax.vmap(
-        lambda c, q, v, b, h: _decide_pass(c, q, v, cfg, b, planes, h)
-    )(state.cache, q_packed_all, valid, banks, high)
+    decide_mode = _resolve_decide(decide)
+    if decide_mode == "batched":
+        dec, aux = jax.vmap(
+            lambda c, q, v, b, h: _decide_pass_batched_aux(c, q, v, cfg, b,
+                                                           planes, h)
+        )(state.cache, q_packed_all, valid, banks, high)
+    else:
+        dec = jax.vmap(
+            lambda c, q, v, b, h: _decide_pass(c, q, v, cfg, b, planes, h)
+        )(state.cache, q_packed_all, valid, banks, high)
+        aux = None
 
     acc_rows = al.compact_full_scores(
         q_packed_all.reshape(S * N, W),
@@ -541,12 +855,23 @@ def _multi_stream_compact_step(
         im, cfg, planes=planes, cap=cap, bucket_cap=bcap,
     ).reshape(S, N, cfg.M)
 
+    # The batched decide's conflict byproducts unlock the batched apply
+    # (value math hoisted dispatch-wide); ``decide="scan"`` pins the
+    # sequential reference pipeline end-to-end — decide scan + per-proposal
+    # apply scan — which is also the baseline the bench rows compare
+    # against. The serial lowering keeps the apply scan regardless: its
+    # lax.switch branch economy is real there.
+    if decide_mode == "batched" and not serial:
+        return _apply_pass_batched(state, im, q_packed_all, valid, boxes,
+                                   queue_depth, cfg, banks, planes, high,
+                                   n_valid, dec, aux, acc_rows)
+
     def apply_one(args):
         st, q, v, b, qd, bk, h, nv, dec_s, accs = args
         wmask = plan_word_mask(cfg, bk, planes)
-        body = _proposal_body(cfg, im, st.task_weights, bk, planes, wmask,
-                              h, acc_full_all=accs, fused_delta=serial,
-                              decided=True)
+        body = _proposal_body(cfg, im, st.task_weights, bk, planes,
+                              wmask, h, acc_full_all=accs,
+                              fused_delta=True, decided=True)
         cache, (outs, telem) = jax.lax.scan(
             body, st.cache,
             (q, v, jnp.arange(cfg.N_max, dtype=jnp.int32)) + dec_s)
@@ -563,10 +888,11 @@ def _multi_stream_compact_step(
 def torr_stream_batch_step(
     state: TorrState, im: ItemMemory, batch: StreamBatch, cfg: TorrConfig,
     serial: bool = False, plan=None, fused=None, bucket_cap=None,
+    decide=None,
 ) -> tuple[TorrState, WindowOutput, WindowTelemetry]:
     """`torr_multi_stream_step` over a packed :class:`StreamBatch`."""
     return torr_multi_stream_step(
         state, im, batch.q_packed, batch.valid, batch.boxes,
         batch.queue_depth, cfg, serial=serial, plan=plan, fused=fused,
-        bucket_cap=bucket_cap,
+        bucket_cap=bucket_cap, decide=decide,
     )

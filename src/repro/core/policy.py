@@ -31,7 +31,13 @@ def select_path(
     high: jax.Array,
     cfg: TorrConfig,
 ) -> jax.Array:
-    """Alg. 1 lines 2-8, with the TPU delta-feasibility guards."""
+    """Alg. 1 lines 2-8, with the TPU delta-feasibility guards.
+
+    Shape-polymorphic: every input may carry leading batch axes (the
+    batched decide pass selects a whole window's paths in one call), and
+    scalars broadcast — the scalar per-proposal form inside the sequential
+    FSM scan is the same expression.
+    """
     delta_ok = jnp.logical_and(
         rho >= cfg.tau_q,
         jnp.logical_and(delta_count <= cfg.delta_budget, acc_tag_ok),
@@ -40,6 +46,32 @@ def select_path(
     return jnp.where(
         bypass, PATH_BYPASS, jnp.where(delta_ok, PATH_DELTA, PATH_FULL)
     ).astype(jnp.int32)
+
+
+def intra_window_coupled(actions: jax.Array, valid: jax.Array) -> jax.Array:
+    """Conflict-set predicate of the batched decide pass: bool [N], True
+    where proposal i's *path decision* could depend on an earlier proposal
+    in the same window.
+
+    Alg. 1's decision for a proposal reads only the cache's packed
+    queries, plan tags and validity — which an earlier proposal mutates
+    exactly when it takes a cache-*writing* path (delta refreshes its hit
+    entry, full writes the LRU slot). Bypass merely touches ages, which
+    can shift a later proposal's LRU choice but never its
+    (action, idx, rho, |Delta|). So proposal i is coupled iff some valid
+    j < i took delta or full; everything outside this set is guaranteed to
+    decide identically against the frozen window-entry snapshot — the
+    invariant ``pipeline._decide_pass_batched``'s conflict pass preserves
+    and ``tests/test_decide_batched.py`` pins.
+
+    Conservative (a superset): a coupled proposal's decision may still
+    coincide with its snapshot decision (e.g. the write landed in a slot
+    it never ranks first).
+    """
+    writes = jnp.logical_and(
+        valid, jnp.logical_or(actions == PATH_DELTA, actions == PATH_FULL))
+    before = jnp.cumsum(writes.astype(jnp.int32)) - writes.astype(jnp.int32)
+    return before > 0
 
 
 # ---------------------------------------------------------------------------

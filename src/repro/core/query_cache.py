@@ -112,6 +112,49 @@ def nearest(
     return idx.astype(jnp.int32), rho[idx], ham[idx]
 
 
+def hamming_all(
+    cache: CacheState, q_packed_all: jax.Array, cfg: TorrConfig,
+    banks: jax.Array | int, planes: int | None = None,
+    *, use_kernel: bool = True,
+) -> jax.Array:
+    """Masked hamming of every query against every cache entry: int32
+    [N, K] under the (banks, planes) plan's word mask — one batched lookup
+    pass instead of N per-proposal ``nearest`` scans. Duck-typed over
+    :class:`CacheState` / :class:`MetaCache` like :func:`nearest` (reads
+    only ``packed``). The raw table the batched decide pass snapshots; the
+    per-entry sums are bit-identical to N calls of :func:`nearest`."""
+    from . import aligner
+
+    planes = cfg.bit_planes if planes is None else planes
+    wmask = plan_word_mask(cfg, banks, planes)
+    return aligner.lookup_hamming_all(q_packed_all, cache.packed, wmask,
+                                      use_kernel=use_kernel)
+
+
+def nearest_all(
+    cache: CacheState, q_packed_all: jax.Array, cfg: TorrConfig,
+    banks: jax.Array | int, planes: int | None = None,
+    *, use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched :func:`nearest`: (idx [N], rho [N], ham [N]) of every query
+    against one *static* cache snapshot (no intra-window updates — callers
+    that need the sequential FSM's self-hit semantics resolve conflicts on
+    top, see ``pipeline._decide_pass_batched``). Bit-identical to calling
+    :func:`nearest` per row: the hamming sums are the same integers, the
+    Eq. 5 rho arithmetic is the same f32 expression, and ``argmax`` keeps
+    the same first-max tie-breaking."""
+    planes = cfg.bit_planes if planes is None else planes
+    ham = hamming_all(cache, q_packed_all, cfg, banks, planes,
+                      use_kernel=use_kernel)                      # [N, K]
+    d_eff = jnp.asarray(
+        cfg.d_eff_planned(jnp.asarray(banks, jnp.int32), planes), jnp.float32)
+    rho = 1.0 - 2.0 * ham.astype(jnp.float32) / d_eff             # Eq. 5
+    rho = jnp.where(cache.valid[None, :], rho, -jnp.inf)
+    idx = jnp.argmax(rho, axis=-1).astype(jnp.int32)
+    n = jnp.arange(idx.shape[0])
+    return idx, rho[n, idx], ham[n, idx]
+
+
 def lru_slot(cache: CacheState) -> jax.Array:
     """Slot to evict: first invalid entry, else the oldest."""
     score = jnp.where(cache.valid, cache.age, jnp.iinfo(jnp.int32).max)

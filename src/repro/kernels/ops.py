@@ -219,6 +219,43 @@ def cache_nearest(
     return idx, rho[n, idx], ham[n, idx]
 
 
+def masked_hamming_all(
+    q_packed: jax.Array,      # uint32 [N, W_total] query batch
+    e_packed: jax.Array,      # uint32 [K, W_total] lookup entries
+    wmask: jax.Array,         # bool [W_total] plan-enabled words (may be traced)
+    *,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Plan-gated hamming lookup table: int32 [N, K], every query row vs
+    every entry row, counted over the words ``wmask`` enables.
+
+    The batched form of the per-proposal masked popcount inside
+    ``core.query_cache.nearest`` — the one-wide-similarity-pass PSU shape
+    the batched decide pass (``core.pipeline._decide_pass_batched``) runs
+    over the window-entry cache snapshot and the proposal batch itself.
+    Unlike the static-plan wrappers above, ``wmask`` may be a *traced*
+    value (Alg. 1's per-window bank choice): both operands are pre-masked
+    (disabled words zeroed on both sides, so their xor contributes zero
+    popcount), which makes the plain packed-hamming kernel family compute
+    the gated sum unchanged — bit-identical to masking the popcounts.
+
+    Lowering selection follows the fused-family contract
+    (``fused_window._pallas_lowering``): compiled Pallas on TPU, the jnp
+    oracle elsewhere (the [N, K, W] xor is cache-depth-sized, where plain
+    XLA beats interpret-mode grid machinery), ``TORR_FUSED_PALLAS=1``
+    forces the interpret-mode grid; off-tile shapes fall back to the
+    oracle in any mode.
+    """
+    wmask = wmask[None, :]
+    q = jnp.where(wmask, q_packed, jnp.uint32(0))
+    e = jnp.where(wmask, e_packed, jnp.uint32(0))
+    lowering = fused_window._pallas_lowering(interpret)
+    if lowering is None or not use_kernel:
+        return ref.packed_hamming_ref(q, e)
+    return _batched_hamming(q, e, interpret=lowering, use_kernel=use_kernel)
+
+
 def delta_update(
     acc: jax.Array,       # int32 [M]
     dmajor: jax.Array,    # int8 [D, M]

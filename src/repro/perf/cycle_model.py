@@ -131,13 +131,37 @@ def lowering_scan_rows(n_full: int, n_valid: int, fused: str = "switch",
     raise ValueError(f"unknown lowering {fused!r}")
 
 
+def decide_psu_cycles(n_valid: int, d_eff: int, decide: str = "scan") -> int:
+    """PSU (cache-nearest) cycles for one window's decide work.
+
+    ``"scan"`` is the sequential per-proposal pass: each of the ``n_valid``
+    proposals pays its D'/32-word popcount column *plus* the ~8-cycle
+    pipeline restart (drain/refill between dependent lookups — proposal
+    i+1's nearest cannot issue until proposal i's cache write lands).
+    ``"batched"`` is the batched intra-window decide
+    (``core.pipeline._decide_pass_batched``): the popcount columns of all
+    proposals stream through one wide pass, so the restart constant is
+    paid once per window instead of once per proposal — the conflict scan
+    that replays intra-window writes is O(K) bookkeeping off the PSU's
+    critical path. Batched is never priced above scan for any
+    ``n_valid >= 1`` (pinned by ``tests/test_decide_batched.py``).
+    """
+    per_row = d_eff // 32
+    if decide == "batched":
+        return n_valid * per_row + 8
+    if decide == "scan":
+        return n_valid * (per_row + 8)
+    raise ValueError(f"unknown decide lowering {decide!r}")
+
+
 def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
                 reasoner_active: np.ndarray, n_valid: int,
                 cfg: TorrConfig, rt_budget_s: float,
                 window_scale: float = 1.0,
                 d_eff: int | None = None,
                 fused: str = "switch",
-                bucket_cap: int | None = None) -> WindowCost:
+                bucket_cap: int | None = None,
+                decide: str = "scan") -> WindowCost:
     """Cost of one window from its telemetry trace.
 
     ``d_eff`` overrides the bank-implied effective dimension when the
@@ -147,7 +171,9 @@ def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
     ``core.policy`` — the same math Alg. 1 and the QoS governor price with.
     ``fused``/``bucket_cap`` price the aligner's scan rows per the actual
     lowering (:func:`lowering_scan_rows`); the default (``"switch"``) is
-    the ASIC-faithful per-full-proposal cost.
+    the ASIC-faithful per-full-proposal cost. ``decide`` prices the PSU's
+    cache-nearest pass per the decide lowering (:func:`decide_psu_cycles`);
+    the default (``"scan"``) is the ASIC-faithful sequential FSM.
     """
     mw = mw_cycles(cfg)
     d_eff = banks * cfg.bank_dims if d_eff is None else int(d_eff)
@@ -162,7 +188,7 @@ def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
     scan_rows = lowering_scan_rows(n_full, int(n_valid), fused, bucket_cap)
     aligner = int(aligner_cycles(
         scan_rows, int(np.sum(dc[path == PATH_DELTA])), d_eff, mw))
-    psu = n_valid * (d_eff // 32 + 8)
+    psu = decide_psu_cycles(int(n_valid), d_eff, decide)
     reasoner = int(np.sum(ra)) * (mw + 4)
     sorter = (n_full + n_delta) * (cfg.M + 32)
     dma = n_valid * (d_eff + cfg.M * 16) // DMA_BITS_PER_CYCLE

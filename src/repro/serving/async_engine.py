@@ -108,6 +108,7 @@ class AsyncStreamEngine(StreamEngine):
         serial: bool = False,
         fused: str | None = None,
         bucket_cap: int | None = None,
+        decide: str | None = None,
         mesh=None,
         pipeline_depth: int = 2,
         tracker: DeadlineTracker | None = None,
@@ -126,7 +127,7 @@ class AsyncStreamEngine(StreamEngine):
         super().__init__(cfg, im,
                          n_slots=shd.pad_stream_slots(n_slots, self._mesh),
                          jit=jit, serial=serial, fused=fused,
-                         bucket_cap=bucket_cap)
+                         bucket_cap=bucket_cap, decide=decide)
         if self._mesh is not None:
             # stacked per-stream state sharded on the slot axis; item memory
             # (shared task knowledge) replicated on every device
@@ -359,10 +360,11 @@ class AsyncStreamEngine(StreamEngine):
             boxes=jax.device_put(b, s),
             queue_depth=jax.device_put(qd.astype(np.int32), s),
         )
-        fused, bucket_cap = self._resolve_fused()
+        fused, bucket_cap, decide = self._resolve_fused()
         self._state, out, tel = self._step(
             self._state, self.im, batch, self.cfg, serial=self._serial,
-            plan=self._plan, fused=fused, bucket_cap=bucket_cap)
+            plan=self._plan, fused=fused, bucket_cap=bucket_cap,
+            decide=decide)
         return out, tel
 
     def warmup(self) -> None:

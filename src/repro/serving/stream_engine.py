@@ -92,6 +92,7 @@ class StreamEngine:
         serial: bool = False,
         fused: str | None = None,
         bucket_cap: int | None = None,
+        decide: str | None = None,
     ):
         self.cfg = cfg
         self.im = im
@@ -115,6 +116,10 @@ class StreamEngine:
         self._auto = fused == "auto"
         self._fused = None if self._auto else fused
         self._bucket_cap = bucket_cap
+        # `decide` picks the compact dispatch's decide-pass lowering
+        # (None = "batched"; "scan" pins the sequential reference oracle).
+        # Static like `fused`; auto-picked compact steps ride it too.
+        self._decide = decide
         # full-path fraction EWMA; starts pessimistic (a cold cache makes
         # every proposal a miss), so auto begins on the hoisted lowering.
         # The backlog holds telemetry of in-flight steps; only entries at
@@ -128,7 +133,7 @@ class StreamEngine:
         step = pipeline.torr_stream_batch_step
         self._step = (
             jax.jit(step, static_argnames=("cfg", "serial", "plan", "fused",
-                                           "bucket_cap"))
+                                           "bucket_cap", "decide"))
             if jit else step
         )
         self.stats = EngineStats()
@@ -272,7 +277,7 @@ class StreamEngine:
                                    np.asarray(tel.n_valid))
 
     def _resolve_fused(self):
-        """(fused, bucket_cap) for the next dispatch.
+        """(fused, bucket_cap, decide) for the next dispatch.
 
         Pinned modes pass straight through. In auto mode the predicted
         full-path rows (path-mix EWMA x total lanes, padded by
@@ -281,16 +286,19 @@ class StreamEngine:
         full capacity falls back to the lowering-appropriate hoisted
         default (compaction would save nothing). The executable family
         stays bounded at ladder x plan — the recompile-guard test pins it.
+        The engine's ``decide`` knob rides along unchanged: whichever
+        decide-pass lowering was pinned at construction (None = batched)
+        is what an auto-picked compact step runs with.
         """
         if not self._auto:
-            return self._fused, self._bucket_cap
+            return self._fused, self._bucket_cap, self._decide
         self._fold_telemetry()
         n_rows = self.n_slots * self.cfg.N_max
         want = int(np.ceil(self._full_ewma * n_rows * AUTO_HEADROOM))
         tier = policy.bucket_tier(n_rows, want)
         if tier >= n_rows:
-            return None, None           # hoisted default for this lowering
-        return "compact", tier
+            return None, None, self._decide  # hoisted default, no decide pass
+        return "compact", tier, self._decide
 
     def _note_step_telemetry(self, tel) -> None:
         """Remember the step's telemetry for a later EWMA fold (sync path;
@@ -309,10 +317,11 @@ class StreamEngine:
             q_packed=jnp.asarray(q), valid=jnp.asarray(v),
             boxes=jnp.asarray(b), queue_depth=jnp.asarray(qd),
         )
-        fused, bucket_cap = self._resolve_fused()
+        fused, bucket_cap, decide = self._resolve_fused()
         self._state, out, tel = self._step(
             self._state, self.im, batch, self.cfg, serial=self._serial,
             plan=self._plan, fused=fused, bucket_cap=bucket_cap,
+            decide=decide,
         )
         self._note_step_telemetry(tel)
         return out, tel
@@ -365,8 +374,8 @@ class StreamEngine:
                 self._b0, (self.n_slots,) + self._b0.shape)),
             queue_depth=jnp.zeros((self.n_slots,), jnp.int32),
         )
-        fused, bucket_cap = self._resolve_fused()
+        fused, bucket_cap, decide = self._resolve_fused()
         out = self._step(self._state, self.im, zero, self.cfg,
                          serial=self._serial, plan=self._plan,
-                         fused=fused, bucket_cap=bucket_cap)
+                         fused=fused, bucket_cap=bucket_cap, decide=decide)
         jax.block_until_ready(out[1].scores)

@@ -320,7 +320,7 @@ def test_stream_engine_auto_converges_to_compact_on_reuse():
 
     eng, res = run("auto")
     assert eng.full_path_ewma < 0.5
-    mode, tier = eng._resolve_fused()
+    mode, tier, _decide = eng._resolve_fused()
     assert mode == "compact" and tier < S * cfg.N_max
     _, base = run("off")
     for s in range(S):
@@ -345,7 +345,7 @@ def test_stream_engine_auto_stays_hoisted_on_full_traffic():
     _submit_all(eng, task_w, steps, S)
     eng.drain()
     assert eng.full_path_ewma > 0.5
-    mode, tier = eng._resolve_fused()
+    mode, tier, _decide = eng._resolve_fused()
     assert mode is None and tier is None   # the hoisted lowering default
 
 

@@ -1,0 +1,538 @@
+"""Batched intra-window decide pass: differential-oracle harness (ISSUE 6).
+
+The sequential decide scan (``pipeline._decide_pass``) is the reference
+oracle; the batched decide (``pipeline._decide_pass_batched``, the compact
+dispatch's ``decide="batched"`` default) must be *bit-identical* to it —
+the same decision tuple ``(action, idx, lru, d_idx, d_weight, d_count,
+rho)`` for every proposal of every window, and the same final
+:class:`~repro.core.query_cache.CacheState` after the apply pass replays
+those decisions. "Identical" means integer-equal hamming/d_idx/d_weight
+and float-bit-equal rho, not allclose.
+
+Layers, fastest first:
+
+  * decide-level differential: both passes on the same evolving cache,
+    window by window, across the (banks, planes) plan grid and reuse mixes
+    — plus a property-driven episode sweep (hypothesis when available,
+    the deterministic ``_hypothesis_compat`` fallback otherwise);
+  * adversarial conflict windows: duplicate queries, a query equal to an
+    HV written earlier in the same window, full-path LRU eviction chains
+    longer than K, all-padding windows, delta-then-full across a plan
+    switch — each aimed at the intra-window coupling the conflict pass
+    must resolve;
+  * step/engine-level differential: ``decide="batched"`` vs
+    ``decide="scan"`` vs the ``fused="off"`` oracle through the jitted
+    single-window and multi-stream steps, every bucket tier, and the
+    stream engines (1 device here; 4 fake devices in the subprocess test);
+  * the ``policy.intra_window_coupled`` superset invariant, the
+    ``_resolve_bucket_cap`` precedence/warn contract, and the cycle
+    model's decide-aware PSU pricing.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+
+from repro.control import KnobPlan
+from repro.core import hdc, pipeline, policy, query_cache
+from repro.core.item_memory import random_item_memory
+from repro.core.types import PATH_DELTA, PATH_FULL, TorrConfig
+from repro.perf import cycle_model
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CFG = TorrConfig(D=1024, B=8, M=32, K=4, N_max=8, delta_budget=128,
+                 feat_dim=64)
+
+PLANS = [(8, 4), (8, 2), (4, 4), (4, 1), (2, 2), (1, 1)]
+
+DEC_NAMES = ("action", "idx", "lru", "d_idx", "d_weight", "d_count", "rho")
+
+STEP = jax.jit(pipeline.torr_window_step,
+               static_argnames=("cfg", "plan", "fused", "bucket_cap",
+                                "decide"))
+MSTEP = jax.jit(pipeline.torr_multi_stream_step,
+                static_argnames=("cfg", "serial", "plan", "fused",
+                                 "bucket_cap", "decide"))
+
+
+def _plan(banks, planes, cfg=CFG, **kw):
+    return KnobPlan(banks=banks, planes=planes, plane_total=cfg.bit_planes,
+                    **kw)
+
+
+# --- window-sequence generator ----------------------------------------------
+
+def _episode(cfg, mix, n_windows, seed, p_valid=0.85, flip_max=24):
+    """Multi-window episode at a target reuse mix.
+
+    Each proposal is, with probability ``mix``, a lightly perturbed copy of
+    some earlier proposal in the episode (including *this window's* — the
+    intra-window self-hit case the conflict pass exists for); otherwise a
+    fresh random HV. Returns [(q [N, W] uint32, valid [N] bool), ...].
+    """
+    rng = np.random.default_rng(seed)
+    pool: list[np.ndarray] = []
+    windows = []
+    for _ in range(n_windows):
+        qs, vs = [], []
+        for _ in range(cfg.N_max):
+            if pool and rng.random() < mix:
+                q = pool[int(rng.integers(len(pool)))].copy()
+                for _ in range(int(rng.integers(0, flip_max))):
+                    w = int(rng.integers(cfg.words))
+                    q[w] ^= np.uint32(1) << np.uint32(rng.integers(32))
+            else:
+                q = rng.integers(0, 2 ** 32, size=cfg.words, dtype=np.uint32)
+            pool.append(q)
+            qs.append(q)
+            vs.append(bool(rng.random() < p_valid))
+        windows.append((np.stack(qs), np.asarray(vs, bool)))
+    return windows
+
+
+def _window_knobs(cfg, valid, queue_depth, plan):
+    """(banks, planes, high) exactly as ``torr_window_step`` derives them."""
+    planes = cfg.bit_planes if plan is None else plan.planes
+    n_valid = jnp.sum(jnp.asarray(valid).astype(jnp.int32))
+    qd = jnp.int32(queue_depth)
+    high = policy.high_load(n_valid, qd, cfg)
+    banks = policy.select_banks(n_valid, qd, cfg)
+    if plan is not None and plan.banks < cfg.B:
+        banks = jnp.minimum(banks, jnp.int32(plan.banks))
+    return banks, planes, high
+
+
+def _assert_dec_equal(dec_a, dec_b, ctx=()):
+    for name, a, b in zip(DEC_NAMES, dec_a, dec_b):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (*ctx, name)
+
+
+def _assert_cache_equal(ca, cb, ctx=()):
+    for i, (a, b) in enumerate(zip(jax.tree_util.tree_leaves(ca),
+                                   jax.tree_util.tree_leaves(cb))):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (*ctx, i)
+
+
+def _differential_episode(cfg, windows, plan=None, qd_seq=None, ctx=()):
+    """Run both decide passes on the same evolving cache, window by window,
+    asserting bit-identical decision tuples; the cache advances through the
+    real (jitted) step so later windows see warmed, churned state. Also
+    checks the batched decide drives the full step to the oracle's exact
+    final state."""
+    effective = cfg if plan is None else plan.thresholds(cfg)
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,))
+    st_b = st_o = pipeline.init_state(cfg, task_w)
+    for t, (q, v) in enumerate(windows):
+        qd = 0 if qd_seq is None else qd_seq[t]
+        q, v = jnp.asarray(q), jnp.asarray(v)
+        banks, planes, high = _window_knobs(effective, v, qd, plan)
+        dec_a = pipeline._decide_pass(st_b.cache, q, v, effective, banks,
+                                      planes, high)
+        dec_b = pipeline._decide_pass_batched(st_b.cache, q, v, effective,
+                                              banks, planes, high)
+        _assert_dec_equal(dec_a, dec_b, (*ctx, t))
+        boxes = jnp.zeros((cfg.N_max, 4), jnp.float32)
+        st_b, out_b, tel_b = STEP(st_b, im, q, v, boxes, jnp.int32(qd), cfg,
+                                  plan=plan, fused="compact",
+                                  decide="batched")
+        st_o, out_o, tel_o = STEP(st_o, im, q, v, boxes, jnp.int32(qd), cfg,
+                                  plan=plan, fused="off")
+        assert np.array_equal(np.asarray(out_b.scores),
+                              np.asarray(out_o.scores)), (*ctx, t)
+        assert np.array_equal(np.asarray(tel_b.path),
+                              np.asarray(tel_o.path)), (*ctx, t)
+        _assert_cache_equal(st_b.cache, st_o.cache, (*ctx, t))
+
+
+# --- decide-level differential: plan grid x reuse mixes ----------------------
+
+@pytest.mark.parametrize("banks,planes", [(8, 4), (4, 1), (1, 1)])
+@pytest.mark.parametrize("mix", [0.0, 0.9])
+def test_decide_differential_smoke(banks, planes, mix):
+    """Tier-1 subset of the property sweep: two plan corners x two mixes,
+    short episodes with a queue-depth spike so bypass fires."""
+    windows = _episode(CFG, mix, n_windows=3, seed=banks * 10 + planes)
+    _differential_episode(CFG, windows, plan=_plan(banks, planes),
+                          qd_seq=[0, CFG.q_hi, 0],
+                          ctx=(banks, planes, mix))
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(PLANS),
+       st.sampled_from([0.0, 0.5, 0.9, 0.99]),
+       st.sampled_from([0, 1]))
+@settings(max_examples=20, deadline=None)
+def test_decide_differential_property(seed, plan_bp, mix, spike):
+    """The full differential sweep: random episodes across the plan grid x
+    reuse mixes {0, 0.5, 0.9, 0.99}, optional load spikes. Every window of
+    every episode must produce bit-identical decision tuples and an
+    oracle-identical final cache."""
+    banks, planes = plan_bp
+    qd_seq = [0, CFG.q_hi, 0, CFG.q_hi] if spike else None
+    windows = _episode(CFG, mix, n_windows=4, seed=seed)
+    _differential_episode(CFG, windows, plan=_plan(banks, planes),
+                          qd_seq=qd_seq, ctx=(seed, banks, planes, mix))
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0.5, 0.99]))
+@settings(max_examples=6, deadline=None)
+def test_decide_differential_deep_cache_property(seed, mix):
+    """K > N_max: conflicts live alongside plenty of untouched snapshot
+    entries, so the batched pass must blend live and snapshot rows."""
+    cfg = TorrConfig(D=1024, B=8, M=32, K=16, N_max=4, delta_budget=128,
+                     feat_dim=64)
+    windows = _episode(cfg, mix, n_windows=4, seed=seed)
+    _differential_episode(cfg, windows, ctx=(seed, mix))
+
+
+# --- adversarial conflict windows --------------------------------------------
+
+def _dup_window(cfg, seed, copies):
+    """A window whose trailing proposals repeat the leading ones exactly."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 2 ** 32, size=(cfg.N_max, cfg.words),
+                     dtype=np.uint32)
+    for i, j in copies:
+        q[j] = q[i]
+    return q, np.ones((cfg.N_max,), bool)
+
+
+def test_decide_duplicate_queries_in_window():
+    """Duplicates must self-hit the earlier proposal's freshly written slot
+    (ham 0 against a live entry), not the stale snapshot."""
+    windows = [_dup_window(CFG, 3, copies=[(0, 1), (0, 7), (2, 3)])]
+    _differential_episode(CFG, windows, ctx=("dup",))
+
+
+def test_decide_query_equals_earlier_write():
+    """A cold full-path write followed in the *same window* by its exact
+    query: the follower's nearest is the intra-window entry, and its delta
+    set against that entry is empty."""
+    q, v = _dup_window(CFG, 5, copies=[(0, 4)])
+    _differential_episode(CFG, [(q, v)], ctx=("self-hit",))
+    # and with a perturbed follower: small nonzero delta against the live
+    # entry, exercising the resolved-old-entry d_idx path
+    q2 = q.copy()
+    q2[4, 0] ^= np.uint32(0b1011)
+    _differential_episode(CFG, [(q2, v)], ctx=("self-hit-perturbed",))
+
+
+def test_decide_lru_chain_longer_than_K():
+    """All-fresh windows: every proposal takes the full path, and with
+    N_max = 2K the eviction chain wraps the cache twice — each LRU choice
+    depends on every earlier write's age churn."""
+    windows = _episode(CFG, mix=0.0, n_windows=3, seed=11, p_valid=1.0)
+    _differential_episode(CFG, windows, ctx=("lru-chain",))
+
+
+def test_decide_all_padding_window():
+    """valid all-False: every proposal pads, the cache is untouched, and
+    the (still computed) idx/lru/d_idx/d_weight lanes must match bitwise."""
+    rng = np.random.default_rng(13)
+    q = rng.integers(0, 2 ** 32, size=(CFG.N_max, CFG.words),
+                     dtype=np.uint32)
+    v = np.zeros((CFG.N_max,), bool)
+    warm = _episode(CFG, mix=0.0, n_windows=1, seed=14)
+    _differential_episode(CFG, warm + [(q, v)] + warm, ctx=("all-pad",))
+
+
+def test_decide_delta_then_full_across_plan_switch():
+    """Plan A warms the cache and serves deltas; switching to plan B stales
+    every acc tag, forcing full re-scans whose LRU churn the batched pass
+    must replay — under both decide lowerings, against the oracle."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,))
+    plan_a, plan_b = _plan(8, 4), _plan(4, 2)
+    q_bip = hdc.random_hv(jax.random.PRNGKey(7), (cfg.N_max, cfg.D))
+    valid = jnp.asarray(np.arange(cfg.N_max) < cfg.K - 1)
+    boxes = jnp.zeros((cfg.N_max, 4), jnp.float32)
+    q0 = jax.vmap(hdc.pack_bits)(q_bip)
+    q1 = jax.vmap(hdc.pack_bits)(q_bip.at[:, :4].multiply(-1))
+    nv = int(np.sum(np.asarray(valid)))
+
+    def run(**kw):
+        st = pipeline.init_state(cfg, task_w)
+        st, _, tel0 = STEP(st, im, q0, valid, boxes, jnp.int32(0), cfg,
+                           plan=plan_a, **kw)
+        assert (np.asarray(tel0.path)[:nv] == PATH_FULL).all()
+        st, _, tel_a = STEP(st, im, q1, valid, boxes, jnp.int32(0), cfg,
+                            plan=plan_a, **kw)
+        assert (np.asarray(tel_a.path)[:nv] == PATH_DELTA).all()
+        st, out_b, tel_b = STEP(st, im, q1, valid, boxes, jnp.int32(0), cfg,
+                                plan=plan_b, **kw)
+        assert (np.asarray(tel_b.path)[:nv] == PATH_FULL).all()
+        return st, out_b
+
+    st0, out0 = run(fused="off")
+    for decide in ("scan", "batched"):
+        st1, out1 = run(fused="compact", decide=decide)
+        assert np.array_equal(np.asarray(out0.scores),
+                              np.asarray(out1.scores)), decide
+        _assert_cache_equal(st0.cache, st1.cache, (decide,))
+
+
+# --- the conflict-set predicate ----------------------------------------------
+
+def test_intra_window_coupled_is_superset():
+    """Wherever the sequential FSM's (action, idx, d_count, rho) diverge
+    from a frozen-snapshot decide (``query_cache.nearest_all`` against the
+    window-entry cache), ``policy.intra_window_coupled`` must flag the
+    proposal — the invariant that makes the batched pass's conflict scan
+    sufficient. LRU is exempt by contract (bypass age-churn shifts it
+    without coupling the path decision)."""
+    cfg = CFG
+    tag = jnp.int32(0)  # fresh cache: every acc_tag is 0
+    hits = 0
+    for seed in range(8):
+        for mix in (0.5, 0.9, 0.99):
+            windows = _episode(cfg, mix, n_windows=1, seed=seed,
+                               p_valid=1.0)
+            q, v = map(jnp.asarray, windows[0])
+            cache = query_cache.init_cache(cfg)
+            banks, planes, high = _window_knobs(cfg, v, 0, None)
+            dec = pipeline._decide_pass(cache, q, v, cfg, banks, planes,
+                                        high)
+            action, idx, _lru, _di, _dw, d_count, rho = dec
+            # frozen-snapshot decisions: no intra-window updates at all
+            s_idx, s_rho, s_ham = query_cache.nearest_all(cache, q, cfg,
+                                                          banks, planes)
+            tag_ok = cache.acc_tag[s_idx] == tag
+            s_action = policy.select_path(s_rho, s_ham, tag_ok, high, cfg)
+            diverged = np.zeros((cfg.N_max,), bool)
+            for got, snap in ((action, s_action), (idx, s_idx),
+                              (d_count, s_ham)):
+                diverged |= np.asarray(got) != np.asarray(snap)
+            diverged |= ~np.isclose(np.asarray(rho),
+                                    np.asarray(jnp.where(v, s_rho, 0.0)))
+            coupled = np.asarray(policy.intra_window_coupled(action, v))
+            assert not np.any(diverged & ~coupled), (seed, mix)
+            hits += int(np.sum(diverged))
+    assert hits > 0, "sweep never exercised an intra-window conflict"
+
+
+# --- bucket_cap precedence + clamp warning -----------------------------------
+
+def test_bucket_cap_precedence():
+    """Explicit arg > plan.bucket_cap > full capacity; an over-capacity tier
+    clamps *loudly*; a sub-1 tier is an error."""
+    resolve = pipeline._resolve_bucket_cap
+    plan = _plan(8, 4, bucket_cap=2)
+    assert resolve(4, plan, 8) == 4          # explicit beats plan
+    assert resolve(None, plan, 8) == 2       # plan beats default
+    assert resolve(None, None, 8) == 8       # default: full capacity
+    assert resolve(None, _plan(8, 4), 8) == 8  # plan without a cap
+    with pytest.warns(UserWarning, match="bucket_cap=16 exceeds"):
+        assert resolve(16, plan, 8) == 8     # loud clamp, explicit arg
+    with pytest.warns(UserWarning, match="plan.bucket_cap=2 exceeds"):
+        assert resolve(None, plan, 1) == 1   # loud clamp, plan tier
+    with pytest.raises(ValueError):
+        resolve(0, None, 8)
+
+
+def test_bucket_cap_overflow_warns_and_stays_exact():
+    """An engine ladder tier latched onto a smaller dispatch (bucket_cap >
+    rows) warns at trace time and still runs bit-identically at the
+    clamped full-capacity tier."""
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (cfg.M,))
+    windows = _episode(cfg, 0.5, n_windows=2, seed=21)
+    boxes = jnp.zeros((cfg.N_max, 4), jnp.float32)
+
+    def run(fused, bucket_cap=None):
+        st = pipeline.init_state(cfg, task_w)
+        outs = []
+        for q, v in windows:
+            st, out, _ = STEP(st, im, jnp.asarray(q), jnp.asarray(v), boxes,
+                              jnp.int32(0), cfg, fused=fused,
+                              bucket_cap=bucket_cap)
+            outs.append(np.asarray(out.scores))
+        return st, outs
+
+    base_st, base_outs = run("off")
+    with pytest.warns(UserWarning, match="exceeds"):
+        got_st, got_outs = run("compact", bucket_cap=4 * cfg.N_max)
+    for a, b in zip(base_outs, got_outs):
+        assert np.array_equal(a, b)
+    _assert_cache_equal(base_st.cache, got_st.cache)
+
+
+# --- step/engine-level differential ------------------------------------------
+
+def test_decide_knob_validation():
+    with pytest.raises(ValueError, match="decide='psychic'"):
+        pipeline._resolve_decide("psychic")
+    assert pipeline._resolve_decide(None) == "batched"
+    assert pipeline._resolve_decide("scan") == "scan"
+
+
+@pytest.mark.parametrize("serial", [False, True])
+@pytest.mark.parametrize("tier", [1, 8, None])
+def test_multi_stream_decide_modes_identical(serial, tier):
+    """Both decide lowerings through the multi-stream compact step, every
+    tier class (overflowing, partial, full), both apply lowerings."""
+    cfg = TorrConfig(D=1024, B=8, M=32, K=8, N_max=8, delta_budget=128,
+                     feat_dim=64)
+    S, T = 4, 3
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M))
+    eps = [_episode(cfg, 0.7, T, seed=s) for s in range(S)]
+
+    def run(fused, decide=None):
+        st = pipeline.init_multi_stream_state(cfg, task_w)
+        outs = []
+        for t in range(T):
+            q = jnp.asarray(np.stack([eps[s][t][0] for s in range(S)]))
+            v = jnp.asarray(np.stack([eps[s][t][1] for s in range(S)]))
+            b = jnp.zeros((S, cfg.N_max, 4), jnp.float32)
+            qd = jnp.asarray([0, 2, cfg.q_hi, 0], jnp.int32)
+            st, out, tel = MSTEP(st, im, q, v, b, qd, cfg, serial=serial,
+                                 fused=fused, bucket_cap=tier, decide=decide)
+            outs.append((np.asarray(out.scores), np.asarray(tel.path)))
+        return st, outs
+
+    base_st, base = run("off")
+    for decide in ("scan", "batched"):
+        got_st, got = run("compact", decide)
+        for t, ((s0, p0), (s1, p1)) in enumerate(zip(base, got)):
+            assert np.array_equal(s0, s1), (decide, t)
+            assert np.array_equal(p0, p1), (decide, t)
+        _assert_cache_equal(base_st.cache, got_st.cache, (decide,))
+
+
+def test_stream_engine_decide_knob_bit_identical():
+    """The engines' `decide` knob: pinned-compact and auto engines under
+    both decide lowerings reproduce the oracle engine bit for bit."""
+    from repro.serving.stream_engine import StreamEngine
+
+    cfg = TorrConfig(D=1024, B=8, M=32, K=8, N_max=8, delta_budget=128,
+                     feat_dim=64)
+    S, T = 2, 5
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1),
+                                           (S, cfg.M)))
+    eps = [_episode(cfg, 0.9, T, seed=40 + s) for s in range(S)]
+
+    def run(**kw):
+        eng = StreamEngine(cfg, im, n_slots=S, **kw)
+        for s in range(S):
+            eng.admit(s, task_w[s])
+            for q, v in eps[s]:
+                eng.submit(s, q, v, np.zeros((cfg.N_max, 4), np.float32))
+        return eng.drain()
+
+    base = run(fused="off")
+    for kw in (dict(fused="compact", bucket_cap=8, decide="scan"),
+               dict(fused="compact", bucket_cap=8, decide="batched"),
+               dict(fused="compact", bucket_cap=8),      # default = batched
+               dict(fused="auto"),
+               dict(fused="auto", decide="scan")):
+        got = run(**kw)
+        for s in range(S):
+            for t in range(T):
+                assert np.array_equal(np.asarray(got[s][t][0].scores),
+                                      np.asarray(base[s][t][0].scores)), \
+                    (kw, s, t)
+                assert np.array_equal(np.asarray(got[s][t][1].path),
+                                      np.asarray(base[s][t][1].path)), \
+                    (kw, s, t)
+
+
+@pytest.mark.slow
+def test_decide_batched_four_fake_devices():
+    """The batched decide under vmap + stream-axis sharding on 4 fake CPU
+    devices: bit-identical to the single-device sequential oracle
+    (subprocess: XLA_FLAGS must precede jax init)."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+assert jax.device_count() == 4, jax.devices()
+from repro.core import pipeline
+from repro.core.item_memory import random_item_memory
+from repro.core.types import TorrConfig
+from repro.runtime import sharding as shd
+from repro.serving.async_engine import AsyncStreamEngine
+from repro.serving.stream_engine import StreamEngine
+from tests.test_decide_batched import _episode
+
+cfg = TorrConfig(D=1024, B=8, M=32, K=8, N_max=8, delta_budget=128,
+                 feat_dim=64)
+S, T = 4, 3
+im = random_item_memory(jax.random.PRNGKey(0), cfg)
+task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+eps = [_episode(cfg, 0.9, T, seed=60 + s) for s in range(S)]
+boxes = np.zeros((cfg.N_max, 4), np.float32)
+
+sync = StreamEngine(cfg, im, n_slots=S, fused="compact", decide="scan")
+for s in range(S):
+    sync.admit(s, task_w[s])
+    for q, v in eps[s]:
+        sync.submit(s, q, v, boxes)
+base = sync.drain()
+
+eng = AsyncStreamEngine(cfg, im, n_slots=S, mesh=shd.stream_mesh(),
+                        fused="compact", bucket_cap=8, decide="batched",
+                        paused=True)
+futs = {s: [] for s in range(S)}
+for s in range(S):
+    eng.admit(s, task_w[s])
+    for q, v in eps[s]:
+        futs[s].append(eng.submit(s, q, v, boxes))
+eng.start()
+eng.flush(timeout=300)
+for s in range(S):
+    for t, f in enumerate(futs[s]):
+        aout, atel = f.result(timeout=10)
+        assert np.array_equal(aout.scores,
+                              np.asarray(base[s][t][0].scores)), (s, t)
+        assert np.array_equal(np.asarray(atel.path),
+                              np.asarray(base[s][t][1].path)), (s, t)
+eng.close()
+print("DECIDE-BATCHED-SHARDED-MATCH")
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   (SRC, os.path.dirname(SRC), os.path.dirname(__file__))),
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DECIDE-BATCHED-SHARDED-MATCH" in out.stdout
+
+
+# --- cycle model: decide-aware PSU pricing -----------------------------------
+
+def test_cycle_model_batched_decide_never_costlier():
+    for d_eff in (256, 1024, 8192):
+        for n_valid in (1, 2, 8, 64, 128):
+            scan = cycle_model.decide_psu_cycles(n_valid, d_eff, "scan")
+            bat = cycle_model.decide_psu_cycles(n_valid, d_eff, "batched")
+            assert bat <= scan, (d_eff, n_valid)
+    # one proposal: nothing to batch, identical price
+    assert (cycle_model.decide_psu_cycles(1, 1024, "batched")
+            == cycle_model.decide_psu_cycles(1, 1024, "scan"))
+    with pytest.raises(ValueError):
+        cycle_model.decide_psu_cycles(4, 1024, "fancy")
+
+
+def test_cycle_model_window_cost_decide_kwarg():
+    path = np.array([PATH_FULL] * 4 + [PATH_DELTA] * 4)
+    dc = np.array([0] * 4 + [10] * 4)
+    ra = np.ones((8,), bool)
+    kw = dict(banks=8, reasoner_active=ra, n_valid=8, cfg=CFG,
+              rt_budget_s=1e-3)
+    scan = cycle_model.window_cost(path, dc, decide="scan", **kw)
+    bat = cycle_model.window_cost(path, dc, decide="batched", **kw)
+    assert bat.cycles["psu"] < scan.cycles["psu"]
+    assert bat.total_cycles < scan.total_cycles
