@@ -24,10 +24,14 @@ prefix dispatch windows/sec at mix 0.9, S = 64, on CPU. The same sweep
 also reports step-level windows/sec for the compact dispatch under the
 *sequential* vs *batched* decide pass (``decide="scan"`` vs
 ``"batched"``): the ISSUE 6 acceptance gate is batched >= 3x the
-sequential-decide baseline at mix 0.9, S = 64, M = 1024, on CPU.
-``python -m benchmarks.micro_aligner --json PATH`` writes ``{"rows":
-[[name, value, derived], ...]}`` for the bench-smoke CI artifact; rows are
-also printed as CSV either way.
+sequential-decide baseline at mix 0.9, S = 64, M = 1024, on CPU. Finally
+(f) the observability overhead gate (``--obs-overhead``, see
+``obs_overhead_rows``): the same step-level drive with a live
+``repro.obs`` metrics registry + flight recorder attached must stay
+within 3% windows/sec of the bare drive (ISSUE 7 acceptance, asserted
+in-benchmark). ``python -m benchmarks.micro_aligner --json PATH`` writes
+``{"rows": [[name, value, derived], ...]}`` for the bench-smoke CI
+artifact; rows are also printed as CSV either way.
 """
 from __future__ import annotations
 
@@ -334,6 +338,114 @@ def reuse_mix_rows(mixes=(0.0, 0.5, 0.9, 0.99), cfg: TorrConfig = REUSE_CFG,
     return rows
 
 
+# --- observability overhead gate -------------------------------------------
+
+# registry snapshot of the last instrumented obs_overhead drive; embedded
+# in the JSON artifact (benchmarks.run and --json) via metrics_snapshot()
+_METRICS_SNAPSHOT = None
+
+
+def metrics_snapshot():
+    """Metrics of the last instrumented run, for the JSON artifact."""
+    return _METRICS_SNAPSHOT
+
+
+def obs_overhead_rows(cfg: TorrConfig = REUSE_CFG, n_streams: int = 64,
+                      n_windows: int = 10, rounds: int = 3) -> list[tuple]:
+    """Per-step observability overhead on the serving-shaped compact drive.
+
+    Times the mix-0.9 step-level drive (S = 64, M = 1024 — the ISSUE 6
+    gate's shape) twice: bare, and with a live ``repro.obs`` stack (metrics
+    registry + flight recorder + ``StepObserver``) folded exactly the way
+    the sync engine folds it — deferred one step behind dispatch, so the
+    host never blocks on in-flight device work, with the final drain
+    inside the timed region (the engine pays it at ``summary()``). The
+    ISSUE 7 acceptance gate is overhead <= 3% windows/sec, asserted here
+    so CI bench-smoke fails loudly if instrumentation creeps onto the hot
+    path.
+    """
+    from collections import deque
+
+    from repro.obs import FlightRecorder, MetricsRegistry, StepObserver
+
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = jax.random.uniform(jax.random.PRNGKey(1), (n_streams, cfg.M))
+    step = jax.jit(pipeline.torr_multi_stream_step,
+                   static_argnames=("cfg", "serial", "plan", "fused",
+                                    "bucket_cap", "decide"))
+    R = n_streams * cfg.N_max
+    windows = _mix_trace(cfg, 0.9, n_streams, n_windows)
+    warm, timed = windows[0], windows[1:]
+
+    # oracle tier for the trace, same as reuse_mix_rows
+    st = pipeline.init_multi_stream_state(cfg, task_w)
+    st, _, _ = step(st, im, *warm, cfg, fused="prefix")
+    max_full = 1
+    for q, v, b, qd in timed:
+        st, _o, tel = step(st, im, q, v, b, qd, cfg, fused="prefix")
+        max_full = max(max_full, int(np.sum(np.asarray(tel.path) == PATH_FULL)))
+    tier = policy.bucket_tier(R, max_full)
+
+    def drive(obs):
+        st = pipeline.init_multi_stream_state(cfg, task_w)
+        st, _, _ = step(st, im, *warm, cfg, fused="compact", bucket_cap=tier)
+        backlog = deque()
+        for q, v, b, qd in timed:
+            st, _out, tel = step(st, im, q, v, b, qd, cfg, fused="compact",
+                                 bucket_cap=tier)
+            if obs is not None:
+                rec = obs.on_dispatch(n_streams, 0,
+                                      requested=("compact", tier, None))
+                backlog.append((tel, rec))
+                # the sync engine's deferred fold: everything but the
+                # newest (possibly in-flight) step
+                while len(backlog) > 1:
+                    tel0, rec0 = backlog.popleft()
+                    obs.observe_step(
+                        jax.tree_util.tree_map(np.asarray, tel0), rec0)
+        jax.block_until_ready(st.cache.age)
+        while backlog:                         # flush_telemetry()
+            tel0, rec0 = backlog.popleft()
+            obs.observe_step(jax.tree_util.tree_map(np.asarray, tel0), rec0)
+
+    # interleave base/obs rounds so slow host drift (the drives are ~1 s
+    # each) cancels instead of biasing one arm; best-of over rounds
+    drive(None)                                # compile / warm caches
+    t_base = t_obs = float("inf")
+    obs = None
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        drive(None)
+        t_base = min(t_base, time.perf_counter() - t0)
+        obs = StepObserver(MetricsRegistry(), FlightRecorder())
+        t0 = time.perf_counter()
+        drive(obs)
+        t_obs = min(t_obs, time.perf_counter() - t0)
+
+    # the instrumented drive must have actually observed every step
+    snap = obs.registry.snapshot()
+    n_steps = snap["torr_steps_total"]["series"][0]["value"]
+    assert n_steps == len(timed), (n_steps, len(timed))
+    assert len(obs.flight.records()) == len(timed)
+    assert all("telemetry" in r for r in obs.flight.records())
+    global _METRICS_SNAPSHOT
+    _METRICS_SNAPSHOT = snap
+
+    n_win = n_streams * len(timed)
+    pct = (t_obs - t_base) / t_base * 100.0
+    rows = [
+        (f"micro/obs_overhead_S{n_streams}_mix0.9_base_wps",
+         round(n_win / t_base, 1), "windows/sec, compact step, no obs"),
+        (f"micro/obs_overhead_S{n_streams}_mix0.9_obs_wps",
+         round(n_win / t_obs, 1),
+         "windows/sec, metrics+flight attached (deferred fold)"),
+        (f"micro/obs_overhead_S{n_streams}_mix0.9_pct", round(pct, 2),
+         "acceptance: <= 3.0"),
+    ]
+    assert pct <= 3.0, f"observability overhead {pct:.2f}% > 3% gate"
+    return rows
+
+
 def run() -> list[tuple]:
     cfg = TorrConfig(D=8192, B=8, M=1024, W=64, delta_budget=1024)
     key = jax.random.PRNGKey(0)
@@ -378,6 +490,8 @@ def run() -> list[tuple]:
     # (e) compact-vs-hoisted dispatch at the reuse-mix extremes (the full
     # sweep is `--reuse-mix 0,0.5,0.9,0.99`; CI tracks these two points)
     rows.extend(reuse_mix_rows(mixes=(0.0, 0.9)))
+    # (f) observability overhead gate (metrics+flight within 3% of bare)
+    rows.extend(obs_overhead_rows())
     return rows
 
 
@@ -390,8 +504,13 @@ def main() -> None:
                          "separated bypass+delta fractions (e.g. "
                          "0,0.5,0.9,0.99): per-lowering windows/sec for "
                          "the always-hoisted prefix vs compact dispatch")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="run only the observability overhead gate "
+                         "(metrics+flight vs bare step drive, <= 3%%)")
     args = ap.parse_args()
-    if args.reuse_mix:
+    if args.obs_overhead:
+        rows = obs_overhead_rows()
+    elif args.reuse_mix:
         mixes = tuple(float(m) for m in args.reuse_mix.split(",") if m)
         rows = reuse_mix_rows(mixes=mixes)
     else:
@@ -401,7 +520,8 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": [list(r) for r in rows],
-                       "backend": jax.default_backend()}, f, indent=1)
+                       "backend": jax.default_backend(),
+                       "metrics": metrics_snapshot()}, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,10 @@ Table 5, cycles/us for micro, seconds for roofline, windows/sec for the
 multi-stream Tables 6-7). ``--json PATH`` additionally writes the whole
 suite as one JSON document: ``{suite: {"rows": [[name, value, derived],
 ...], "seconds": s, "ok": bool}}`` — the machine-readable artifact CI and
-dashboards diff across commits.
+dashboards diff across commits. Suites instrumented with ``repro.obs``
+(table7, table8, micro) additionally carry a ``"metrics"`` key: the
+registry snapshot of the run's serving traffic (see
+``docs/observability.md``).
 """
 from __future__ import annotations
 
@@ -32,34 +35,36 @@ def main() -> None:
                    table7_async, table8_pareto, torr_reuse_ablation)
 
     suites = [
-        ("table1", table1_hw.run),
-        ("table2", table2_envelope.run),
-        ("table3", table3_runtime.run),
-        ("table4", table4_throughput.run),
-        ("table5", table5_accuracy.run),
-        ("table6", table6_multistream.run),
-        ("table7", table7_async.run),
-        ("table8", table8_pareto.run),
-        ("torr_ablation", torr_reuse_ablation.run),
-        ("micro", micro_aligner.run),
-        ("autotune", autotune_blocks.run),
-        ("roofline", roofline_summary.run),
+        ("table1", table1_hw),
+        ("table2", table2_envelope),
+        ("table3", table3_runtime),
+        ("table4", table4_throughput),
+        ("table5", table5_accuracy),
+        ("table6", table6_multistream),
+        ("table7", table7_async),
+        ("table8", table8_pareto),
+        ("torr_ablation", torr_reuse_ablation),
+        ("micro", micro_aligner),
+        ("autotune", autotune_blocks),
+        ("roofline", roofline_summary),
     ]
     if args.only:
         names = [n.strip() for n in args.only.split(",") if n.strip()]
-        unknown = set(names) - {n for n, _ in suites}
+        valid = [n for n, _ in suites]
+        unknown = set(names) - set(valid)
         if unknown:
-            print(f"unknown suite(s) {sorted(unknown)}", file=sys.stderr)
+            print(f"unknown suite(s) {sorted(unknown)}; "
+                  f"valid suites: {', '.join(valid)}", file=sys.stderr)
             sys.exit(2)
-        suites = [(n, f) for n, f in suites if n in names]
+        suites = [(n, m) for n, m in suites if n in names]
     failed = []
     report = {}
     print("name,value,derived")
-    for name, fn in suites:
+    for name, mod in suites:
         t0 = time.time()
         rows = []
         try:
-            for row in fn():
+            for row in mod.run():
                 rows.append(row)
                 print(",".join(str(x) for x in row), flush=True)
             ok = True
@@ -72,6 +77,13 @@ def main() -> None:
                   flush=True)
         report[name] = {"rows": [list(r) for r in rows],
                         "seconds": round(time.time() - t0, 1), "ok": ok}
+        # suites instrumented with repro.obs (table7/table8/micro) expose
+        # their registry snapshot for the artifact
+        snap_fn = getattr(mod, "metrics_snapshot", None)
+        if snap_fn is not None:
+            snap = snap_fn()
+            if snap is not None:
+                report[name]["metrics"] = snap
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)

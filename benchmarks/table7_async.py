@@ -52,8 +52,20 @@ def _cadence_jitter_ms(times: np.ndarray) -> float:
     return float(np.percentile(gaps, 99) - np.median(gaps))
 
 
-def _run_sync(cfg, im, task_w, streams):
-    eng = StreamEngine(cfg, im, n_slots=len(streams))
+# registry shared by every engine run of the last run() call: counters
+# accumulate over the whole sweep, so the JSON artifact's snapshot is the
+# suite-total serving traffic (windows, path mix, span latencies). The
+# micro_aligner obs gate bounds the measurement perturbation at <= 3%.
+_METRICS = None
+
+
+def metrics_snapshot():
+    """Metrics of the last run() sweep, for the JSON artifact."""
+    return _METRICS.snapshot() if _METRICS is not None else None
+
+
+def _run_sync(cfg, im, task_w, streams, metrics=None):
+    eng = StreamEngine(cfg, im, n_slots=len(streams), metrics=metrics)
     for s, frames in enumerate(streams):
         eng.admit(s, task_w[s])
         for q, valid, boxes in frames:
@@ -68,12 +80,13 @@ def _run_sync(cfg, im, task_w, streams):
             np.asarray(out.scores), np.asarray(out.best), np.asarray(tel.path)
         done.extend([time.perf_counter()] * len(res))
     dt = time.perf_counter() - t0
+    eng.flush_telemetry()
     return eng.stats.windows / dt, _cadence_jitter_ms(np.asarray(done))
 
 
-def _run_async(cfg, im, task_w, streams, mesh=None):
+def _run_async(cfg, im, task_w, streams, mesh=None, metrics=None):
     eng = AsyncStreamEngine(cfg, im, n_slots=len(streams), mesh=mesh,
-                            paused=True)
+                            paused=True, metrics=metrics)
     done = []
     futs = []
     for s, frames in enumerate(streams):
@@ -95,17 +108,21 @@ def _run_async(cfg, im, task_w, streams, mesh=None):
 
 
 def run(stream_counts=(4, 16, 64), n_frames: int = 12) -> list[tuple]:
+    global _METRICS
+    from repro.obs import MetricsRegistry
     cfg = CFG
     im = random_item_memory(jax.random.PRNGKey(0), cfg)
     multi_dev = len(jax.devices()) > 1
+    _METRICS = reg = MetricsRegistry()
     rows = []
     for S in stream_counts:
         task_w = np.asarray(
             jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
         streams = _make_streams(cfg, S, n_frames, seed=S)
 
-        wps_sync, jit_sync = _run_sync(cfg, im, task_w, streams)
-        wps_async, jit_async = _run_async(cfg, im, task_w, streams)
+        wps_sync, jit_sync = _run_sync(cfg, im, task_w, streams, metrics=reg)
+        wps_async, jit_async = _run_async(cfg, im, task_w, streams,
+                                          metrics=reg)
         rows.append((f"table7/sync_S{S}", round(wps_sync, 1),
                      f"speedup=1.00|p99_jitter_ms={jit_sync:.2f}"))
         rows.append((f"table7/async_S{S}", round(wps_async, 1),
@@ -113,7 +130,8 @@ def run(stream_counts=(4, 16, 64), n_frames: int = 12) -> list[tuple]:
                      f"|p99_jitter_ms={jit_async:.2f}"))
         if multi_dev:
             mesh = shd.stream_mesh()
-            wps_sh, jit_sh = _run_async(cfg, im, task_w, streams, mesh=mesh)
+            wps_sh, jit_sh = _run_async(cfg, im, task_w, streams, mesh=mesh,
+                                        metrics=reg)
             rows.append((
                 f"table7/sharded_S{S}x{mesh.devices.size}",
                 round(wps_sh, 1),

@@ -67,8 +67,19 @@ def _static_banks(cfg, n_nominal: int, window_scale: float) -> int:
     return 1
 
 
+# registry fed by the governed simulate() runs of the last run() sweep
+# (ladder level / energy-EWMA gauges, plan-switch counter); embedded in
+# the JSON artifact via metrics_snapshot()
+_METRICS = None
+
+
+def metrics_snapshot():
+    """Metrics of the last run() sweep, for the JSON artifact."""
+    return _METRICS.snapshot() if _METRICS is not None else None
+
+
 def simulate(rt: str, mode: str, n_frames: int = 240, seed: int = 0,
-             energy_budget_mj: float | None = None) -> dict:
+             energy_budget_mj: float | None = None, metrics=None) -> dict:
     """One mode's trip through the load ramp; cycle-model-priced."""
     cfg = torr_edge(rt)
     budget = rt_budget_s(rt)
@@ -79,7 +90,8 @@ def simulate(rt: str, mode: str, n_frames: int = 240, seed: int = 0,
     gov = None
     if mode == "governor":
         gov = Governor(cfg, GovernorPolicy(
-            budget_s=budget, energy_budget_mj=energy_budget_mj))
+            budget_s=budget, energy_budget_mj=energy_budget_mj),
+            metrics=metrics)
     static_b = _static_banks(cfg, N_NOMINAL, window_scale)
 
     plan = full_plan(cfg)
@@ -140,6 +152,9 @@ def simulate(rt: str, mode: str, n_frames: int = 240, seed: int = 0,
 
 
 def run(n_frames: int = 240) -> list[tuple]:
+    global _METRICS
+    from repro.obs import MetricsRegistry
+    _METRICS = reg = MetricsRegistry()
     rows = []
     for rt in ("RT-60", "RT-30"):
         results = {}
@@ -148,7 +163,7 @@ def run(n_frames: int = 240) -> list[tuple]:
                               ("governor+e", PAPER_MJ[rt])):
             r = simulate(rt, mode.replace("+e", "") if "+e" in mode
                          else mode, n_frames=n_frames,
-                         energy_budget_mj=ebudget)
+                         energy_budget_mj=ebudget, metrics=reg)
             results[mode] = r
             derived = (f"miss_rate={r['miss_rate']:.3f}"
                        f"|p99_ms={r['p99_ms']:.2f}"

@@ -190,7 +190,8 @@ class Governor:
     """Mutable loop state around the pure :func:`plan_level` table."""
 
     def __init__(self, cfg: TorrConfig, pol: GovernorPolicy,
-                 ladder: tuple[KnobPlan, ...] | None = None):
+                 ladder: tuple[KnobPlan, ...] | None = None,
+                 metrics=None):
         self.cfg = cfg
         self.pol = pol
         self.ladder = tuple(ladder) if ladder is not None else build_ladder(cfg)
@@ -199,6 +200,25 @@ class Governor:
         self.rel_cost = ladder_rel_cost(self.ladder, cfg)
         self.level = 0
         self._recover = 0
+        # authoritative control-plane audit trail: one (banks, planes,
+        # level) entry per update() call, i.e. per dispatched governed
+        # step. The flight recorder's replayed plan timeline must bit-match
+        # this list (tests/test_obs.py) — that equivalence is what makes
+        # trace-driven ladder fitting (ROADMAP: governor autotuning)
+        # trustworthy. One small tuple per step; clear() between runs if
+        # a long-lived host needs the memory back.
+        self.plan_log: list[tuple[int, int, int]] = []
+        self._g_level = None
+        if metrics is not None:
+            self._g_level = metrics.gauge(
+                "torr_plan_level",
+                "Current ladder position (0 = full plan).")
+            self._g_energy = metrics.gauge(
+                "torr_energy_ewma_mj",
+                "EWMA of modeled per-window energy (mJ).")
+            self._c_switch = metrics.counter(
+                "torr_plan_switches_total",
+                "Knob-plan latch changes (hysteresis-damped).")
         # relative cost of the steps the latency EMA currently reflects:
         # blended at the same rate the deadline tracker blends latencies,
         # so step_s / rel_meas stays an unbiased full-plan estimate across
@@ -222,16 +242,24 @@ class Governor:
         if level != self.level:
             self.switches += 1
             self.level = level
+            if self._g_level is not None:
+                self._c_switch.inc()
         a = self.pol.meas_alpha
         self._rel_meas = (1 - a) * self._rel_meas + a * float(self.rel_cost[level])
         self.windows_by_level[level] += n_windows
-        return self.ladder[level]
+        plan = self.ladder[level]
+        self.plan_log.append((int(plan.banks), int(plan.planes), level))
+        if self._g_level is not None:
+            self._g_level.set(level)
+        return plan
 
     def observe_energy(self, mj: float) -> None:
         """Fold one window's modeled energy into the EWMA."""
         a = self.pol.energy_alpha
         self.energy_ewma_mj = mj if self.energy_ewma_mj <= 0.0 else \
             (1.0 - a) * self.energy_ewma_mj + a * mj
+        if self._g_level is not None:
+            self._g_energy.set(self.energy_ewma_mj)
 
     def summary(self) -> dict:
         p = self.plan

@@ -54,8 +54,9 @@ from . import aligner as al
 from . import policy, query_cache, reasoner
 from .item_memory import ItemMemory, plan_word_mask
 from .query_cache import CacheState
-from .types import (PATH_BYPASS, PATH_FULL, StreamBatch, TorrConfig,
-                    WindowTelemetry, plan_tag)
+from .types import (DECIDE_IDS, DECIDE_NONE, FUSED_IDS, PATH_BYPASS,
+                    PATH_FULL, StreamBatch, TorrConfig, WindowTelemetry,
+                    plan_tag)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -191,7 +192,8 @@ def _proposal_body(cfg: TorrConfig, im: ItemMemory, task_w, banks, planes,
 
 def _apply_pass_batched(state: TorrState, im: ItemMemory, q_packed_all,
                         valid, boxes, queue_depth, cfg: TorrConfig, banks,
-                        planes, high, n_valid, dec, aux, acc_rows):
+                        planes, high, n_valid, dec, aux, acc_rows,
+                        bucket_tier=0):
     """Batched apply: replay a whole [S, N] dispatch's decisions without a
     value-carrying scan — the ``decide="batched"`` counterpart of the
     per-proposal :func:`_proposal_body` apply scan, bit-identical to it.
@@ -315,10 +317,12 @@ def _apply_pass_batched(state: TorrState, im: ItemMemory, q_packed_all,
         valid=valid_f,
     )
     telem = (eff, d_count, rho, active)
-    return jax.vmap(_finish_window,
-                    in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))(
+    return jax.vmap(
+        _finish_window,
+        in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None, None, None, None))(
         cache, state.task_weights, outs, telem, valid, boxes, queue_depth,
-        banks, n_valid, high, planes)
+        banks, n_valid, high, planes, FUSED_IDS["compact"],
+        DECIDE_IDS["batched"], bucket_tier)
 
 
 def _decide_body(cfg: TorrConfig, banks, planes, wmask, high):
@@ -625,17 +629,19 @@ def torr_window_step(
     wmask = plan_word_mask(cfg, banks, planes)
     arange = jnp.arange(cfg.N_max, dtype=jnp.int32)
 
+    decide_id, btier = DECIDE_NONE, 0
     if fused == "compact":
-        decide_fn = (_decide_pass_batched
-                     if _resolve_decide(decide) == "batched"
+        decide_mode = _resolve_decide(decide)
+        decide_id = DECIDE_IDS[decide_mode]
+        btier = _resolve_bucket_cap(bucket_cap, plan, cfg.N_max)
+        decide_fn = (_decide_pass_batched if decide_mode == "batched"
                      else _decide_pass)
         dec = decide_fn(state.cache, q_packed_all, valid, cfg, banks,
                         planes, high)
         acc_rows = al.compact_full_scores(
             q_packed_all, dec[0] == PATH_FULL,
             jnp.broadcast_to(banks, (cfg.N_max,)), im, cfg, planes=planes,
-            cap=cap, bucket_cap=_resolve_bucket_cap(bucket_cap, plan,
-                                                    cfg.N_max))
+            cap=cap, bucket_cap=btier)
         body = _proposal_body(cfg, im, state.task_weights, banks, planes,
                               wmask, high, acc_full_all=acc_rows,
                               fused_delta=True, decided=True)
@@ -661,14 +667,20 @@ def torr_window_step(
             body, state.cache, (q_packed_all, valid, arange))
 
     return _finish_window(cache, state.task_weights, outs, telem, valid,
-                          boxes, queue_depth, banks, n_valid, high, planes)
+                          boxes, queue_depth, banks, n_valid, high, planes,
+                          fused_mode=FUSED_IDS[fused], decide_mode=decide_id,
+                          bucket_tier=btier)
 
 
 def _finish_window(cache, task_w, outs, telem, valid, boxes, queue_depth,
-                   banks, n_valid, high, planes):
+                   banks, n_valid, high, planes, fused_mode=FUSED_IDS["off"],
+                   decide_mode=DECIDE_NONE, bucket_tier=0):
     """Assemble (state, output, telemetry) from one window's scan results —
     shared by every lowering of the step so the trace vocabulary cannot
-    drift between them."""
+    drift between them. ``fused_mode``/``decide_mode``/``bucket_tier`` are
+    the *static* resolved lowering knobs (``types.FUSED_IDS`` /
+    ``types.DECIDE_IDS`` encodings) the dispatching step records into the
+    trace."""
     actions, d_counts, rhos, active = telem
     # padding actions (3) are reported as bypass with zero cost
     path = jnp.where(actions == 3, PATH_BYPASS, actions)
@@ -682,6 +694,9 @@ def _finish_window(cache, task_w, outs, telem, valid, boxes, queue_depth,
         queue_depth=jnp.asarray(queue_depth, jnp.int32),
         high_load=high,
         planes=jnp.int32(planes),
+        fused_mode=jnp.int32(fused_mode),
+        decide_mode=jnp.int32(decide_mode),
+        bucket_tier=jnp.int32(bucket_tier),
     )
     out = WindowOutput(
         scores=outs,
@@ -864,7 +879,8 @@ def _multi_stream_compact_step(
     if decide_mode == "batched" and not serial:
         return _apply_pass_batched(state, im, q_packed_all, valid, boxes,
                                    queue_depth, cfg, banks, planes, high,
-                                   n_valid, dec, aux, acc_rows)
+                                   n_valid, dec, aux, acc_rows,
+                                   bucket_tier=bcap)
 
     def apply_one(args):
         st, q, v, b, qd, bk, h, nv, dec_s, accs = args
@@ -876,7 +892,10 @@ def _multi_stream_compact_step(
             body, st.cache,
             (q, v, jnp.arange(cfg.N_max, dtype=jnp.int32)) + dec_s)
         return _finish_window(cache, st.task_weights, outs, telem, v, b, qd,
-                              bk, nv, h, planes)
+                              bk, nv, h, planes,
+                              fused_mode=FUSED_IDS["compact"],
+                              decide_mode=DECIDE_IDS[decide_mode],
+                              bucket_tier=bcap)
 
     args = (state, q_packed_all, valid, boxes, queue_depth, banks, high,
             n_valid, dec, acc_rows)

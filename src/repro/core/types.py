@@ -106,6 +106,17 @@ PATH_DELTA = 1
 PATH_FULL = 2
 PATH_NAMES = ("bypass", "delta", "full")
 
+# Static-lowering encodings recorded in WindowTelemetry so lowering audits
+# (flight recorder, cycle model) can read the resolved dispatch straight off
+# the trace. Index-aligned name tuples are the shared decode vocabulary —
+# ``FUSED_NAMES[int(tel.fused_mode)]`` — used by ``repro.obs`` and
+# ``repro.perf.cycle_model``.
+FUSED_NAMES = ("off", "switch", "prefix", "compact")
+FUSED_IDS = {name: i for i, name in enumerate(FUSED_NAMES)}
+DECIDE_NAMES = ("scan", "batched")
+DECIDE_IDS = {name: i for i, name in enumerate(DECIDE_NAMES)}
+DECIDE_NONE = -1   # non-compact lowerings run no decide pass
+
 # The delta accumulator's exactness tag (Eq. 6): a delta correction is only
 # valid against an accumulator computed under the *same* enabled dimensions,
 # which under the QoS control plane means the same (banks, bit-planes) pair.
@@ -164,6 +175,11 @@ class WindowTelemetry:
     ``banks`` and ``planes`` together record the knob plan the window
     actually ran with (the QoS governor's latched D'/precision choice), so
     energy accounting and plan audits read straight off the trace.
+    ``fused_mode``/``decide_mode``/``bucket_tier`` record the *resolved*
+    static lowering knobs the step actually dispatched with (``FUSED_IDS``/
+    ``DECIDE_IDS`` encodings; ``DECIDE_NONE`` and tier 0 for lowerings that
+    run no decide pass), so lowering audits never have to re-derive which
+    executable a traced window went through.
     """
 
     path: jax.Array        # [N_max] int32, PATH_* per proposal
@@ -175,12 +191,16 @@ class WindowTelemetry:
     queue_depth: jax.Array # [] int32, backlog fed to H(N, q) this window
     high_load: jax.Array   # [] bool, H(N, q) as evaluated by Alg. 1
     planes: jax.Array      # [] int32, enabled bit-slice planes this window
+    fused_mode: jax.Array  # [] int32, FUSED_IDS[...] the step ran with
+    decide_mode: jax.Array # [] int32, DECIDE_IDS[...] or DECIDE_NONE
+    bucket_tier: jax.Array # [] int32, compact bucket capacity (0 = n/a)
 
     def tree_flatten(self):
         return (
             (self.path, self.delta_count, self.banks, self.rho, self.n_valid,
              self.reasoner_active, self.queue_depth, self.high_load,
-             self.planes),
+             self.planes, self.fused_mode, self.decide_mode,
+             self.bucket_tier),
             None,
         )
 

@@ -69,6 +69,23 @@ via bypass/delta:
 
     PYTHONPATH=src python -m repro.launch.serve --torr-streams 8 \\
         --torr-frames 30 --torr-fused auto
+
+Observability (``--metrics-port`` / ``--metrics-json`` / ``--flight-jsonl``)
+============================================================================
+
+Any of the three flags arms the ``repro.obs`` observability tier on the
+stream engine, the deadline tracker and the governor:
+
+* ``--metrics-port N`` serves Prometheus text on
+  ``http://127.0.0.1:N/metrics`` (0 = ephemeral port, printed at startup)
+  for the duration of the run — windows/path-mix/deadline/plan/span
+  metric families, catalog in ``docs/observability.md``;
+* ``--metrics-json PATH`` dumps the final registry snapshot as JSON (the
+  CI bench-smoke artifact shape);
+* ``--flight-jsonl PATH`` spills the flight recorder — one structured
+  record per dispatched step (resolved lowering, latched plan, governor
+  slack/energy, telemetry digest) — replayable offline with
+  ``repro.obs.flight.replay`` into the exact governor plan timeline.
 """
 from __future__ import annotations
 
@@ -88,7 +105,9 @@ from ..serving import reranker as rr
 def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                      serial: bool = False, use_async: bool = False,
                      mesh_devices: int = 0, rt: str = "",
-                     governor: bool = False, fused: str | None = None) -> None:
+                     governor: bool = False, fused: str | None = None,
+                     metrics_port: int | None = None, metrics_json: str = "",
+                     flight_jsonl: str = "", flight_capacity: int = 4096):
     """Serve S synthetic TOOD streams through the batched window engine.
 
     ``use_async`` routes through the dispatch/collect
@@ -99,6 +118,14 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
     plus the energy governor — see the module docstring). ``fused`` picks
     the full path's kernel dispatch (None = the lowering-appropriate fused
     default, "off" = the jnp-oracle step; see ``repro.core.pipeline``).
+
+    Any of ``metrics_port`` (HTTP exposition; 0 = ephemeral), their JSON
+    dump (``metrics_json``) or the flight-recorder spill (``flight_jsonl``)
+    arms the ``repro.obs`` tier across the engine/tracker/governor. Returns
+    None when observability is off; otherwise a dict with the final
+    ``registry``/``flight`` objects, the scraped ``metrics_text`` (when a
+    server ran) and the engine ``summary`` — what ``tests/test_obs.py``
+    asserts the acceptance criteria against.
     """
     from ..core import hdc
     from ..data import tood_synth as ts
@@ -115,6 +142,15 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
     world = ts.make_world(seed=0, M=cfg.M, d=cfg.feat_dim)
     sys_ = tp.build_system(world, cfg, seed=0)
     n_slots = n_slots or n_streams
+    registry = flight = server = None
+    if metrics_port is not None or metrics_json or flight_jsonl:
+        from ..obs import FlightRecorder, MetricsRegistry, MetricsServer
+        registry = MetricsRegistry()
+        flight = FlightRecorder(flight_capacity)
+        if metrics_port is not None:
+            server = MetricsServer(registry, port=metrics_port)
+            print(f"[serve/torr] metrics endpoint "
+                  f"http://127.0.0.1:{server.start()}/metrics")
     if use_async:
         from ..runtime import sharding as shd
         from ..serving.async_engine import AsyncStreamEngine
@@ -125,17 +161,19 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
             None if mesh_devices < 0 else mesh_devices)
         if governor and not rt:
             rt = "RT-60"    # the governor is slack-driven: needs a deadline
-        tracker = DeadlineTracker(policy_for(rt)) if rt else None
+        tracker = (DeadlineTracker(policy_for(rt), metrics=registry)
+                   if rt else None)
         gov = None
         if governor:
             from ..control import Governor, policy_from_env
-            gov = Governor(cfg, policy_from_env(rt))
+            gov = Governor(cfg, policy_from_env(rt), metrics=registry)
         eng = AsyncStreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
                                 fused=fused, mesh=mesh, tracker=tracker,
-                                governor=gov, paused=True)
+                                governor=gov, paused=True,
+                                metrics=registry, flight=flight)
     else:
         eng = StreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
-                           fused=fused)
+                           fused=fused, metrics=registry, flight=flight)
 
     R = jnp.asarray(sys_.R)
     n_tasks = world.relevance.shape[0]
@@ -224,6 +262,32 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                   f"energy_ewma={gsum['energy_ewma_mj']:.1f} mJ "
                   f"windows_by_level={gsum['windows_by_level']}")
 
+    if registry is None:
+        return None
+    # fold any telemetry still deferred by the sync engine's double
+    # buffering before the registry is read (no-op on the async runtime,
+    # whose collector owns the fold)
+    eng.flush_telemetry()
+    metrics_text = None
+    if server is not None:
+        import urllib.request
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{server.port}/metrics") as resp:
+            metrics_text = resp.read().decode()
+        n_fam = metrics_text.count("# TYPE ")
+        print(f"[serve/torr] metrics: {n_fam} families exposed at /metrics")
+        server.close()
+    if metrics_json:
+        from ..obs import write_json_snapshot
+        write_json_snapshot(registry, metrics_json)
+        print(f"[serve/torr] metrics snapshot -> {metrics_json}")
+    if flight_jsonl:
+        n_rec = flight.dump_jsonl(flight_jsonl)
+        print(f"[serve/torr] flight recorder: {n_rec} step records -> "
+              f"{flight_jsonl}")
+    return {"registry": registry, "flight": flight,
+            "metrics_text": metrics_text, "summary": eng.summary()}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -268,6 +332,18 @@ def main() -> None:
                          "gating with the energy governor (implies --async; "
                          "defaults --rt to RT-60; see module docstring for "
                          "TORR_GOV_* env overrides)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus text on 127.0.0.1:PORT/metrics "
+                         "for the duration of the run (0 = ephemeral port, "
+                         "printed at startup); metric catalog in "
+                         "docs/observability.md")
+    ap.add_argument("--metrics-json", default="", metavar="PATH",
+                    help="dump the final metrics registry snapshot as JSON "
+                         "(the CI bench-smoke artifact shape)")
+    ap.add_argument("--flight-jsonl", default="", metavar="PATH",
+                    help="spill the flight recorder (one structured record "
+                         "per dispatched step) to JSONL; replay offline "
+                         "with repro.obs.flight.replay")
     args = ap.parse_args()
 
     if args.torr_streams > 0:
@@ -277,7 +353,10 @@ def main() -> None:
                                     or bool(args.rt) or args.governor),
                          mesh_devices=args.mesh, rt=args.rt,
                          governor=args.governor,
-                         fused=args.torr_fused or None)
+                         fused=args.torr_fused or None,
+                         metrics_port=args.metrics_port,
+                         metrics_json=args.metrics_json,
+                         flight_jsonl=args.flight_jsonl)
         return
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)

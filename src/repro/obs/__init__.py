@@ -1,0 +1,22 @@
+"""Serving observability: metrics registry, flight recorder, span timers.
+
+Zero *new* dependencies: stdlib + numpy, plus the ``core.types`` name
+vocabulary (``PATH_NAMES``/``FUSED_NAMES``/``DECIDE_NAMES``) the bridge
+decodes telemetry with. Metric catalog, flight schema and endpoint usage
+live in ``docs/observability.md``.
+"""
+from .bridge import StepObserver, telemetry_digest
+from .export import MetricsServer, prometheus_text, write_json_snapshot
+from .flight import (FLIGHT_SCHEMA_VERSION, FlightRecorder, load_jsonl,
+                     plan_timeline, replay)
+from .metrics import (LATENCY_BUCKETS_S, Counter, Gauge, Histogram,
+                      MetricsRegistry, default_registry)
+from .spans import NULL_SPAN, current_span, span, span_stack
+
+__all__ = [
+    "Counter", "FLIGHT_SCHEMA_VERSION", "FlightRecorder", "Gauge",
+    "Histogram", "LATENCY_BUCKETS_S", "MetricsRegistry", "MetricsServer",
+    "NULL_SPAN", "StepObserver", "current_span", "default_registry",
+    "load_jsonl", "plan_timeline", "prometheus_text", "replay", "span",
+    "span_stack", "telemetry_digest", "write_json_snapshot",
+]

@@ -220,21 +220,39 @@ def window_cost(path: np.ndarray, delta_count: np.ndarray, banks: int,
 
 
 def telemetry_cost(tel, cfg: TorrConfig, rt_budget_s: float,
-                   window_scale: float = 1.0) -> WindowCost:
+                   window_scale: float = 1.0,
+                   use_recorded_lowering: bool = False) -> WindowCost:
     """Cost one served window straight from its (host-resident) telemetry.
 
     Reads the knob plan the window *actually* ran with — ``banks`` and
     ``planes`` are both recorded in :class:`~repro.core.types
     .WindowTelemetry` — so the QoS governor's energy feedback and any
     offline audit price precision-gated windows correctly.
+
+    ``use_recorded_lowering=True`` additionally prices with the resolved
+    ``fused_mode``/``decide_mode``/``bucket_tier`` the telemetry recorded
+    (an opt-in: the default keeps the nominal ``fused="switch"`` pricing
+    the governor's energy EWMA and table8's operating points are
+    calibrated against, so enabling it changes modeled numbers — meant
+    for lowering audits that diff measured vs modeled envelopes, e.g. on
+    flight-recorder digests whose key names match these arguments).
     """
     banks = int(tel.banks)
     planes = int(tel.planes)
+    kw = {}
+    if use_recorded_lowering:
+        from ..core.types import DECIDE_NAMES, FUSED_NAMES
+        fused = FUSED_NAMES[int(tel.fused_mode)]
+        decide_id = int(tel.decide_mode)
+        tier = int(tel.bucket_tier)
+        kw = {"fused": fused,
+              "decide": DECIDE_NAMES[decide_id] if decide_id >= 0 else "scan",
+              "bucket_cap": tier if tier > 0 else None}
     return window_cost(
         np.asarray(tel.path), np.asarray(tel.delta_count), banks,
         np.asarray(tel.reasoner_active), int(tel.n_valid), cfg, rt_budget_s,
         window_scale=window_scale,
-        d_eff=int(cfg.d_eff_planned(banks, planes)))
+        d_eff=int(cfg.d_eff_planned(banks, planes)), **kw)
 
 
 def path_mix(rho: np.ndarray, delta: np.ndarray, high: bool,

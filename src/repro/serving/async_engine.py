@@ -114,6 +114,8 @@ class AsyncStreamEngine(StreamEngine):
         tracker: DeadlineTracker | None = None,
         governor=None,
         paused: bool = False,
+        metrics=None,
+        flight=None,
     ):
         if governor is not None and tracker is None:
             raise ValueError(
@@ -127,7 +129,17 @@ class AsyncStreamEngine(StreamEngine):
         super().__init__(cfg, im,
                          n_slots=shd.pad_stream_slots(n_slots, self._mesh),
                          jit=jit, serial=serial, fused=fused,
-                         bucket_cap=bucket_cap, decide=decide)
+                         bucket_cap=bucket_cap, decide=decide,
+                         metrics=metrics, flight=flight)
+        # async-specific phase spans (the sync step() spans are unused
+        # here); each runs on exactly one daemon thread
+        from ..obs.spans import NULL_SPAN, span
+        sp = (lambda name: span(name, metrics)) if metrics is not None \
+            else (lambda name: NULL_SPAN)
+        self._sp_decide = sp("host_decide")
+        self._sp_device = sp("device_step")
+        self._sp_drain = sp("collector_drain")
+        self._last_slack = None
         if self._mesh is not None:
             # stacked per-stream state sharded on the slot axis; item memory
             # (shared task knowledge) replicated on every device
@@ -306,6 +318,8 @@ class AsyncStreamEngine(StreamEngine):
             decision = self._tracker.decide_head(arrival, backlog, now)
             if decision == Decision.SHED:
                 self.stats.shed += 1
+                if self._obs is not None:
+                    self._obs.on_shed()
                 self._inflight -= 1
                 deferred.append((fut, WindowShed(
                     stream_id, self._tracker.lateness(arrival, now))))
@@ -340,14 +354,12 @@ class AsyncStreamEngine(StreamEngine):
         self._plan = self._governor.update(
             slack, self._tracker.step_ema_s, backlog=backlog,
             n_windows=len(served))
+        self._last_slack = slack
 
     def _fold_telemetry(self) -> None:
         # the dispatcher must never block on device telemetry; the
         # collector already holds host-resident traces and feeds
-        # _observe_path_mix from there (a benign cross-thread float write)
-        pass
-
-    def _note_step_telemetry(self, tel) -> None:
+        # _observe_path_mix (and the observer) from there
         pass
 
     def _dispatch(self, q, v, b, qd):
@@ -361,6 +373,7 @@ class AsyncStreamEngine(StreamEngine):
             queue_depth=jax.device_put(qd.astype(np.int32), s),
         )
         fused, bucket_cap, decide = self._resolve_fused()
+        self._last_resolved = (fused, bucket_cap, decide)
         self._state, out, tel = self._step(
             self._state, self.im, batch, self.cfg, serial=self._serial,
             plan=self._plan, fused=fused, bucket_cap=bucket_cap,
@@ -389,25 +402,45 @@ class AsyncStreamEngine(StreamEngine):
                         self._work.wait()
                     if self._stop:
                         break
-                    q, v, b, qd, served = self._assemble_admitted(deferred)
+                    with self._sp_decide:
+                        q, v, b, qd, served = \
+                            self._assemble_admitted(deferred)
+                        if served:
+                            self._govern(served)
                     if served:
-                        self._govern(served)
                         # dispatch under the lock: JAX async dispatch
                         # returns immediately, and admit/retire must not
                         # interleave a state rewrite between assemble and
                         # state advance
-                        t0 = time.monotonic()
-                        out, tel = self._dispatch(q, v, b, qd)
+                        with self._sp_dispatch:
+                            t0 = time.monotonic()
+                            out, tel = self._dispatch(q, v, b, qd)
                         self.stats.steps += 1
                         self.stats.windows += len(served)
                         self.stats.pad_slots += self.n_slots - len(served)
+                        rec = None
+                        if self._obs is not None:
+                            gov = None
+                            if self._governor is not None:
+                                gov = {
+                                    "level": self._governor.level,
+                                    "slack": self._last_slack,
+                                    "energy_ewma_mj":
+                                        self._governor.energy_ewma_mj,
+                                }
+                            rec = self._obs.on_dispatch(
+                                len(served), self.n_slots - len(served),
+                                requested=self._last_resolved,
+                                plan=self._plan, gov=gov,
+                                full_ewma=(self._full_ewma if self._auto
+                                           else None))
                 for fut, exc in deferred:   # callbacks run lock-free here
                     fut.set_exception(exc)
                 if not served:      # whole backlog shed this pass
                     continue
                 # bounded queue = pipeline depth: block here (not holding
                 # the lock) instead of racing ahead of the device
-                self._collect_q.put((served, out, tel, t0))
+                self._collect_q.put((served, out, tel, t0, rec))
                 if self._error is not None:
                     # the collector died while we were blocked in put():
                     # _fail's drain ran before our item landed, so nobody
@@ -431,50 +464,62 @@ class AsyncStreamEngine(StreamEngine):
                 item = self._collect_q.get()
                 if item is None:
                     break
-                served, out, tel, t0 = item
-                jax.block_until_ready(out.scores)
+                served, out, tel, t0, rec = item
+                with self._sp_device:
+                    jax.block_until_ready(out.scores)
                 dur = time.monotonic() - t0
-                # one device->host move per step, then cheap numpy slicing
-                out_h = jax.tree_util.tree_map(np.asarray, out)
-                tel_h = jax.tree_util.tree_map(np.asarray, tel)
-                if self._auto:
-                    # feed the load-aware dispatcher's path-mix EWMA from
-                    # the host-resident trace (never blocks the dispatcher)
-                    self._observe_path_mix(tel_h.path, tel_h.n_valid)
-                if self._tracker is not None:
-                    self._tracker.observe_step(dur)
-                now = (self._tracker.now() if self._tracker
-                       else time.monotonic())
-                for stream_id, slot, (fut, arrival) in served:
-                    tel_w = jax.tree_util.tree_map(lambda x: x[slot], tel_h)
-                    if self._governor is not None:
-                        # close the energy loop: price the plan the window
-                        # actually ran with (recorded in its telemetry);
-                        # window_scale follows the cycle model's convention
-                        # (1.0 @ RT-60, 2.0 @ RT-30) so the live EWMA and
-                        # table8's modeled operating points agree
-                        budget_s = self._tracker.policy.budget_s
-                        wc = telemetry_cost(
-                            tel_w, self.cfg, budget_s,
-                            window_scale=60.0 * budget_s)
-                        self._governor.observe_energy(wc.energy_j * 1e3)
-                    if fut.cancelled():
-                        # orphaned mid-flight (stream retired): nobody
-                        # consumes it, so keep it out of the deadline
-                        # latency/miss envelope too
-                        continue
-                    result = (
-                        jax.tree_util.tree_map(lambda x: x[slot], out_h),
-                        tel_w,
-                    )
-                    if self._tracker is not None:
-                        self._tracker.complete(arrival, now)
-                    fut.set_result(result)
-                with self._settled:
-                    self._inflight -= len(served)
-                    self._settled.notify_all()
+                with self._sp_drain:
+                    self._drain_item(served, out, tel, rec, dur)
         except BaseException as e:  # noqa: BLE001
             self._fail(e)
+
+    def _drain_item(self, served, out, tel, rec, dur) -> None:
+        """Move one retired step to host and resolve its windows."""
+        # one device->host move per step, then cheap numpy slicing
+        out_h = jax.tree_util.tree_map(np.asarray, out)
+        tel_h = jax.tree_util.tree_map(np.asarray, tel)
+        if self._auto:
+            # feed the load-aware dispatcher's path-mix EWMA from
+            # the host-resident trace (never blocks the dispatcher)
+            self._observe_path_mix(tel_h.path, tel_h.n_valid)
+        if self._obs is not None:
+            self._obs.observe_step(tel_h, rec, step_latency_s=dur)
+        if self._tracker is not None:
+            self._tracker.observe_step(dur)
+        now = (self._tracker.now() if self._tracker
+               else time.monotonic())
+        for stream_id, slot, (fut, arrival) in served:
+            tel_w = jax.tree_util.tree_map(lambda x: x[slot], tel_h)
+            if self._governor is not None:
+                # close the energy loop: price the plan the window
+                # actually ran with (recorded in its telemetry);
+                # window_scale follows the cycle model's convention
+                # (1.0 @ RT-60, 2.0 @ RT-30) so the live EWMA and
+                # table8's modeled operating points agree
+                budget_s = self._tracker.policy.budget_s
+                wc = telemetry_cost(
+                    tel_w, self.cfg, budget_s,
+                    window_scale=60.0 * budget_s)
+                self._governor.observe_energy(wc.energy_j * 1e3)
+            if fut.cancelled():
+                # orphaned mid-flight (stream retired): nobody
+                # consumes it — count the loss (the window was
+                # served and observed, but its result is dropped)
+                # and keep it out of the deadline envelope too
+                self.stats.telemetry_dropped += 1
+                if self._obs is not None:
+                    self._obs.drop(1)
+                continue
+            result = (
+                jax.tree_util.tree_map(lambda x: x[slot], out_h),
+                tel_w,
+            )
+            if self._tracker is not None:
+                self._tracker.complete(arrival, now)
+            fut.set_result(result)
+        with self._settled:
+            self._inflight -= len(served)
+            self._settled.notify_all()
 
     def _drain_collect(self) -> list:
         """Empty the collect queue; returns the drained windows' futures."""
@@ -485,6 +530,12 @@ class AsyncStreamEngine(StreamEngine):
             except queue.Empty:
                 return futs
             if item is not None:
+                # these steps were served and observed on-device, but
+                # their telemetry never reached the fold — the silent
+                # loss the telemetry_dropped counter exists for
+                self.stats.telemetry_dropped += len(item[0])
+                if self._obs is not None:
+                    self._obs.drop(len(item[0]))
                 futs.extend(f for _sid, _slot, (f, _arr) in item[0])
 
     def _drain_collect_failing(self, exc: BaseException) -> None:

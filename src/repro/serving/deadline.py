@@ -105,7 +105,8 @@ class DeadlineTracker:
     miss accounting). ``clock`` is injectable for deterministic tests.
     """
 
-    def __init__(self, policy: DeadlinePolicy, clock=time.monotonic):
+    def __init__(self, policy: DeadlinePolicy, clock=time.monotonic,
+                 metrics=None):
         self.policy = policy
         self._clock = clock
         self._step_s = policy.step_init_s
@@ -114,6 +115,24 @@ class DeadlineTracker:
         self.missed = 0
         self.shed = 0
         self.escalated = 0
+        # optional repro.obs wiring: pre-created handles so the per-window
+        # path is a dict hit + one unlocked increment
+        self._m_dec = None
+        if metrics is not None:
+            from ..obs.metrics import LATENCY_BUCKETS_S
+            dec = metrics.counter(
+                "torr_deadline_decisions_total",
+                "RT admission verdicts per popped head window.",
+                ["decision"])
+            self._m_dec = {d: dec.labels(decision=d.name.lower())
+                           for d in Decision}
+            self._m_miss = metrics.counter(
+                "torr_deadline_miss_total",
+                "Served windows that completed past their RT budget.")
+            self._m_lat = metrics.histogram(
+                "torr_window_latency_seconds",
+                "Arrival to results-ready latency of served windows.",
+                buckets=LATENCY_BUCKETS_S)
 
     def now(self) -> float:
         return self._clock()
@@ -140,6 +159,8 @@ class DeadlineTracker:
             self.escalated += 1
         elif d == Decision.SHED:
             self.shed += 1
+        if self._m_dec is not None:
+            self._m_dec[d].inc()
         return d
 
     def lateness(self, arrival_s: float, now: float | None = None) -> float:
@@ -154,6 +175,10 @@ class DeadlineTracker:
         self.completed += 1
         if lat > self.policy.budget_s:
             self.missed += 1
+            if self._m_dec is not None:
+                self._m_miss.inc()
+        if self._m_dec is not None:
+            self._m_lat.observe(lat)
         return lat
 
     # -- telemetry ----------------------------------------------------------

@@ -47,6 +47,8 @@ from ..core import pipeline, policy, query_cache
 from ..core.item_memory import ItemMemory
 from ..core.pipeline import TorrState, WindowOutput
 from ..core.types import PATH_FULL, StreamBatch, TorrConfig, WindowTelemetry
+from ..obs.bridge import StepObserver
+from ..obs.spans import NULL_SPAN, span
 
 # admission-gate verdicts for `_assemble(gate=...)`; values align with
 # `repro.serving.deadline.Decision` (an IntEnum) so trackers can be used
@@ -73,6 +75,10 @@ class EngineStats:
     retired: int = 0
     dropped: int = 0          # backlog windows discarded by retire()
     shed: int = 0             # windows shed by RT admission control
+    telemetry_dropped: int = 0  # observed windows lost before the fold
+                                # (collector drain on worker death, futures
+                                # cancelled mid-flight) — the silent-loss
+                                # audit counter
 
     @property
     def occupancy(self) -> float:
@@ -93,6 +99,8 @@ class StreamEngine:
         fused: str | None = None,
         bucket_cap: int | None = None,
         decide: str | None = None,
+        metrics=None,
+        flight=None,
     ):
         self.cfg = cfg
         self.im = im
@@ -137,6 +145,19 @@ class StreamEngine:
             if jit else step
         )
         self.stats = EngineStats()
+        # observability (repro.obs): a MetricsRegistry and/or FlightRecorder
+        # attach a StepObserver; without either the engine pays nothing but
+        # NULL_SPAN's empty context managers. The telemetry backlog rides
+        # the same deferred-fold path the auto dispatcher uses, so obs never
+        # blocks the host on an in-flight device step either.
+        self._obs = (StepObserver(metrics, flight)
+                     if metrics is not None or flight is not None else None)
+        sp = (lambda name: span(name, metrics)) if metrics is not None \
+            else (lambda name: NULL_SPAN)
+        self._sp_assemble = sp("host_assemble")
+        self._sp_dispatch = sp("dispatch_enqueue")
+        self._sp_observe = sp("host_observe")
+        self._last_resolved = (self._fused, self._bucket_cap, self._decide)
         # reusable host-side pad buffers for batch assembly
         self._q0 = np.zeros((cfg.N_max, cfg.words), np.uint32)
         self._v0 = np.zeros((cfg.N_max,), bool)
@@ -165,6 +186,8 @@ class StreamEngine:
             ),
         )
         self.stats.admitted += 1
+        if self._obs is not None:
+            self._obs.on_admit()
         return slot
 
     def retire(self, stream_id) -> None:
@@ -174,10 +197,13 @@ class StreamEngine:
         dropped *here* so a recycled slot can never serve a window (or leak
         queue-depth pressure) belonging to the retired stream."""
         slot = self._slot_of.pop(stream_id)
-        self.stats.dropped += len(self._pending[slot])
+        n_dropped = len(self._pending[slot])
+        self.stats.dropped += n_dropped
         self._pending[slot].clear()
         self._free.append(slot)
         self.stats.retired += 1
+        if self._obs is not None:
+            self._obs.on_retire(n_dropped)
 
     # -- window flow --------------------------------------------------------
 
@@ -262,6 +288,17 @@ class StreamEngine:
             f = float(np.sum(np.asarray(path) == PATH_FULL)) / nv
             self._full_ewma += AUTO_ALPHA * (f - self._full_ewma)
 
+    def _fold_one(self, tel, rec) -> None:
+        """Move one backlogged step's telemetry to host and consume it:
+        the auto dispatcher's path-mix EWMA, and the observer's metric
+        digest + flight-record completion (``rec`` is the step's open
+        flight record, or None)."""
+        tel_h = jax.tree_util.tree_map(np.asarray, tel)
+        if self._auto:
+            self._observe_path_mix(tel_h.path, tel_h.n_valid)
+        if self._obs is not None:
+            self._obs.observe_step(tel_h, rec)
+
     def _fold_telemetry(self) -> None:
         """Sync-engine EWMA feed: fold telemetry of steps that are at
         least one dispatch old. The newest entry stays in the backlog —
@@ -272,9 +309,15 @@ class StreamEngine:
         its collector thread feeds :meth:`_observe_path_mix` from already
         host-resident traces without ever touching the dispatcher."""
         while len(self._tel_backlog) > 1:
-            tel = self._tel_backlog.popleft()
-            self._observe_path_mix(np.asarray(tel.path),
-                                   np.asarray(tel.n_valid))
+            self._fold_one(*self._tel_backlog.popleft())
+
+    def flush_telemetry(self) -> None:
+        """Fold *every* backlogged step, including the newest (blocks on
+        any step still executing). Call before reading summaries or
+        spilling the flight recorder — otherwise up to one step's
+        telemetry is still deferred by the double-buffering contract."""
+        while self._tel_backlog:
+            self._fold_one(*self._tel_backlog.popleft())
 
     def _resolve_fused(self):
         """(fused, bucket_cap, decide) for the next dispatch.
@@ -300,12 +343,6 @@ class StreamEngine:
             return None, None, self._decide  # hoisted default, no decide pass
         return "compact", tier, self._decide
 
-    def _note_step_telemetry(self, tel) -> None:
-        """Remember the step's telemetry for a later EWMA fold (sync path;
-        the async engine's collector observes host telemetry instead)."""
-        if self._auto:
-            self._tel_backlog.append(tel)
-
     @property
     def full_path_ewma(self) -> float:
         """The auto dispatcher's current full-path-fraction estimate."""
@@ -318,24 +355,39 @@ class StreamEngine:
             boxes=jnp.asarray(b), queue_depth=jnp.asarray(qd),
         )
         fused, bucket_cap, decide = self._resolve_fused()
+        self._last_resolved = (fused, bucket_cap, decide)
         self._state, out, tel = self._step(
             self._state, self.im, batch, self.cfg, serial=self._serial,
             plan=self._plan, fused=fused, bucket_cap=bucket_cap,
             decide=decide,
         )
-        self._note_step_telemetry(tel)
         return out, tel
 
     def step(self) -> Dict[object, tuple[WindowOutput, WindowTelemetry]]:
         """Drain one window per busy slot through the batched step."""
-        q, v, b, qd, served = self._assemble()
+        with self._sp_assemble:
+            q, v, b, qd, served = self._assemble()
         if not served:  # idle engine: skip the no-op device step
             return {}
 
-        out, tel = self._dispatch(q, v, b, qd)
+        with self._sp_dispatch:
+            out, tel = self._dispatch(q, v, b, qd)
         self.stats.steps += 1
         self.stats.windows += len(served)
         self.stats.pad_slots += self.n_slots - len(served)
+
+        if self._auto or self._obs is not None:
+            rec = None
+            if self._obs is not None:
+                rec = self._obs.on_dispatch(
+                    len(served), self.n_slots - len(served),
+                    requested=self._last_resolved, plan=self._plan,
+                    full_ewma=self._full_ewma if self._auto else None)
+            # deferred fold: this step's telemetry enters the backlog, and
+            # only entries at least one dispatch old are consumed now
+            self._tel_backlog.append((tel, rec))
+            with self._sp_observe:
+                self._fold_telemetry()
 
         results = {}
         for stream_id, slot, _extra in served:
@@ -359,6 +411,16 @@ class StreamEngine:
         Step results are dispatched asynchronously; timing code must call
         this before reading the clock."""
         jax.block_until_ready(self._state.cache.age)
+
+    def summary(self) -> Dict[str, float]:
+        """Engine counters as a flat dict (flushes deferred telemetry so
+        the observer's numbers cover every dispatched step)."""
+        self.flush_telemetry()
+        s = dataclasses.asdict(self.stats)
+        s["occupancy"] = self.stats.occupancy
+        if self._auto:
+            s["full_path_ewma"] = self._full_ewma
+        return s
 
     def warmup(self) -> None:
         """Compile the batched step outside any timed region.
