@@ -10,14 +10,49 @@ dashboards diff across commits. Suites instrumented with ``repro.obs``
 (table7, table8, micro) additionally carry a ``"metrics"`` key: the
 registry snapshot of the run's serving traffic (see
 ``docs/observability.md``).
+
+The document also carries a top-level ``"meta"`` key (git SHA, UTC
+timestamp, JAX backend, argv) so ``benchmarks/trend.py`` can append the
+run to the perf-trend history and gate regressions against the rolling
+baseline — workflow in ``docs/observability.md``.
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
+import subprocess
 import sys
 import time
 import traceback
+
+
+def run_meta() -> dict:
+    """Provenance stamp for a benchmark artifact: git SHA (``GITHUB_SHA``
+    or ``git rev-parse``), UTC timestamp, JAX backend, argv."""
+    sha = os.environ.get("GITHUB_SHA", "")
+    if not sha:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True,
+                text=True, timeout=10,
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+            ).stdout.strip()
+        except (OSError, subprocess.SubprocessError):
+            sha = ""
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:  # noqa: BLE001 — provenance must never fail the run
+        backend = "unknown"
+    return {
+        "sha": sha or "unknown",
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "backend": backend,
+        "argv": list(sys.argv[1:]),
+    }
 
 
 def main() -> None:
@@ -58,7 +93,7 @@ def main() -> None:
             sys.exit(2)
         suites = [(n, m) for n, m in suites if n in names]
     failed = []
-    report = {}
+    report = {"meta": run_meta()}
     print("name,value,derived")
     for name, mod in suites:
         t0 = time.time()

@@ -84,9 +84,11 @@ def _run_sync(cfg, im, task_w, streams, metrics=None):
     return eng.stats.windows / dt, _cadence_jitter_ms(np.asarray(done))
 
 
-def _run_async(cfg, im, task_w, streams, mesh=None, metrics=None):
+def _run_async(cfg, im, task_w, streams, mesh=None, metrics=None,
+               flight=None, tracer=None):
     eng = AsyncStreamEngine(cfg, im, n_slots=len(streams), mesh=mesh,
-                            paused=True, metrics=metrics)
+                            paused=True, metrics=metrics, flight=flight,
+                            tracer=tracer)
     done = []
     futs = []
     for s, frames in enumerate(streams):
@@ -137,9 +139,54 @@ def run(stream_counts=(4, 16, 64), n_frames: int = 12) -> list[tuple]:
                 round(wps_sh, 1),
                 f"speedup={wps_sh / wps_sync:.2f}"
                 f"|p99_jitter_ms={jit_sh:.2f}"))
+    # suite-total step-latency quantiles off the shared registry's
+    # histogram (estimator: repro.obs.metrics.quantile — linear
+    # interpolation in the fixed buckets, so p99 resolution is bucket
+    # width). The async collector records dispatch->results-ready per
+    # step; name them *_ms so the perf-trend gate's throughput filter
+    # (higher-is-better only) skips them.
+    from repro.obs import snapshot_quantile
+    snap = reg.snapshot()
+    for q, tag in ((0.5, "p50"), (0.99, "p99")):
+        v = snapshot_quantile(snap, "torr_step_latency_seconds", q)
+        if v == v:  # NaN -> histogram never observed (no async steps)
+            rows.append((f"table7/step_latency_{tag}_ms",
+                         round(v * 1e3, 3), "async dispatch->ready"))
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main(argv=None) -> None:
+    """Standalone entry: the table sweep, optionally with a Chrome-trace
+    export of one traced async run (``--trace-json``)."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-json", default="", metavar="PATH",
+                    help="after the sweep, run one traced async pass "
+                         "(16 streams) and write a Chrome trace-event "
+                         "JSON; open in chrome://tracing / ui.perfetto.dev")
+    ap.add_argument("--frames", type=int, default=12)
+    args = ap.parse_args(argv)
+
+    for r in run(n_frames=args.frames):
         print(",".join(str(x) for x in r))
+    if args.trace_json:
+        from repro.obs import (FlightRecorder, MetricsRegistry, Tracer,
+                               write_chrome_trace)
+        cfg = CFG
+        im = random_item_memory(jax.random.PRNGKey(0), cfg)
+        S = 16
+        task_w = np.asarray(
+            jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+        streams = _make_streams(cfg, S, args.frames, seed=S)
+        reg = MetricsRegistry()
+        flight = FlightRecorder(4096, metrics=reg)
+        tracer = Tracer(metrics=reg)
+        _run_async(cfg, im, task_w, streams, metrics=reg, flight=flight,
+                   tracer=tracer)
+        n_ev = write_chrome_trace(flight.records(), args.trace_json)
+        print(f"table7/trace,{n_ev},events -> {args.trace_json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,220 @@
+"""Perf-trend regression gate over ``benchmarks/run.py --json`` artifacts.
+
+A single benchmark run can only say "this is how fast the commit is"; the
+trend gate says "and that is N% slower than the last five runs" — the
+check that catches a scheduling regression the correctness suites cannot
+see. It keeps a rolling history in ``BENCH_trend.json``:
+
+    {"format": "torr-bench-trend-v1",
+     "entries": [{"sha": ..., "timestamp": ..., "backend": ...,
+                  "metrics": {"table7/async_S16": 512.3, ...}}, ...]}
+
+and, per artifact ingested:
+
+1. extracts the *throughput* rows (the ``table6/``/``table7/`` windows/sec
+   rows — higher is better; string-valued rows like the table6 winner are
+   skipped) plus the run's provenance ``meta`` (stamped by
+   ``benchmarks/run.py``);
+2. compares each metric against the **rolling baseline**: the median of
+   the last ``--baseline-runs`` (default 5) history entries from the same
+   JAX backend (CPU and accelerator numbers must never gate each other);
+3. flags a regression when ``value < (1 - threshold) * baseline``
+   (default threshold 10%); ``--check`` turns flags into a non-zero exit
+   (the CI gate), otherwise they are warnings;
+4. appends the new entry and rewrites the history (unless ``--no-append``,
+   which CI uses for pure gate re-runs).
+
+Noise floor: windows/sec on shared CI runners jitters a few percent; the
+10% threshold + median-of-5 baseline means a single noisy run neither
+trips the gate nor poisons the baseline. Workflow details in
+``docs/observability.md``.
+
+Usage:
+    python -m benchmarks.run --json bench.json
+    python -m benchmarks.trend bench.json --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+from typing import Dict, List, Optional
+
+TREND_FORMAT = "torr-bench-trend-v1"
+DEFAULT_THRESHOLD = 0.10
+DEFAULT_BASELINE_RUNS = 5
+DEFAULT_TREND_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_trend.json")
+
+# suites whose numeric rows are windows/sec throughputs (higher = better);
+# other suites report latencies/areas/AP where "lower" or "different" is
+# not a regression in the same direction, so they are not gated here
+THROUGHPUT_PREFIXES = ("table6/", "table7/")
+
+
+def extract_metrics(doc: dict) -> Dict[str, float]:
+    """Gated metric values from one ``run.py --json`` document.
+
+    Accepts the suite-keyed shape (``{suite: {"rows": ...}}``) and the
+    single-suite shape some benchmarks write standalone
+    (``{"rows": [...], ...}``). Rows whose value is not a positive number
+    (e.g. the table6 winner rows, failed suites) are skipped.
+    """
+    metrics: Dict[str, float] = {}
+
+    def eat_rows(rows):
+        for row in rows or ():
+            if len(row) < 2 or not isinstance(row[0], str):
+                continue
+            name, value = row[0], row[1]
+            if not name.startswith(THROUGHPUT_PREFIXES):
+                continue
+            if name.endswith("/_suite_seconds"):
+                continue
+            # latency/jitter rows are lower-is-better: gating them with
+            # the throughput rule would flag *improvements*
+            if any(t in name for t in ("_ms", "latency", "jitter", "p9")):
+                continue
+            if isinstance(value, bool) or not isinstance(value, (int, float)):
+                continue
+            if value > 0:
+                metrics[name] = float(value)
+
+    if "rows" in doc and isinstance(doc.get("rows"), list):
+        eat_rows(doc["rows"])
+    for key, suite in doc.items():
+        if isinstance(suite, dict) and isinstance(suite.get("rows"), list):
+            eat_rows(suite["rows"])
+    return metrics
+
+
+def load_trend(path: str) -> dict:
+    """Load (or initialize) the rolling trend history."""
+    if not os.path.exists(path):
+        return {"format": TREND_FORMAT, "entries": []}
+    with open(path) as f:
+        trend = json.load(f)
+    if trend.get("format") != TREND_FORMAT:
+        raise ValueError(
+            f"{path}: unknown trend format {trend.get('format')!r} "
+            f"(expected {TREND_FORMAT!r})")
+    trend.setdefault("entries", [])
+    return trend
+
+
+def save_trend(trend: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(trend, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def make_entry(doc: dict, meta: Optional[dict] = None) -> dict:
+    """One history entry from an artifact document (+ optional meta
+    override; defaults to the document's own ``"meta"`` stamp)."""
+    meta = meta if meta is not None else doc.get("meta") or {}
+    return {
+        "sha": meta.get("sha", "unknown"),
+        "timestamp": meta.get("timestamp", ""),
+        "backend": meta.get("backend", doc.get("backend", "unknown")),
+        "metrics": extract_metrics(doc),
+    }
+
+
+def baseline_for(trend: dict, backend: str, metric: str,
+                 baseline_runs: int = DEFAULT_BASELINE_RUNS
+                 ) -> Optional[float]:
+    """Rolling baseline: median of the metric over the last
+    ``baseline_runs`` same-backend entries that carry it (None if the
+    history has no usable sample — a fresh metric never gates)."""
+    vals = [e["metrics"][metric] for e in trend["entries"]
+            if e.get("backend") == backend and metric in e.get("metrics", {})]
+    if not vals:
+        return None
+    return float(statistics.median(vals[-baseline_runs:]))
+
+
+def check_entry(trend: dict, entry: dict,
+                threshold: float = DEFAULT_THRESHOLD,
+                baseline_runs: int = DEFAULT_BASELINE_RUNS) -> List[dict]:
+    """Regressions of one new entry vs the rolling baseline.
+
+    Returns one dict per regressed metric: ``{"metric", "value",
+    "baseline", "drop"}`` where drop is the fractional loss.
+    """
+    regressions = []
+    for metric, value in sorted(entry["metrics"].items()):
+        base = baseline_for(trend, entry["backend"], metric, baseline_runs)
+        if base is None or base <= 0:
+            continue
+        if value < (1.0 - threshold) * base:
+            regressions.append({
+                "metric": metric, "value": value, "baseline": base,
+                "drop": 1.0 - value / base,
+            })
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="append benchmark artifacts to the perf-trend history "
+                    "and gate throughput regressions")
+    ap.add_argument("artifacts", nargs="+", metavar="JSON",
+                    help="benchmarks/run.py --json artifact(s) to ingest")
+    ap.add_argument("--trend", default=DEFAULT_TREND_PATH, metavar="PATH",
+                    help=f"trend history file (default {DEFAULT_TREND_PATH})")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on any regression (the CI gate); "
+                         "without it regressions are warnings")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="fractional drop vs the rolling baseline that "
+                         "counts as a regression (default 0.10)")
+    ap.add_argument("--baseline-runs", type=int,
+                    default=DEFAULT_BASELINE_RUNS,
+                    help="history entries the rolling median baseline "
+                         "spans (default 5)")
+    ap.add_argument("--no-append", action="store_true",
+                    help="gate only; do not append to / rewrite the history")
+    args = ap.parse_args(argv)
+
+    trend = load_trend(args.trend)
+    any_regressed = False
+    for path in args.artifacts:
+        with open(path) as f:
+            doc = json.load(f)
+        entry = make_entry(doc)
+        if not entry["metrics"]:
+            print(f"[trend] {path}: no gated throughput rows "
+                  f"(prefixes {THROUGHPUT_PREFIXES}); nothing to do")
+            continue
+        regressions = check_entry(trend, entry, args.threshold,
+                                  args.baseline_runs)
+        n_base = sum(1 for m in entry["metrics"]
+                     if baseline_for(trend, entry["backend"], m,
+                                     args.baseline_runs) is not None)
+        print(f"[trend] {path}: {len(entry['metrics'])} metrics "
+              f"({n_base} with a {entry['backend']} baseline), "
+              f"{len(regressions)} regression(s)")
+        for r in regressions:
+            any_regressed = True
+            print(f"[trend]   REGRESSION {r['metric']}: {r['value']:.1f} "
+                  f"vs baseline {r['baseline']:.1f} "
+                  f"(-{r['drop'] * 100.0:.1f}%, threshold "
+                  f"{args.threshold * 100.0:.0f}%)")
+        if not args.no_append:
+            trend["entries"].append(entry)
+    if not args.no_append:
+        save_trend(trend, args.trend)
+        print(f"[trend] history: {len(trend['entries'])} entries -> "
+              f"{args.trend}")
+    if any_regressed and args.check:
+        print("[trend] FAILED: throughput regressed past the gate",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -191,7 +191,7 @@ class Governor:
 
     def __init__(self, cfg: TorrConfig, pol: GovernorPolicy,
                  ladder: tuple[KnobPlan, ...] | None = None,
-                 metrics=None):
+                 metrics=None, slo=None):
         self.cfg = cfg
         self.pol = pol
         self.ladder = tuple(ladder) if ladder is not None else build_ladder(cfg)
@@ -227,6 +227,14 @@ class Governor:
         self.energy_ewma_mj = 0.0
         self.switches = 0
         self.windows_by_level = [0] * len(self.ladder)
+        # optional RT-SLO feedback (repro.obs.slo.SLOMonitor): per-update
+        # slack is a *projection*, so slack noise can hold the plan wide
+        # while real completions burn the miss budget. The burn-rate hook
+        # closes that gap: at WARN the recovery hold is frozen (no widening
+        # while the budget burns), at PAGE one extra degrade level is
+        # forced. slo=None (the default) leaves plan_level's output
+        # untouched — the plan_log bit-match tests pin that.
+        self._slo = slo
 
     @property
     def plan(self) -> KnobPlan:
@@ -239,6 +247,17 @@ class Governor:
             slack_s, backlog, step_s, self.level, self._recover,
             self.rel_cost, self.pol, self.energy_ewma_mj,
             rel_meas=self._rel_meas)
+        if self._slo is not None:
+            alert = self._slo.alert_level
+            if alert >= 1 and level < self.level:
+                # WARN: the miss budget is burning — hold position instead
+                # of widening on a projection
+                level, self._recover = self.level, 0
+            if alert >= 2:
+                # PAGE: force one extra degrade step (bounded by ladder)
+                level = min(max(level, self.level) + 1,
+                            len(self.ladder) - 1)
+                self._recover = 0
         if level != self.level:
             self.switches += 1
             self.level = level

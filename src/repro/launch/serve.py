@@ -70,26 +70,45 @@ via bypass/delta:
     PYTHONPATH=src python -m repro.launch.serve --torr-streams 8 \\
         --torr-frames 30 --torr-fused auto
 
-Observability (``--metrics-port`` / ``--metrics-json`` / ``--flight-jsonl``)
-============================================================================
+Observability (``--metrics-port/-json`` / ``--flight-jsonl`` / ``--trace-json``)
+================================================================================
 
-Any of the three flags arms the ``repro.obs`` observability tier on the
+Any of the four flags arms the ``repro.obs`` observability tier on the
 stream engine, the deadline tracker and the governor:
 
 * ``--metrics-port N`` serves Prometheus text on
   ``http://127.0.0.1:N/metrics`` (0 = ephemeral port, printed at startup)
-  for the duration of the run — windows/path-mix/deadline/plan/span
+  for the duration of the run — windows/path-mix/deadline/plan/span/SLO
   metric families, catalog in ``docs/observability.md``;
 * ``--metrics-json PATH`` dumps the final registry snapshot as JSON (the
   CI bench-smoke artifact shape);
 * ``--flight-jsonl PATH`` spills the flight recorder — one structured
   record per dispatched step (resolved lowering, latched plan, governor
-  slack/energy, telemetry digest) — replayable offline with
-  ``repro.obs.flight.replay`` into the exact governor plan timeline.
+  slack/energy, telemetry digest, per-window trace contexts) — replayable
+  offline with ``repro.obs.flight.replay`` into the exact governor plan
+  timeline;
+* ``--trace-json PATH`` additionally arms per-window causal tracing
+  (``repro.obs.trace``) and writes a Chrome trace-event JSON —
+  ``chrome://tracing`` / https://ui.perfetto.dev load it directly, with
+  per-window flow arrows across the async dispatcher→collector hand-off
+  and counter tracks for plan level / energy EWMA / queue depth
+  (trace-context model + Perfetto how-to in ``docs/observability.md``).
+
+With an ``--rt`` operating point armed alongside observability, window
+completions additionally feed the RT-SLO burn-rate engine
+(``repro.obs.slo``): fast/slow rolling-window burn rates over the
+deadline-miss budget, exported as ``torr_slo_*`` gauges and flight
+events — semantics and the threshold table in ``docs/observability.md``.
+
+Shutdown: SIGINT/SIGTERM unwind the serving loop cleanly — in-flight
+windows are cancelled and every armed artifact (metrics JSON, flight
+JSONL, Chrome trace) is still flushed before the process exits.
 """
 from __future__ import annotations
 
 import argparse
+import signal
+import threading
 import time
 
 import jax
@@ -102,12 +121,43 @@ from ..models import transformer as tf
 from ..serving import reranker as rr
 
 
+def _install_signal_handlers():
+    """Route SIGINT/SIGTERM into KeyboardInterrupt so the serving loop
+    unwinds through its cleanup path and flushes observability artifacts
+    (a docker stop / CI cancel must not lose the flight log). Returns the
+    previous handlers for restoration, or None off the main thread
+    (signal.signal is main-thread-only)."""
+    if threading.current_thread() is not threading.main_thread():
+        return None
+
+    def _raise(signum, _frame):
+        raise KeyboardInterrupt(f"signal {signum}")
+
+    previous = {}
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        try:
+            previous[sig] = signal.signal(sig, _raise)
+        except (ValueError, OSError):  # exotic embeddings may refuse
+            pass
+    return previous
+
+
+def _restore_signal_handlers(previous) -> None:
+    if previous:
+        for sig, handler in previous.items():
+            try:
+                signal.signal(sig, handler)
+            except (ValueError, OSError):
+                pass
+
+
 def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                      serial: bool = False, use_async: bool = False,
                      mesh_devices: int = 0, rt: str = "",
                      governor: bool = False, fused: str | None = None,
                      metrics_port: int | None = None, metrics_json: str = "",
-                     flight_jsonl: str = "", flight_capacity: int = 4096):
+                     flight_jsonl: str = "", flight_capacity: int = 4096,
+                     trace_json: str = ""):
     """Serve S synthetic TOOD streams through the batched window engine.
 
     ``use_async`` routes through the dispatch/collect
@@ -120,12 +170,15 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
     default, "off" = the jnp-oracle step; see ``repro.core.pipeline``).
 
     Any of ``metrics_port`` (HTTP exposition; 0 = ephemeral), their JSON
-    dump (``metrics_json``) or the flight-recorder spill (``flight_jsonl``)
-    arms the ``repro.obs`` tier across the engine/tracker/governor. Returns
-    None when observability is off; otherwise a dict with the final
-    ``registry``/``flight`` objects, the scraped ``metrics_text`` (when a
-    server ran) and the engine ``summary`` — what ``tests/test_obs.py``
-    asserts the acceptance criteria against.
+    dump (``metrics_json``), the flight-recorder spill (``flight_jsonl``)
+    or the Chrome-trace export (``trace_json``, which also arms per-window
+    causal tracing) arms the ``repro.obs`` tier across the
+    engine/tracker/governor; an armed ``rt`` additionally feeds the RT-SLO
+    burn-rate monitor. Returns None when observability is off; otherwise a
+    dict with the final ``registry``/``flight``/``tracer``/``slo`` objects,
+    the scraped ``metrics_text`` (when a server ran) and the engine
+    ``summary`` — what ``tests/test_obs.py`` asserts the acceptance
+    criteria against.
     """
     from ..core import hdc
     from ..data import tood_synth as ts
@@ -142,11 +195,14 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
     world = ts.make_world(seed=0, M=cfg.M, d=cfg.feat_dim)
     sys_ = tp.build_system(world, cfg, seed=0)
     n_slots = n_slots or n_streams
-    registry = flight = server = None
-    if metrics_port is not None or metrics_json or flight_jsonl:
+    registry = flight = server = tracer = slo = None
+    if metrics_port is not None or metrics_json or flight_jsonl or trace_json:
         from ..obs import FlightRecorder, MetricsRegistry, MetricsServer
         registry = MetricsRegistry()
-        flight = FlightRecorder(flight_capacity)
+        flight = FlightRecorder(flight_capacity, metrics=registry)
+        if trace_json:
+            from ..obs import Tracer
+            tracer = Tracer(metrics=registry)
         if metrics_port is not None:
             server = MetricsServer(registry, port=metrics_port)
             print(f"[serve/torr] metrics endpoint "
@@ -161,8 +217,13 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
             None if mesh_devices < 0 else mesh_devices)
         if governor and not rt:
             rt = "RT-60"    # the governor is slack-driven: needs a deadline
-        tracker = (DeadlineTracker(policy_for(rt), metrics=registry)
-                   if rt else None)
+        tracker = None
+        if rt:
+            if registry is not None:
+                from ..obs import SLOMonitor
+                slo = SLOMonitor(metrics=registry, flight=flight)
+            tracker = DeadlineTracker(policy_for(rt), metrics=registry,
+                                      slo=slo)
         gov = None
         if governor:
             from ..control import Governor, policy_from_env
@@ -170,10 +231,12 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
         eng = AsyncStreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
                                 fused=fused, mesh=mesh, tracker=tracker,
                                 governor=gov, paused=True,
-                                metrics=registry, flight=flight)
+                                metrics=registry, flight=flight,
+                                tracer=tracer)
     else:
         eng = StreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
-                           fused=fused, metrics=registry, flight=flight)
+                           fused=fused, metrics=registry, flight=flight,
+                           tracer=tracer)
 
     R = jnp.asarray(sys_.R)
     n_tasks = world.relevance.shape[0]
@@ -183,52 +246,72 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
         eng.start()
     t_total = 0.0
     shed = 0
-    # admit streams in waves of n_slots so slots < streams just queues work
-    for wave_start in range(0, n_streams, n_slots):
-        wave = range(wave_start, min(wave_start + n_slots, n_streams))
-        # synthesize + encode the wave's windows outside the timed region:
-        # the async engine must not get a head start on untimed work
-        windows = []   # (stream_id, q, valid, boxes), submission order
-        for s in wave:
-            task = s % n_tasks
-            eng.admit(f"stream{s}", sys_.task_w[task])
-            frames = ts.simulate_sequence(world, task, n_frames, seed=s,
-                                          n_max=cfg.N_max)
-            for f in frames:
-                q = hdc.pack_bits(hdc.sign_project(jnp.asarray(f.feats), R))
-                windows.append((f"stream{s}", np.asarray(q), f.valid, f.boxes))
-        futures = []   # (future, valid-mask) pairs, submission order
-        t0 = time.time()
-        for sid, q, fvalid, fboxes in windows:
-            fut = eng.submit(sid, q, fvalid, fboxes)
-            if use_async:
-                futures.append((fut, fvalid))
-            else:
-                valids.append(fvalid)
-        if use_async:
-            from ..serving.deadline import WindowShed
-            eng.flush()
-            t_total += time.time() - t0
-            for fut, vmask in futures:
-                try:
-                    _, tel = fut.result()
-                except WindowShed:
-                    shed += 1
-                    continue
-                paths.append(np.asarray(tel.path))
-                valids.append(vmask)
-        else:
-            results = eng.drain()
-            eng.sync()
-            t_total += time.time() - t0
+    interrupted = False
+    prev_handlers = _install_signal_handlers()
+    # printed *after* the handlers are armed: operators (and the shutdown
+    # test) can take this line as "an interrupt from here on flushes
+    # artifacts instead of killing the process"
+    print("[serve/torr] serving (SIGINT/SIGTERM flushes artifacts)",
+          flush=True)
+    try:
+        # admit streams in waves of n_slots: slots < streams just queues work
+        for wave_start in range(0, n_streams, n_slots):
+            wave = range(wave_start, min(wave_start + n_slots, n_streams))
+            # synthesize + encode the wave's windows outside the timed
+            # region: the async engine must not get a head start on
+            # untimed work
+            windows = []   # (stream_id, q, valid, boxes), submission order
             for s in wave:
-                for _, tel in results[f"stream{s}"]:
+                task = s % n_tasks
+                eng.admit(f"stream{s}", sys_.task_w[task])
+                frames = ts.simulate_sequence(world, task, n_frames, seed=s,
+                                              n_max=cfg.N_max)
+                for f in frames:
+                    q = hdc.pack_bits(
+                        hdc.sign_project(jnp.asarray(f.feats), R))
+                    windows.append(
+                        (f"stream{s}", np.asarray(q), f.valid, f.boxes))
+            futures = []   # (future, valid-mask) pairs, submission order
+            t0 = time.time()
+            for sid, q, fvalid, fboxes in windows:
+                fut = eng.submit(sid, q, fvalid, fboxes)
+                if use_async:
+                    futures.append((fut, fvalid))
+                else:
+                    valids.append(fvalid)
+            if use_async:
+                from ..serving.deadline import WindowShed
+                eng.flush()
+                t_total += time.time() - t0
+                for fut, vmask in futures:
+                    try:
+                        _, tel = fut.result()
+                    except WindowShed:
+                        shed += 1
+                        continue
                     paths.append(np.asarray(tel.path))
-        for s in wave:
-            eng.retire(f"stream{s}")
+                    valids.append(vmask)
+            else:
+                results = eng.drain()
+                eng.sync()
+                t_total += time.time() - t0
+                for s in wave:
+                    for _, tel in results[f"stream{s}"]:
+                        paths.append(np.asarray(tel.path))
+            for s in wave:
+                eng.retire(f"stream{s}")
+    except KeyboardInterrupt:
+        # SIGINT/SIGTERM (or a ^C): stop serving but keep going — the
+        # whole point of the handler is that the artifact flush below
+        # still runs on an interrupted run
+        interrupted = True
+        print("[serve/torr] interrupted — cancelling in-flight windows "
+              "and flushing observability artifacts")
+    finally:
+        _restore_signal_handlers(prev_handlers)
 
     if use_async:
-        eng.close()
+        eng.close(drain=not interrupted)
     mode = "async" if use_async else "sync"
     print(f"[serve/torr] streams={n_streams} slots={eng.n_slots} "
           f"frames/stream={n_frames} mode={mode}")
@@ -261,6 +344,13 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                   f"switches={gsum['plan_switches']} "
                   f"energy_ewma={gsum['energy_ewma_mj']:.1f} mJ "
                   f"windows_by_level={gsum['windows_by_level']}")
+        if slo is not None:
+            ssum = slo.summary()
+            print(f"[serve/torr] slo: alert={ssum['alert']} "
+                  f"burn(fast={ssum['burn_fast']:.2f}, "
+                  f"slow={ssum['burn_slow']:.2f}) "
+                  f"missed={ssum['missed']}/{ssum['completed']} "
+                  f"(objective {ssum['objective']:.2f})")
 
     if registry is None:
         return None
@@ -285,8 +375,14 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
         n_rec = flight.dump_jsonl(flight_jsonl)
         print(f"[serve/torr] flight recorder: {n_rec} step records -> "
               f"{flight_jsonl}")
-    return {"registry": registry, "flight": flight,
-            "metrics_text": metrics_text, "summary": eng.summary()}
+    if trace_json:
+        from ..obs import write_chrome_trace
+        n_ev = write_chrome_trace(flight.records(), trace_json)
+        print(f"[serve/torr] chrome trace: {n_ev} events "
+              f"({tracer.minted} windows traced) -> {trace_json}")
+    return {"registry": registry, "flight": flight, "tracer": tracer,
+            "slo": slo, "metrics_text": metrics_text,
+            "summary": eng.summary(), "interrupted": interrupted}
 
 
 def main() -> None:
@@ -344,6 +440,10 @@ def main() -> None:
                     help="spill the flight recorder (one structured record "
                          "per dispatched step) to JSONL; replay offline "
                          "with repro.obs.flight.replay")
+    ap.add_argument("--trace-json", default="", metavar="PATH",
+                    help="arm per-window causal tracing and write a Chrome "
+                         "trace-event JSON (open in chrome://tracing or "
+                         "ui.perfetto.dev); see docs/observability.md")
     args = ap.parse_args()
 
     if args.torr_streams > 0:
@@ -356,7 +456,8 @@ def main() -> None:
                          fused=args.torr_fused or None,
                          metrics_port=args.metrics_port,
                          metrics_json=args.metrics_json,
-                         flight_jsonl=args.flight_jsonl)
+                         flight_jsonl=args.flight_jsonl,
+                         trace_json=args.trace_json)
         return
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)

@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import threading
+import warnings
 from collections import deque
 from typing import Iterable, List, Optional, Sequence
 
@@ -66,7 +67,7 @@ class FlightRecorder:
     window; never on a per-proposal path).
     """
 
-    def __init__(self, capacity: int = 4096):
+    def __init__(self, capacity: int = 4096, metrics=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
@@ -74,6 +75,15 @@ class FlightRecorder:
         self._lock = threading.Lock()
         self._seq = 0
         self.dropped = 0   # records that fell off the ring's old end
+        # wraparound is a real observability gap — a spill after the ring
+        # wrapped silently misses the oldest steps — so surface it: a
+        # counter when a registry is wired, and a one-line warning on the
+        # *first* drop either way (warnings dedupe repeats by default)
+        self._c_dropped = None
+        if metrics is not None:
+            self._c_dropped = metrics.counter(
+                "torr_flight_dropped_total",
+                "Flight records that fell off the bounded ring's old end.")
 
     def record(self, **fields) -> dict:
         """Append one step record; returns the (mutable) dict so the
@@ -85,9 +95,19 @@ class FlightRecorder:
         with self._lock:
             rec["step"] = self._seq
             self._seq += 1
-            if len(self._ring) == self.capacity:
+            wrapped = len(self._ring) == self.capacity
+            if wrapped:
                 self.dropped += 1
+            first_drop = wrapped and self.dropped == 1
             self._ring.append(rec)
+        if wrapped and self._c_dropped is not None:
+            self._c_dropped.inc()
+        if first_drop:
+            warnings.warn(
+                f"FlightRecorder ring wrapped at capacity={self.capacity}: "
+                f"oldest step records are being dropped (a later dump_jsonl "
+                f"spill will miss them); size the capacity to the run or "
+                f"spill periodically", RuntimeWarning, stacklevel=2)
         return rec
 
     def __len__(self) -> int:

@@ -38,7 +38,7 @@ from __future__ import annotations
 import math
 import re
 import threading
-from typing import Dict, Iterable, Mapping, Sequence, Tuple
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple
 
 _NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 _LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
@@ -305,6 +305,62 @@ class MetricsRegistry:
         """Live family table (read-only use; exposition iterates this)."""
         with self._lock:
             return dict(self._metrics)
+
+
+def quantile(series: Mapping, q: float) -> float:
+    """Estimate quantile ``q`` from one histogram *snapshot series*.
+
+    ``series`` is one entry of ``snapshot()[name]["series"]`` — the dict
+    carrying ``bucket_edges`` (finite upper bounds), ``buckets``
+    (per-bucket counts, one extra for +Inf) and ``count``. The estimate
+    interpolates linearly inside the bucket the quantile rank lands in,
+    assuming uniform density between edges (the first bucket's lower
+    bound is 0 — latency-shaped; Prometheus' ``histogram_quantile`` makes
+    the same assumptions, so the two agree). A rank landing in the
+    overflow bucket clamps to the last finite edge — the estimator never
+    invents mass beyond what the buckets bound, also matching Prometheus.
+
+    Raises ``ValueError`` outside ``0 <= q <= 1``; returns ``nan`` for an
+    empty series. ``benchmarks/trend.py`` and ``table7_async`` derive
+    p99s from snapshots through this instead of re-keeping raw sample
+    lists.
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    edges = series["bucket_edges"]
+    counts = series["buckets"]
+    total = series.get("count", sum(counts))
+    if total <= 0:
+        return float("nan")
+    rank = q * total
+    cum = 0.0
+    lo = 0.0
+    for edge, n in zip(edges, counts):
+        if cum + n >= rank:
+            if n <= 0 or rank <= cum:
+                return float(lo)
+            return float(lo + (edge - lo) * (rank - cum) / n)
+        cum += n
+        lo = edge
+    return float(edges[-1])   # rank fell in the +Inf bucket: clamp
+
+
+def snapshot_quantile(snapshot: Mapping, name: str, q: float,
+                      labels: Optional[Mapping] = None) -> float:
+    """:func:`quantile` over a full ``MetricsRegistry.snapshot()`` dict.
+
+    Picks the ``name`` family's series matching ``labels`` (``None`` =
+    the single/unlabeled series); returns ``nan`` when the family or
+    series is absent, so artifact post-processing never crashes on a
+    partially-instrumented run.
+    """
+    fam = snapshot.get(name)
+    if fam is None or fam.get("type") != "histogram":
+        return float("nan")
+    for series in fam["series"]:
+        if labels is None or series["labels"] == dict(labels):
+            return quantile(series, q)
+    return float("nan")
 
 
 _default_registry = MetricsRegistry()

@@ -18,6 +18,13 @@ Cost model: one ``perf_counter`` pair + one histogram observe per enter/
 exit. With no registry wired (``registry=None``) entering a span is a
 no-op stack push, so instrumented code paths stay below the 3% overhead
 gate even when observability is off.
+
+Causal linking: every span exit additionally offers its interval to
+:func:`repro.obs.trace.record_span` — when a :class:`~repro.obs.trace.
+trace_scope` is active on the thread, the span is stamped onto the
+in-flight windows' :class:`~repro.obs.trace.TraceContext`\\ s, turning the
+histogram's anonymous samples into causally-linked per-window events.
+With no scope active the hook is one thread-local ``getattr``.
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ import time
 from typing import Optional
 
 from .metrics import LATENCY_BUCKETS_S, MetricsRegistry
+from .trace import record_span
 
 SPAN_METRIC = "torr_span_duration_seconds"
 
@@ -108,6 +116,7 @@ class span:
             stack.pop()
         if self._hist is not None:
             self._hist.observe(dur)
+        record_span(self.name, self._t0, dur)
         return False
 
     def __call__(self, fn):
@@ -125,4 +134,5 @@ class span:
                     stack.pop()
                 if self._hist is not None:
                     self._hist.observe(dur)
+                record_span(self.name, t0, dur)
         return wrapper

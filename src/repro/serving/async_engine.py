@@ -83,6 +83,9 @@ import numpy as np
 
 from ..core.item_memory import ItemMemory
 from ..core.types import TorrConfig
+from ..obs.bridge import telemetry_digest
+from ..obs.spans import NULL_SPAN, span
+from ..obs.trace import now_us, trace_scope
 from ..perf.cycle_model import telemetry_cost
 from ..runtime import sharding as shd
 from .deadline import Decision, DeadlineTracker, WindowShed
@@ -98,6 +101,8 @@ assert (GATE_ADMIT, GATE_ESCALATE, GATE_SHED) == (
 
 class AsyncStreamEngine(StreamEngine):
     """Dispatch/collect split over the slot scheduler; futures per window."""
+
+    _ENGINE = "async"
 
     def __init__(
         self,
@@ -116,6 +121,7 @@ class AsyncStreamEngine(StreamEngine):
         paused: bool = False,
         metrics=None,
         flight=None,
+        tracer=None,
     ):
         if governor is not None and tracker is None:
             raise ValueError(
@@ -130,11 +136,11 @@ class AsyncStreamEngine(StreamEngine):
                          n_slots=shd.pad_stream_slots(n_slots, self._mesh),
                          jit=jit, serial=serial, fused=fused,
                          bucket_cap=bucket_cap, decide=decide,
-                         metrics=metrics, flight=flight)
+                         metrics=metrics, flight=flight, tracer=tracer)
         # async-specific phase spans (the sync step() spans are unused
         # here); each runs on exactly one daemon thread
-        from ..obs.spans import NULL_SPAN, span
-        sp = (lambda name: span(name, metrics)) if metrics is not None \
+        sp = (lambda name: span(name, metrics)) \
+            if metrics is not None or tracer is not None \
             else (lambda name: NULL_SPAN)
         self._sp_decide = sp("host_decide")
         self._sp_device = sp("device_step")
@@ -197,8 +203,7 @@ class AsyncStreamEngine(StreamEngine):
             if not drain:
                 for dq in self._pending:
                     while dq:
-                        *_, fut, _arrival = dq.popleft()
-                        cancelled.append(fut)
+                        cancelled.append(dq.popleft()[3])
                         self._inflight -= 1
                 self._settled.notify_all()
             self._stop = True
@@ -257,8 +262,10 @@ class AsyncStreamEngine(StreamEngine):
         self._check_error()
         fut: Future = Future()
         arrival = self._tracker.now() if self._tracker else time.monotonic()
+        ctx = (self._tracer.mint(stream_id, self._ENGINE)
+               if self._tracer is not None else None)
         window = (np.asarray(q_packed, np.uint32), np.asarray(valid, bool),
-                  np.asarray(boxes, np.float32), fut, arrival)
+                  np.asarray(boxes, np.float32), fut, arrival, ctx)
         with self._work:
             self._pending[self._slot_of[stream_id]].append(window)
             self._inflight += 1
@@ -294,6 +301,11 @@ class AsyncStreamEngine(StreamEngine):
 
     # -- dispatcher ---------------------------------------------------------
 
+    @staticmethod
+    def _ctx_of(extra):
+        # submit's trailing payload here is (future, arrival, ctx)
+        return extra[2]
+
     def _has_backlog(self) -> bool:
         return any(self._pending[s] for s in self._slot_of.values())
 
@@ -314,7 +326,7 @@ class AsyncStreamEngine(StreamEngine):
         now = self._tracker.now()
 
         def gate(stream_id, backlog, extra):
-            fut, arrival = extra
+            fut, arrival, ctx = extra
             decision = self._tracker.decide_head(arrival, backlog, now)
             if decision == Decision.SHED:
                 self.stats.shed += 1
@@ -324,6 +336,11 @@ class AsyncStreamEngine(StreamEngine):
                 deferred.append((fut, WindowShed(
                     stream_id, self._tracker.lateness(arrival, now))))
                 self._settled.notify_all()
+                if ctx is not None:
+                    # shed windows never reach a step: retire the context
+                    # here so the tracer ring still accounts for them
+                    ctx.decision = "shed"
+                    self._tracer.complete(ctx)
             return decision
 
         return self._assemble(gate)
@@ -348,7 +365,7 @@ class AsyncStreamEngine(StreamEngine):
         if self._governor is None or not served:
             return
         now = self._tracker.now()
-        wait = max(now - arrival for _sid, _slot, (_f, arrival) in served)
+        wait = max(now - arrival for _sid, _slot, (_f, arrival, _c) in served)
         slack = self._tracker.policy.budget_s - wait
         backlog = max(len(self._pending[slot]) for _sid, slot, _x in served)
         self._plan = self._governor.update(
@@ -397,24 +414,38 @@ class AsyncStreamEngine(StreamEngine):
         try:
             while True:
                 deferred = []
+                step_ctxs = None
                 with self._work:
                     while not self._stop and not self._has_backlog():
                         self._work.wait()
                     if self._stop:
                         break
-                    with self._sp_decide:
-                        q, v, b, qd, served = \
-                            self._assemble_admitted(deferred)
-                        if served:
-                            self._govern(served)
+                    # traced steps open a trace_scope over the decide +
+                    # dispatch spans: _assemble populates step_ctxs with
+                    # the admitted windows' contexts, and each span stamps
+                    # its interval onto them at exit (dispatcher thread)
+                    scope = NULL_SPAN
+                    if self._tracer is not None:
+                        step_ctxs = self._step_ctxs = []
+                        scope = trace_scope(step_ctxs)
+                    try:
+                        with scope:
+                            with self._sp_decide:
+                                q, v, b, qd, served = \
+                                    self._assemble_admitted(deferred)
+                                if served:
+                                    self._govern(served)
+                            if served:
+                                # dispatch under the lock: JAX async
+                                # dispatch returns immediately, and
+                                # admit/retire must not interleave a state
+                                # rewrite between assemble and state advance
+                                with self._sp_dispatch:
+                                    t0 = time.monotonic()
+                                    out, tel = self._dispatch(q, v, b, qd)
+                    finally:
+                        self._step_ctxs = None
                     if served:
-                        # dispatch under the lock: JAX async dispatch
-                        # returns immediately, and admit/retire must not
-                        # interleave a state rewrite between assemble and
-                        # state advance
-                        with self._sp_dispatch:
-                            t0 = time.monotonic()
-                            out, tel = self._dispatch(q, v, b, qd)
                         self.stats.steps += 1
                         self.stats.windows += len(served)
                         self.stats.pad_slots += self.n_slots - len(served)
@@ -434,13 +465,16 @@ class AsyncStreamEngine(StreamEngine):
                                 plan=self._plan, gov=gov,
                                 full_ewma=(self._full_ewma if self._auto
                                            else None))
+                            if rec is not None and self._tracer is not None:
+                                rec["ts_us"] = now_us()
+                                rec["queue_depth"] = int(qd.max())
                 for fut, exc in deferred:   # callbacks run lock-free here
                     fut.set_exception(exc)
                 if not served:      # whole backlog shed this pass
                     continue
                 # bounded queue = pipeline depth: block here (not holding
                 # the lock) instead of racing ahead of the device
-                self._collect_q.put((served, out, tel, t0, rec))
+                self._collect_q.put((served, out, tel, t0, rec, step_ctxs))
                 if self._error is not None:
                     # the collector died while we were blocked in put():
                     # _fail's drain ran before our item landed, so nobody
@@ -464,17 +498,29 @@ class AsyncStreamEngine(StreamEngine):
                 item = self._collect_q.get()
                 if item is None:
                     break
-                served, out, tel, t0, rec = item
-                with self._sp_device:
-                    jax.block_until_ready(out.scores)
-                dur = time.monotonic() - t0
-                with self._sp_drain:
-                    self._drain_item(served, out, tel, rec, dur)
+                served, out, tel, t0, rec, ctxs = item
+                # traced steps re-open their context scope on the collector
+                # thread: the device/drain spans stamp onto the same
+                # windows the dispatcher's spans did — the cross-thread
+                # half of the per-window timeline
+                scope = trace_scope(ctxs) if ctxs else NULL_SPAN
+                with scope:
+                    with self._sp_device:
+                        jax.block_until_ready(out.scores)
+                    dur = time.monotonic() - t0
+                    with self._sp_drain:
+                        digest = self._drain_item(served, out, tel, rec, dur)
+                # finish *after* the drain span exits so collector_drain is
+                # part of the serialized per-window event list
+                if ctxs:
+                    self._trace_finish(ctxs, rec, digest)
         except BaseException as e:  # noqa: BLE001
             self._fail(e)
 
-    def _drain_item(self, served, out, tel, rec, dur) -> None:
-        """Move one retired step to host and resolve its windows."""
+    def _drain_item(self, served, out, tel, rec, dur):
+        """Move one retired step to host and resolve its windows; returns
+        the step's telemetry digest (for trace completion), or None when
+        nothing downstream needs it."""
         # one device->host move per step, then cheap numpy slicing
         out_h = jax.tree_util.tree_map(np.asarray, out)
         tel_h = jax.tree_util.tree_map(np.asarray, tel)
@@ -482,13 +528,16 @@ class AsyncStreamEngine(StreamEngine):
             # feed the load-aware dispatcher's path-mix EWMA from
             # the host-resident trace (never blocks the dispatcher)
             self._observe_path_mix(tel_h.path, tel_h.n_valid)
+        digest = None
         if self._obs is not None:
-            self._obs.observe_step(tel_h, rec, step_latency_s=dur)
+            digest = self._obs.observe_step(tel_h, rec, step_latency_s=dur)
+        elif self._tracer is not None:
+            digest = telemetry_digest(tel_h)
         if self._tracker is not None:
             self._tracker.observe_step(dur)
         now = (self._tracker.now() if self._tracker
                else time.monotonic())
-        for stream_id, slot, (fut, arrival) in served:
+        for stream_id, slot, (fut, arrival, _ctx) in served:
             tel_w = jax.tree_util.tree_map(lambda x: x[slot], tel_h)
             if self._governor is not None:
                 # close the energy loop: price the plan the window
@@ -520,6 +569,7 @@ class AsyncStreamEngine(StreamEngine):
         with self._settled:
             self._inflight -= len(served)
             self._settled.notify_all()
+        return digest
 
     def _drain_collect(self) -> list:
         """Empty the collect queue; returns the drained windows' futures."""
@@ -536,7 +586,7 @@ class AsyncStreamEngine(StreamEngine):
                 self.stats.telemetry_dropped += len(item[0])
                 if self._obs is not None:
                     self._obs.drop(len(item[0]))
-                futs.extend(f for _sid, _slot, (f, _arr) in item[0])
+                futs.extend(f for _sid, _slot, (f, _arr, _c) in item[0])
 
     def _drain_collect_failing(self, exc: BaseException) -> None:
         for fut in self._drain_collect():
@@ -554,8 +604,7 @@ class AsyncStreamEngine(StreamEngine):
             self._stop = True
             for dq in self._pending:
                 while dq:
-                    *_, fut, _arrival = dq.popleft()
-                    doomed.append(fut)
+                    doomed.append(dq.popleft()[3])
             # if the collector died, drain its queue so a back-pressured
             # dispatcher blocked in put() unblocks; the dispatcher re-drains
             # after its put in case its in-flight item landed post-drain

@@ -103,12 +103,17 @@ class DeadlineTracker:
     window; its collector feeds :meth:`observe_step` (device step latency,
     EMA'd into the projection) and :meth:`complete` (per-window latency,
     miss accounting). ``clock`` is injectable for deterministic tests.
+
+    ``slo`` optionally wires a :class:`repro.obs.slo.SLOMonitor`: every
+    completion feeds it one hit/miss event, which is what turns the raw
+    miss counter into multi-window burn rates against the RT miss budget.
     """
 
     def __init__(self, policy: DeadlinePolicy, clock=time.monotonic,
-                 metrics=None):
+                 metrics=None, slo=None):
         self.policy = policy
         self._clock = clock
+        self._slo = slo
         self._step_s = policy.step_init_s
         self._lat: list[float] = []
         self.completed = 0
@@ -173,12 +178,15 @@ class DeadlineTracker:
         lat = now - arrival_s
         self._lat.append(lat)
         self.completed += 1
-        if lat > self.policy.budget_s:
+        missed = lat > self.policy.budget_s
+        if missed:
             self.missed += 1
             if self._m_dec is not None:
                 self._m_miss.inc()
         if self._m_dec is not None:
             self._m_lat.observe(lat)
+        if self._slo is not None:
+            self._slo.observe(missed)
         return lat
 
     # -- telemetry ----------------------------------------------------------

@@ -47,8 +47,9 @@ from ..core import pipeline, policy, query_cache
 from ..core.item_memory import ItemMemory
 from ..core.pipeline import TorrState, WindowOutput
 from ..core.types import PATH_FULL, StreamBatch, TorrConfig, WindowTelemetry
-from ..obs.bridge import StepObserver
+from ..obs.bridge import StepObserver, telemetry_digest
 from ..obs.spans import NULL_SPAN, span
+from ..obs.trace import now_us, trace_scope
 
 # admission-gate verdicts for `_assemble(gate=...)`; values align with
 # `repro.serving.deadline.Decision` (an IntEnum) so trackers can be used
@@ -89,6 +90,9 @@ class EngineStats:
 class StreamEngine:
     """Fixed-slot scheduler feeding ``torr_multi_stream_step``."""
 
+    # engine family stamped into minted trace contexts (async overrides)
+    _ENGINE = "sync"
+
     def __init__(
         self,
         cfg: TorrConfig,
@@ -101,6 +105,7 @@ class StreamEngine:
         decide: str | None = None,
         metrics=None,
         flight=None,
+        tracer=None,
     ):
         self.cfg = cfg
         self.im = im
@@ -152,7 +157,16 @@ class StreamEngine:
         # blocks the host on an in-flight device step either.
         self._obs = (StepObserver(metrics, flight)
                      if metrics is not None or flight is not None else None)
-        sp = (lambda name: span(name, metrics)) if metrics is not None \
+        # causal tracing (repro.obs.trace): when a Tracer is armed, submit()
+        # mints a per-window TraceContext that rides the pending tuple, the
+        # step's spans stamp phase intervals onto it via trace_scope, and
+        # the telemetry fold completes it with the resolved plan/lowering.
+        # Spans are armed for a tracer even without a registry (span(name,
+        # None) records no histogram but still feeds record_span).
+        self._tracer = tracer
+        self._step_ctxs = None  # live ctx list while a traced step assembles
+        sp = (lambda name: span(name, metrics)) \
+            if metrics is not None or tracer is not None \
             else (lambda name: NULL_SPAN)
         self._sp_assemble = sp("host_assemble")
         self._sp_dispatch = sp("dispatch_enqueue")
@@ -208,13 +222,25 @@ class StreamEngine:
     # -- window flow --------------------------------------------------------
 
     def submit(self, stream_id, q_packed, valid, boxes) -> None:
-        """Enqueue one window (packed queries, validity, boxes) for a stream."""
+        """Enqueue one window (packed queries, validity, boxes) for a stream.
+
+        With a tracer armed, a per-window :class:`TraceContext` is minted
+        here (this is the window's admission timestamp) and rides the
+        pending tuple as the trailing payload."""
         slot = self._slot_of[stream_id]
-        self._pending[slot].append(
-            (np.asarray(q_packed, np.uint32),
-             np.asarray(valid, bool),
-             np.asarray(boxes, np.float32))
-        )
+        window = (np.asarray(q_packed, np.uint32),
+                  np.asarray(valid, bool),
+                  np.asarray(boxes, np.float32))
+        if self._tracer is not None:
+            window += (self._tracer.mint(stream_id, self._ENGINE),)
+        self._pending[slot].append(window)
+
+    @staticmethod
+    def _ctx_of(extra):
+        """The window's TraceContext from ``submit``'s trailing payload
+        (None when untraced). The async engine overrides — its payload
+        carries (future, arrival, ctx)."""
+        return extra[0] if extra else None
 
     def backlog(self, stream_id) -> int:
         return len(self._pending[self._slot_of[stream_id]])
@@ -260,6 +286,14 @@ class StreamEngine:
                 if decision == GATE_ESCALATE:
                     qd[slot] = max(qd[slot], self.cfg.q_hi)
                 served.append((stream_id, slot, extra))
+                ctx = self._ctx_of(extra)
+                if ctx is not None:
+                    ctx.slot = slot
+                    if ctx.decision is None:  # a gate may have stamped it
+                        ctx.decision = ("admit", "escalate",
+                                        "shed")[decision]
+                    if self._step_ctxs is not None:
+                        self._step_ctxs.append(ctx)
                 break
         return q, v, b, qd, served
 
@@ -288,16 +322,46 @@ class StreamEngine:
             f = float(np.sum(np.asarray(path) == PATH_FULL)) / nv
             self._full_ewma += AUTO_ALPHA * (f - self._full_ewma)
 
-    def _fold_one(self, tel, rec) -> None:
+    def _fold_one(self, tel, rec, ctxs=None) -> None:
         """Move one backlogged step's telemetry to host and consume it:
-        the auto dispatcher's path-mix EWMA, and the observer's metric
-        digest + flight-record completion (``rec`` is the step's open
-        flight record, or None)."""
+        the auto dispatcher's path-mix EWMA, the observer's metric digest +
+        flight-record completion (``rec`` is the step's open flight record,
+        or None), and — when the step was traced — completing its windows'
+        contexts with the resolved plan/lowering off the same digest."""
         tel_h = jax.tree_util.tree_map(np.asarray, tel)
         if self._auto:
             self._observe_path_mix(tel_h.path, tel_h.n_valid)
+        digest = None
         if self._obs is not None:
-            self._obs.observe_step(tel_h, rec)
+            digest = self._obs.observe_step(tel_h, rec)
+        if ctxs:
+            if digest is None:
+                digest = telemetry_digest(tel_h)
+            self._trace_finish(ctxs, rec, digest)
+
+    def _trace_finish(self, ctxs, rec, digest) -> None:
+        """Complete one step's trace contexts: stamp the resolved plan and
+        lowering (read back off the step's telemetry digest — the same
+        source the flight replay bit-matches against the governor's plan
+        log), link the flight step index, embed the per-window dicts into
+        the flight record under ``"trace"``, and retire the contexts into
+        the tracer ring."""
+        plan = {"banks": digest.get("banks"), "planes": digest.get("planes")}
+        if rec is not None:
+            gov = rec.get("governor") or {}
+            if gov.get("level") is not None:
+                plan["level"] = gov["level"]
+        lowering = {"fused": digest.get("fused"),
+                    "decide": digest.get("decide"),
+                    "bucket_tier": digest.get("bucket_tier")}
+        step = rec.get("step") if rec is not None else None
+        for ctx in ctxs:
+            ctx.step = step
+            ctx.plan = plan
+            ctx.lowering = lowering
+            self._tracer.complete(ctx)
+        if rec is not None:
+            rec["trace"] = [ctx.to_dict() for ctx in ctxs]
 
     def _fold_telemetry(self) -> None:
         """Sync-engine EWMA feed: fold telemetry of steps that are at
@@ -365,27 +429,41 @@ class StreamEngine:
 
     def step(self) -> Dict[object, tuple[WindowOutput, WindowTelemetry]]:
         """Drain one window per busy slot through the batched step."""
-        with self._sp_assemble:
-            q, v, b, qd, served = self._assemble()
-        if not served:  # idle engine: skip the no-op device step
-            return {}
-
-        with self._sp_dispatch:
-            out, tel = self._dispatch(q, v, b, qd)
+        # traced steps open a trace_scope around the assemble/dispatch
+        # spans: _assemble populates step_ctxs as it admits windows, and
+        # each span stamps its interval onto them at exit
+        step_ctxs = None
+        scope = NULL_SPAN
+        if self._tracer is not None:
+            step_ctxs = self._step_ctxs = []
+            scope = trace_scope(step_ctxs)
+        try:
+            with scope:
+                with self._sp_assemble:
+                    q, v, b, qd, served = self._assemble()
+                if not served:  # idle engine: skip the no-op device step
+                    return {}
+                with self._sp_dispatch:
+                    out, tel = self._dispatch(q, v, b, qd)
+        finally:
+            self._step_ctxs = None
         self.stats.steps += 1
         self.stats.windows += len(served)
         self.stats.pad_slots += self.n_slots - len(served)
 
-        if self._auto or self._obs is not None:
+        if self._auto or self._obs is not None or self._tracer is not None:
             rec = None
             if self._obs is not None:
                 rec = self._obs.on_dispatch(
                     len(served), self.n_slots - len(served),
                     requested=self._last_resolved, plan=self._plan,
                     full_ewma=self._full_ewma if self._auto else None)
+                if rec is not None and self._tracer is not None:
+                    rec["ts_us"] = now_us()
+                    rec["queue_depth"] = int(qd.max())
             # deferred fold: this step's telemetry enters the backlog, and
             # only entries at least one dispatch old are consumed now
-            self._tel_backlog.append((tel, rec))
+            self._tel_backlog.append((tel, rec, step_ctxs))
             with self._sp_observe:
                 self._fold_telemetry()
 

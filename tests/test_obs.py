@@ -208,6 +208,32 @@ def test_flight_ring_wraparound():
     assert fl.records()[-1]["telemetry"] == {"n_windows": 1}
 
 
+def test_flight_drop_counter_and_first_drop_warning():
+    """Wraparound is surfaced: a counter when a registry is wired, and a
+    one-line RuntimeWarning on the *first* dropped record only."""
+    import warnings
+    reg = MetricsRegistry()
+    fl = FlightRecorder(capacity=2, metrics=reg)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for i in range(5):
+            fl.record(n_windows=i)
+    assert fl.dropped == 3
+    snap = reg.snapshot()
+    assert snap["torr_flight_dropped_total"]["series"][0]["value"] == 3
+    warns = [w for w in caught if issubclass(w.category, RuntimeWarning)]
+    assert len(warns) == 1                             # first drop only
+    assert "capacity=2" in str(warns[0].message)
+    # no registry: the Python-side counter still counts, silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        fl2 = FlightRecorder(capacity=1)
+        fl2.record()
+        with pytest.raises(RuntimeWarning):
+            fl2.record()
+    assert fl2.dropped == 1
+
+
 def test_flight_jsonl_round_trip(tmp_path):
     fl = FlightRecorder()
     fl.record(n_windows=np.int32(3), plan={"banks": np.int64(8), "planes": 4},

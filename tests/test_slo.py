@@ -1,0 +1,194 @@
+"""RT-SLO burn-rate engine: pure math, multi-window alerting, wiring.
+
+Pins the ISSUE 8 SLO semantics: burn-rate arithmetic, the multi-window
+trip condition (both fast AND slow over threshold, never before
+``min_events``), level transitions exported as flight events exactly
+once per change, the gauge families, the deadline-tracker feed (with an
+injected clock so misses are deterministic), and the optional governor
+hook — WARN freezes plan recovery, PAGE forces one extra degrade level,
+and ``slo=None`` leaves the plan timeline untouched.
+"""
+import pytest
+
+from repro.control import Governor, GovernorPolicy
+from repro.obs.flight import FlightRecorder
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import (ALERT_NAMES, SLO_OK, SLO_PAGE, SLO_WARN,
+                           SLOMonitor, SLOPolicy, burn_rate)
+from repro.serving.deadline import DeadlinePolicy, DeadlineTracker
+
+from test_multistream import CFG
+
+
+# --- pure math ---------------------------------------------------------------
+
+
+def test_burn_rate_math():
+    assert burn_rate(0, 100, 0.01) == 0.0
+    assert burn_rate(1, 100, 0.01) == pytest.approx(1.0)   # exactly on budget
+    assert burn_rate(10, 100, 0.01) == pytest.approx(10.0)
+    assert burn_rate(5, 0, 0.01) == 0.0                    # empty window
+    assert burn_rate(64, 64, 0.01) == pytest.approx(100.0)
+
+
+def test_policy_validation():
+    assert SLOPolicy().miss_budget == pytest.approx(0.01)
+    with pytest.raises(ValueError):
+        SLOPolicy(objective=1.0)
+    with pytest.raises(ValueError):
+        SLOPolicy(fast_window=8, slow_window=4)
+    with pytest.raises(ValueError):
+        SLOPolicy(warn_burn=20.0, page_burn=14.4)
+
+
+# --- multi-window alerting ---------------------------------------------------
+
+# small windows so tests drive full transitions in a few events
+POL = SLOPolicy(objective=0.9, fast_window=4, slow_window=8,
+                warn_burn=2.0, page_burn=5.0, min_events=4)
+
+
+def test_min_events_guard():
+    mon = SLOMonitor(POL)
+    # 3 straight misses: fast burn is 10x budget but the window is too
+    # young to alert
+    for _ in range(3):
+        assert mon.observe(True) == SLO_OK
+    assert mon.observe(True) == SLO_PAGE                   # 4th: armed
+
+
+def test_alert_requires_both_windows():
+    # slow window still diluted by hits: fast alone must not page
+    mon = SLOMonitor(SLOPolicy(objective=0.9, fast_window=2, slow_window=8,
+                               warn_burn=2.0, page_burn=5.0, min_events=2))
+    for _ in range(6):
+        mon.observe(False)
+    mon.observe(True)
+    level = mon.observe(True)
+    # fast burn = 10, slow burn = 2/8/0.1 = 2.5 -> WARN but not PAGE
+    assert level == SLO_WARN
+    fast, slow = mon.burn_rates()
+    assert fast == pytest.approx(10.0)
+    assert slow == pytest.approx(2.5)
+
+
+def test_levels_recover_as_windows_drain():
+    mon = SLOMonitor(POL)
+    for _ in range(8):
+        mon.observe(True)
+    assert mon.alert_level == SLO_PAGE
+    for _ in range(8):
+        mon.observe(False)
+    assert mon.alert_level == SLO_OK
+    s = mon.summary()
+    assert s["completed"] == 16 and s["missed"] == 8
+    assert s["alert"] == "ok" and s["alert_level"] == SLO_OK
+    assert s["burn_fast"] == 0.0
+    assert ALERT_NAMES[SLO_WARN] == "warn"
+
+
+def test_flight_events_on_transitions_only():
+    fl = FlightRecorder()
+    hooks = []
+    mon = SLOMonitor(POL, flight=fl,
+                     on_alert=lambda lvl, st: hooks.append((lvl, st)))
+    for _ in range(8):
+        mon.observe(True)       # OK -> PAGE, once
+    for _ in range(8):
+        mon.observe(False)      # drains through WARN, then back to OK
+    recs = [r for r in fl.records() if "slo" in r]
+    assert [r["slo"]["level"] for r in recs] == [SLO_PAGE, SLO_WARN, SLO_OK]
+    assert recs[0]["slo"]["alert"] == "page"
+    assert recs[0]["slo"]["burn_fast"] >= POL.page_burn
+    assert mon.alert_transitions == 3
+    assert [lvl for lvl, _ in hooks] == [SLO_PAGE, SLO_WARN, SLO_OK]
+
+
+def test_gauges_exported():
+    reg = MetricsRegistry()
+    mon = SLOMonitor(POL, metrics=reg)
+    for _ in range(8):
+        mon.observe(True)
+    snap = reg.snapshot()
+    burns = {s["labels"]["window"]: s["value"]
+             for s in snap["torr_slo_burn_rate"]["series"]}
+    assert burns["fast"] == pytest.approx(10.0)
+    assert burns["slow"] == pytest.approx(10.0)
+    assert snap["torr_slo_alert"]["series"][0]["value"] == SLO_PAGE
+    assert snap["torr_slo_miss_budget_remaining"]["series"][0]["value"] == 0.0
+
+
+# --- deadline tracker feed ---------------------------------------------------
+
+
+def test_deadline_tracker_feeds_slo():
+    clock = iter(range(1000)).__next__
+    mon = SLOMonitor(SLOPolicy(objective=0.5, fast_window=4, slow_window=8,
+                               warn_burn=1.5, page_burn=1.8, min_events=2))
+    tracker = DeadlineTracker(
+        DeadlinePolicy(budget_s=0.5, escalate_margin_s=0.2),
+        clock=lambda: 0.0, slo=mon)
+    # four completions: latency 0.1 (hit), then 1.0 (miss) x3 via `now`
+    tracker.complete(arrival_s=-0.1, now=0.0)
+    for _ in range(3):
+        tracker.complete(arrival_s=-1.0, now=0.0)
+    assert mon.completed == 4 and mon.missed == 3
+    # miss rate 3/4 over budget 0.5 -> burn 1.5 on both windows: WARN
+    assert mon.alert_level == SLO_WARN
+    assert tracker.missed == 3
+    del clock
+
+
+# --- governor hook -----------------------------------------------------------
+
+
+class _FakeSLO:
+    def __init__(self):
+        self.alert_level = SLO_OK
+
+
+def test_governor_warn_freezes_recovery():
+    slo = _FakeSLO()
+    gov = Governor(CFG, GovernorPolicy(budget_s=1.0, recover_hold=1),
+                   slo=slo)
+    # degrade via PAGE pressure, then hold a WARN: slack alone would
+    # recover (generous slack, tiny step EMA), the alert must veto it
+    slo.alert_level = SLO_PAGE
+    gov.update(slack_s=10.0, step_s=1e-4, backlog=0)
+    gov.update(slack_s=10.0, step_s=1e-4, backlog=0)
+    lvl = gov.level
+    assert lvl >= 1
+    slo.alert_level = SLO_WARN
+    for _ in range(4):
+        gov.update(slack_s=10.0, step_s=1e-4, backlog=0)
+        assert gov.level == lvl               # WARN: no widening
+    slo.alert_level = SLO_OK
+    for _ in range(4):
+        gov.update(slack_s=10.0, step_s=1e-4, backlog=0)
+    assert gov.level < lvl                    # alert cleared: recovery resumes
+
+
+def test_governor_page_forces_extra_degrade():
+    slo = _FakeSLO()
+    gov = Governor(CFG, GovernorPolicy(budget_s=1.0, recover_hold=1),
+                   slo=slo)
+    slo.alert_level = SLO_PAGE
+    # from the full plan with generous slack (slack alone keeps level 0),
+    # a page forces one degrade step per update, bounded by the ladder
+    gov.update(slack_s=10.0, step_s=1e-4, backlog=0)
+    assert gov.level == min(1, len(gov.ladder) - 1)
+    for _ in range(len(gov.ladder) + 2):
+        gov.update(slack_s=10.0, step_s=1e-4, backlog=0)
+    assert gov.level == len(gov.ladder) - 1
+
+
+def test_governor_without_slo_unchanged():
+    """slo=None runs produce the identical plan timeline (bit-match pin)."""
+    drives = [(0.01, 0.5, 4), (10.0, 1e-4, 0), (10.0, 1e-4, 0),
+              (0.05, 0.2, 2), (10.0, 1e-4, 0)]
+    gov_a = Governor(CFG, GovernorPolicy(budget_s=1.0))
+    gov_b = Governor(CFG, GovernorPolicy(budget_s=1.0), slo=_FakeSLO())
+    for slack, step, backlog in drives:
+        gov_a.update(slack_s=slack, step_s=step, backlog=backlog)
+        gov_b.update(slack_s=slack, step_s=step, backlog=backlog)
+    assert gov_a.plan_log == gov_b.plan_log

@@ -1,0 +1,373 @@
+"""Per-window causal tracing: Tracer/scopes, engine threading, export.
+
+Covers the ISSUE 8 tentpole: Tracer mint/complete semantics (monotone
+seq, bounded ring, drop accounting), trace_scope + span stamping
+(including the populate-during-scope pattern the dispatcher relies on
+and the empty-scope early-out the overhead gate relies on), a traced
+sync run (every window completed with resolved plan/lowering), the
+acceptance-criteria async run — every admitted window appears exactly
+once in the flight records' ``"trace"`` entries with monotone phase
+ordering, dispatcher→collector flow pairing in the Chrome export, and
+per-window plans bit-consistent with ``Governor.plan_log`` — plus the
+Chrome trace-event schema itself and ``serve.py`` graceful shutdown
+(SIGTERM flushes the artifacts).
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.control import Governor, GovernorPolicy
+from repro.core.item_memory import random_item_memory
+from repro.core.types import FUSED_NAMES
+from repro.obs.flight import FlightRecorder
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.spans import span
+from repro.obs.trace import (TRACE_SCHEMA_VERSION, TraceContext, Tracer,
+                             now_us, record_span, trace_scope)
+from repro.obs.trace_export import chrome_trace, write_chrome_trace
+from repro.serving.async_engine import AsyncStreamEngine
+from repro.serving.deadline import DeadlinePolicy, DeadlineTracker
+from repro.serving.stream_engine import StreamEngine
+
+from test_multistream import CFG, _make_inputs
+
+FLUSH_S = 120
+
+
+# --- tracer unit semantics ---------------------------------------------------
+
+
+def test_tracer_mints_monotone_seq_and_counts():
+    reg = MetricsRegistry()
+    tr = Tracer(metrics=reg)
+    ctxs = [tr.mint(f"s{i}", "sync") for i in range(5)]
+    assert [c.seq for c in ctxs] == [0, 1, 2, 3, 4]
+    assert tr.minted == 5
+    assert all(c.arrival_us >= 0 for c in ctxs)
+    snap = reg.snapshot()
+    assert snap["torr_trace_windows_total"]["series"][0]["value"] == 5
+    assert snap["torr_trace_windows_dropped_total"]["series"][0]["value"] == 0
+
+
+def test_tracer_ring_bounded_and_drop_counted():
+    reg = MetricsRegistry()
+    tr = Tracer(capacity=3, metrics=reg)
+    for i in range(7):
+        tr.complete(tr.mint(f"s{i}", "sync"))
+    done = tr.completed()
+    assert [c.seq for c in done] == [4, 5, 6]           # oldest fell off
+    assert tr.dropped == 4
+    assert all(c.complete_us is not None for c in done)
+    snap = reg.snapshot()
+    assert snap["torr_trace_windows_dropped_total"]["series"][0]["value"] == 4
+    with pytest.raises(ValueError):
+        Tracer(capacity=0)
+
+
+def test_trace_context_to_dict_shape():
+    ctx = TraceContext(7, "cam0", "async", arrival_us=123.0)
+    ctx.slot = 2
+    ctx.stamp("host_decide", 200.0, 50.0, thread="torr-dispatch")
+    d = ctx.to_dict()
+    assert d["v"] == TRACE_SCHEMA_VERSION
+    assert d["seq"] == 7 and d["stream"] == "cam0" and d["slot"] == 2
+    assert d["engine"] == "async" and d["arrival_us"] == 123.0
+    assert d["events"] == [{"phase": "host_decide", "ts_us": 200.0,
+                            "dur_us": 50.0, "thread": "torr-dispatch"}]
+    json.dumps(d)                                        # JSONL-ready
+
+
+# --- scope + span stamping ---------------------------------------------------
+
+
+def test_record_span_noop_without_scope():
+    record_span("anything", time.perf_counter(), 1e-3)   # must not raise
+
+
+def test_trace_scope_stamps_spans_including_late_population():
+    tr = Tracer()
+    early = tr.mint("a", "sync")
+    ctxs = [early]
+    with trace_scope(ctxs):
+        with span("host_decide", None):
+            # the dispatcher pattern: a window admitted *inside* the span
+            # still gets stamped, because stamping happens at span exit
+            late = tr.mint("b", "sync")
+            ctxs.append(late)
+        with span("dispatch_enqueue", None):
+            pass
+    for ctx in (early, late):
+        assert [e["phase"] for e in ctx.events] == ["host_decide",
+                                                    "dispatch_enqueue"]
+        assert all(e["dur_us"] >= 0 for e in ctx.events)
+        assert all(e["thread"] for e in ctx.events)
+    # outside the scope spans stamp nothing
+    with span("host_observe", None):
+        pass
+    assert len(early.events) == 2
+
+
+def test_trace_scope_nesting_innermost_wins():
+    inner_ctx, outer_ctx = TraceContext(0, "i", "sync", 0.0), \
+        TraceContext(1, "o", "sync", 0.0)
+    with trace_scope([outer_ctx]):
+        with trace_scope([inner_ctx]):
+            with span("work", None):
+                pass
+        with span("after", None):
+            pass
+    assert [e["phase"] for e in inner_ctx.events] == ["work"]
+    assert [e["phase"] for e in outer_ctx.events] == ["after"]
+
+
+# --- sync engine integration -------------------------------------------------
+
+
+def _submit_all(eng, task_w, steps, S):
+    futs = []
+    for s in range(S):
+        eng.admit(f"cam{s}", task_w[s])
+        for q, valid, boxes, _qd in steps:
+            futs.append(eng.submit(f"cam{s}", q[s], valid[s], boxes[s]))
+    return futs
+
+
+def test_sync_engine_traced_run_completes_every_window():
+    cfg = CFG
+    S, T = 3, 4
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+    steps = _make_inputs(cfg, S, T)
+    reg, fl, tr = MetricsRegistry(), FlightRecorder(), Tracer()
+    eng = StreamEngine(cfg, im, n_slots=S, metrics=reg, flight=fl, tracer=tr)
+    for s in range(S):
+        eng.admit(f"cam{s}", task_w[s])
+        for q, valid, boxes, _qd in steps:
+            eng.submit(f"cam{s}", q[s], valid[s], boxes[s])
+    eng.drain()
+    eng.flush_telemetry()   # fold the double-buffered newest step too
+    assert tr.minted == S * T
+    done = tr.completed()
+    assert len(done) == S * T
+    for ctx in done:
+        assert ctx.engine == "sync" and ctx.decision == "admit"
+        assert ctx.plan is not None and ctx.lowering is not None
+        assert ctx.lowering["fused"] is not None
+        assert ctx.complete_us is not None
+        assert {e["phase"] for e in ctx.events} >= {"host_assemble",
+                                                    "dispatch_enqueue"}
+    recs = fl.records()
+    assert len(recs) == T
+    for rec in recs:
+        assert len(rec["trace"]) == S
+        assert rec["ts_us"] >= 0 and rec["queue_depth"] >= 0
+        for w in rec["trace"]:
+            assert w["step"] == rec["step"]
+    # sync engine is single-threaded: no cross-thread flow arrows
+    doc = chrome_trace(recs)
+    assert not [e for e in doc["traceEvents"] if e["ph"] in ("s", "f")]
+
+
+def test_untraced_flight_records_carry_no_trace_keys():
+    """Without a tracer the record dicts keep their PR 7 shape exactly
+    (the JSONL round-trip golden test depends on it)."""
+    cfg = CFG
+    S, T = 2, 2
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+    steps = _make_inputs(cfg, S, T)
+    fl = FlightRecorder()
+    eng = StreamEngine(cfg, im, n_slots=S, flight=fl)
+    for s in range(S):
+        eng.admit(f"cam{s}", task_w[s])
+        for q, valid, boxes, _qd in steps:
+            eng.submit(f"cam{s}", q[s], valid[s], boxes[s])
+    eng.drain()
+    for rec in fl.records():
+        assert "trace" not in rec
+        assert "ts_us" not in rec and "queue_depth" not in rec
+
+
+# --- async acceptance: exactly-once, ordering, flows, plan consistency -------
+
+
+@pytest.fixture(scope="module")
+def traced_governed_run():
+    """One governed 3-stream async run with tracer + flight + governor."""
+    cfg = CFG
+    S, T = 3, 6
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (S, cfg.M)))
+    steps = _make_inputs(cfg, S, T)
+    reg = MetricsRegistry()
+    fl, tr = FlightRecorder(), Tracer(metrics=reg)
+    tracker = DeadlineTracker(
+        DeadlinePolicy(budget_s=30.0, escalate_margin_s=15.0,
+                       allow_shed=False), metrics=reg)
+    gov = Governor(cfg, GovernorPolicy(budget_s=30.0), metrics=reg)
+    with AsyncStreamEngine(cfg, im, n_slots=S, tracker=tracker, governor=gov,
+                           paused=True, metrics=reg, flight=fl,
+                           tracer=tr) as eng:
+        futs = _submit_all(eng, task_w, steps, S)
+        eng.start()
+        eng.flush(timeout=FLUSH_S)
+        for f in futs:
+            f.result(timeout=10)
+    return {"S": S, "T": T, "recs": fl.records(), "gov": gov, "tracer": tr}
+
+
+def test_async_every_window_traced_exactly_once(traced_governed_run):
+    r = traced_governed_run
+    seqs = [w["seq"] for rec in r["recs"] for w in rec["trace"]]
+    assert len(seqs) == len(set(seqs)) == r["S"] * r["T"]
+    assert sorted(seqs) == list(range(r["S"] * r["T"]))
+    assert r["tracer"].minted == r["S"] * r["T"]
+    assert len(r["tracer"].completed()) == r["S"] * r["T"]
+
+
+def test_async_phase_ordering_and_threads(traced_governed_run):
+    order = {"host_decide": 0, "dispatch_enqueue": 1, "device_step": 2,
+             "collector_drain": 3}
+    for rec in traced_governed_run["recs"]:
+        for w in rec["trace"]:
+            evs = w["events"]
+            phases = [e["phase"] for e in evs]
+            assert {"host_decide", "dispatch_enqueue", "device_step",
+                    "collector_drain"} <= set(phases)
+            # monotone: both by timestamp and by causal phase rank
+            ranked = sorted(evs, key=lambda e: e["ts_us"])
+            assert [order[e["phase"]] for e in ranked] == \
+                sorted(order[p] for p in phases)
+            by_phase = {e["phase"]: e["thread"] for e in evs}
+            assert by_phase["host_decide"] == "torr-dispatch"
+            assert by_phase["dispatch_enqueue"] == "torr-dispatch"
+            assert by_phase["device_step"] == "torr-collect"
+            assert by_phase["collector_drain"] == "torr-collect"
+            assert w["arrival_us"] <= ranked[0]["ts_us"]
+            assert w["complete_us"] >= ranked[-1]["ts_us"]
+
+
+def test_async_plans_bit_consistent_with_governor_log(traced_governed_run):
+    r = traced_governed_run
+    gov, recs = r["gov"], r["recs"]
+    assert len(recs) == len(gov.plan_log)
+    for rec in recs:
+        banks, planes, level = gov.plan_log[rec["step"]]
+        for w in rec["trace"]:
+            assert (w["plan"]["banks"], w["plan"]["planes"],
+                    w["plan"]["level"]) == (banks, planes, level)
+            assert w["decision"] in ("admit", "escalate")
+            assert w["lowering"]["fused"] in FUSED_NAMES
+
+
+def test_chrome_trace_schema_and_flow_pairing(traced_governed_run):
+    recs = traced_governed_run["recs"]
+    doc = chrome_trace(recs)
+    evs = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    for e in evs:
+        assert e["ph"] in ("M", "X", "s", "f", "C")
+        assert "pid" in e
+        if e["ph"] in ("X", "s", "f"):
+            assert e["ts"] >= 0 and "tid" in e
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+    # thread metadata names both engine threads + the virtual queue row
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"admission_queue", "torr-dispatch", "torr-collect"} <= names
+    # flow arrows: one s/f pair per window, dispatcher tid != collector tid
+    starts = {e["id"]: e for e in evs if e["ph"] == "s"}
+    finishes = {e["id"]: e for e in evs if e["ph"] == "f"}
+    n_windows = sum(len(rec["trace"]) for rec in recs)
+    assert len(starts) == len(finishes) == n_windows
+    assert set(starts) == set(finishes)
+    for seq, s_ev in starts.items():
+        f_ev = finishes[seq]
+        assert f_ev["bp"] == "e"
+        assert s_ev["tid"] != f_ev["tid"]
+        assert s_ev["ts"] <= f_ev["ts"]
+    # every traced window phase appears exactly once as an X event
+    x_names = [e["name"] for e in evs if e["ph"] == "X"]
+    for phase in ("host_decide", "dispatch_enqueue", "device_step",
+                  "collector_drain", "queue_wait"):
+        assert x_names.count(phase) == n_windows
+    # counters present for the governed run
+    assert {e["name"] for e in evs if e["ph"] == "C"} == {
+        "plan_level", "energy_ewma_mj", "queue_depth"}
+
+
+def test_write_chrome_trace_round_trips(traced_governed_run, tmp_path):
+    recs = traced_governed_run["recs"]
+    path = tmp_path / "trace.json"
+    n = write_chrome_trace(recs, str(path))
+    doc = json.loads(path.read_text())
+    assert len(doc["traceEvents"]) == n > 0
+    assert doc["otherData"]["producer"] == "repro.obs.trace_export"
+
+
+def test_chrome_trace_tolerates_untraced_and_slo_records():
+    recs = [
+        {"v": 1, "step": 0, "n_windows": 2},             # untraced step
+        {"v": 1, "step": 1, "slo": {"level": 1}},        # SLO event record
+        {"v": 1, "step": 2, "ts_us": 10.0, "queue_depth": 3,
+         "governor": {"level": 1, "energy_ewma_mj": 2.5}, "trace": []},
+    ]
+    doc = chrome_trace(recs)
+    counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert {c["name"] for c in counters} == {"plan_level", "energy_ewma_mj",
+                                             "queue_depth"}
+    assert all(c["ts"] == 10.0 for c in counters)
+
+
+# --- serve.py graceful shutdown ---------------------------------------------
+
+
+@pytest.mark.slow
+def test_serve_sigterm_flushes_artifacts(tmp_path):
+    """SIGTERM mid-serve exits 0 and still writes every artifact."""
+    m_json = tmp_path / "m.json"
+    f_jsonl = tmp_path / "f.jsonl"
+    t_json = tmp_path / "t.json"
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    # enough streams x frames that the run cannot finish before the signal
+    proc = subprocess.Popen(
+        [sys.executable, "-u", "-m", "repro.launch.serve",
+         "--torr-streams", "4", "--torr-frames", "600", "--async",
+         "--governor", "--torr-fused", "auto",
+         "--metrics-json", str(m_json), "--flight-jsonl", str(f_jsonl),
+         "--trace-json", str(t_json)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    try:
+        deadline = time.time() + 300
+        armed = False
+        for line in proc.stdout:
+            if "SIGINT/SIGTERM flushes artifacts" in line:
+                armed = True
+                break
+            assert time.time() < deadline, "serve never armed its handlers"
+        assert armed, "serve exited before arming signal handlers"
+        proc.send_signal(signal.SIGTERM)
+        out = proc.stdout.read()
+        rc = proc.wait(timeout=120)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+    assert rc == 0, f"serve exited {rc}:\n{out}"
+    assert "interrupted" in out
+    doc = json.loads(m_json.read_text())
+    assert doc["format"] == "torr-metrics-snapshot-v1"
+    assert f_jsonl.exists()
+    trace_doc = json.loads(t_json.read_text())
+    assert "traceEvents" in trace_doc

@@ -1,0 +1,224 @@
+"""Perf-trend gate + histogram quantile estimator.
+
+Pins the ISSUE 8 regression-gate semantics end to end: the quantile
+estimator `benchmarks/trend.py` and `table7_async` derive p99s through
+(linear interpolation, overflow-bucket clamp, nan on empty/missing), the
+artifact metric extraction (suite-keyed and single-suite shapes, string
+rows and latency rows excluded), the rolling median baseline with
+backend isolation, and the CLI's `--check` exit codes on an injected
+15% regression fixture vs a healthy run.
+"""
+import json
+import math
+
+import pytest
+
+from repro.obs.metrics import MetricsRegistry, quantile, snapshot_quantile
+
+import benchmarks.trend as trend
+
+
+# --- quantile estimator ------------------------------------------------------
+
+
+def _series(edges, observations):
+    reg = MetricsRegistry()
+    h = reg.histogram("torr_test_seconds", "h", buckets=tuple(edges))
+    for v in observations:
+        h.observe(v)
+    return reg.snapshot()["torr_test_seconds"]["series"][0]
+
+
+def test_quantile_uniform_interpolation():
+    # 10 samples spread over one [0, 10] bucket: rank interpolates linearly
+    s = _series([10.0], [5.0] * 10)
+    assert quantile(s, 0.5) == pytest.approx(5.0)
+    assert quantile(s, 0.0) == pytest.approx(0.0)
+    assert quantile(s, 1.0) == pytest.approx(10.0)
+
+
+def test_quantile_known_distribution():
+    # 2 in (0,1], 6 in (1,2], 2 in (2,4]
+    s = _series([1.0, 2.0, 4.0], [0.5, 0.5, 1.5] * 1 + [1.5] * 5 + [3.0] * 2)
+    # p50: rank 5 of 10 -> 3 into the 6-count (1,2] bucket
+    assert quantile(s, 0.5) == pytest.approx(1.5)
+    assert quantile(s, 0.2) == pytest.approx(1.0)        # exactly at an edge
+    assert quantile(s, 0.9) == pytest.approx(3.0)
+
+
+def test_quantile_overflow_bucket_clamps():
+    # half the mass beyond the last finite edge: p99 must clamp to the
+    # edge, never invent values past what the buckets bound
+    s = _series([1.0], [0.5] * 5 + [100.0] * 5)
+    assert quantile(s, 0.99) == pytest.approx(1.0)
+    assert quantile(s, 0.4) == pytest.approx(0.8)
+
+
+def test_quantile_edge_cases():
+    s = _series([1.0, 2.0], [])
+    assert math.isnan(quantile(s, 0.5))                  # empty series
+    with pytest.raises(ValueError):
+        quantile(s, 1.5)
+    with pytest.raises(ValueError):
+        quantile(s, -0.1)
+
+
+def test_snapshot_quantile_lookup():
+    reg = MetricsRegistry()
+    h = reg.histogram("torr_lat_seconds", "h", buckets=(1.0, 2.0),
+                      labelnames=["k"])
+    h.labels(k="a").observe(0.5)
+    h.labels(k="a").observe(1.5)
+    snap = reg.snapshot()
+    assert snapshot_quantile(snap, "torr_lat_seconds", 0.5,
+                             labels={"k": "a"}) == pytest.approx(1.0)
+    # missing family / series / non-histogram -> nan, never a crash
+    assert math.isnan(snapshot_quantile(snap, "torr_absent", 0.5))
+    assert math.isnan(snapshot_quantile(snap, "torr_lat_seconds", 0.5,
+                                        labels={"k": "zzz"}))
+    reg.counter("torr_c_total").inc()
+    assert math.isnan(snapshot_quantile(reg.snapshot(), "torr_c_total", 0.5))
+
+
+# --- metric extraction -------------------------------------------------------
+
+
+def _doc(wps=500.0, backend="cpu"):
+    return {
+        "meta": {"sha": "abc123", "timestamp": "2026-08-08T00:00:00+00:00",
+                 "backend": backend},
+        "table7": {"rows": [
+            ["table7/async_S16", wps, "speedup=2.0"],
+            ["table7/sync_S16", wps / 2.0, "speedup=1.00"],
+            ["table7/step_latency_p99_ms", 12.0, "async dispatch->ready"],
+            ["table7/_suite_seconds", 33.0, "ok"],
+        ], "seconds": 33.0, "ok": True},
+        "table6": {"rows": [
+            ["table6/vmap_S4", 100.0, "x"],
+            ["table6/winner_S4", "vmap", "x"],               # string row
+        ], "seconds": 5.0, "ok": True},
+        "table5": {"rows": [["table5/ap", 0.9, "x"]]},        # not gated
+    }
+
+
+def test_extract_metrics_suite_keyed():
+    m = trend.extract_metrics(_doc())
+    assert m == {"table7/async_S16": 500.0, "table7/sync_S16": 250.0,
+                 "table6/vmap_S4": 100.0}
+
+
+def test_extract_metrics_single_suite_shape():
+    m = trend.extract_metrics({"rows": [["table7/async_S4", 42.0, ""]]})
+    assert m == {"table7/async_S4": 42.0}
+
+
+def test_extract_metrics_excludes_latency_and_garbage():
+    m = trend.extract_metrics({"rows": [
+        ["table7/p99_jitter_ms", 3.0, ""],      # lower-is-better: excluded
+        ["table7/step_latency_p50_ms", 1.0, ""],
+        ["table7/flag", True, ""],              # bool is not a throughput
+        ["table7/zero", 0.0, ""],               # non-positive
+        [123, 4.0, ""],                         # non-str name
+        ["table7/ok", 7.5, ""],
+    ]})
+    assert m == {"table7/ok": 7.5}
+
+
+# --- rolling baseline + gate -------------------------------------------------
+
+
+def _history(values, backend="cpu"):
+    return {"format": trend.TREND_FORMAT, "entries": [
+        {"sha": f"s{i}", "timestamp": "", "backend": backend,
+         "metrics": {"table7/async_S16": v}} for i, v in enumerate(values)]}
+
+
+def test_baseline_is_rolling_median_per_backend():
+    hist = _history([100.0, 900.0, 600.0, 580.0, 620.0, 640.0, 610.0])
+    # last 5: [600, 580, 620, 640, 610] -> median 610; the old outliers
+    # (100, 900) have rolled out of the window
+    assert trend.baseline_for(hist, "cpu", "table7/async_S16") == 610.0
+    assert trend.baseline_for(hist, "tpu", "table7/async_S16") is None
+    assert trend.baseline_for(hist, "cpu", "table7/other") is None
+    assert trend.baseline_for(hist, "cpu", "table7/async_S16",
+                              baseline_runs=2) == 625.0
+
+
+def test_check_entry_flags_15pct_regression_not_6pct():
+    hist = _history([600.0] * 5)
+    bad = trend.make_entry(_doc(wps=510.0))              # -15%
+    (reg,) = trend.check_entry(hist, bad)
+    assert reg["metric"] == "table7/async_S16"
+    assert reg["drop"] == pytest.approx(0.15)
+    ok = trend.make_entry(_doc(wps=564.0))               # -6%
+    assert trend.check_entry(hist, ok) == []
+    # fresh metrics (sync_S16, vmap_S4 have no history) never gate
+    assert {r["metric"] for r in trend.check_entry(hist, bad)} == {
+        "table7/async_S16"}
+
+
+def test_check_entry_backend_isolation():
+    hist = _history([600.0] * 5, backend="tpu")
+    # same 15% drop, but the history is all-TPU and the run is CPU
+    assert trend.check_entry(hist, trend.make_entry(_doc(wps=510.0))) == []
+
+
+def test_make_entry_provenance():
+    e = trend.make_entry(_doc())
+    assert e["sha"] == "abc123" and e["backend"] == "cpu"
+    assert e["metrics"]["table7/async_S16"] == 500.0
+    assert trend.make_entry({"rows": []}) == {
+        "sha": "unknown", "timestamp": "", "backend": "unknown",
+        "metrics": {}}
+
+
+# --- CLI ---------------------------------------------------------------------
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_cli_check_fails_on_injected_regression(tmp_path, capsys):
+    tpath = str(tmp_path / "trend.json")
+    trend.save_trend(_history([600.0] * 5), tpath)
+    bad = _write(tmp_path, "bad.json", _doc(wps=510.0))  # injected -15%
+    assert trend.main([bad, "--trend", tpath, "--check",
+                       "--no-append"]) == 1
+    out = capsys.readouterr()
+    assert "REGRESSION table7/async_S16" in out.out
+    assert "FAILED" in out.err
+    # --no-append left the history untouched
+    assert len(trend.load_trend(tpath)["entries"]) == 5
+
+
+def test_cli_check_passes_and_appends_healthy_run(tmp_path):
+    tpath = str(tmp_path / "trend.json")
+    trend.save_trend(_history([600.0] * 5), tpath)
+    good = _write(tmp_path, "good.json", _doc(wps=590.0))
+    assert trend.main([good, "--trend", tpath, "--check"]) == 0
+    hist = trend.load_trend(tpath)
+    assert len(hist["entries"]) == 6
+    assert hist["entries"][-1]["sha"] == "abc123"
+    # without --check a regression warns but exits 0
+    bad = _write(tmp_path, "bad.json", _doc(wps=400.0))
+    assert trend.main([bad, "--trend", tpath]) == 0
+
+
+def test_cli_fresh_history_and_unknown_format(tmp_path):
+    tpath = str(tmp_path / "new_trend.json")
+    art = _write(tmp_path, "a.json", _doc())
+    assert trend.main([art, "--trend", tpath, "--check"]) == 0
+    assert len(trend.load_trend(tpath)["entries"]) == 1
+    (tmp_path / "corrupt.json").write_text('{"format": "nope"}')
+    with pytest.raises(ValueError, match="unknown trend format"):
+        trend.load_trend(str(tmp_path / "corrupt.json"))
+
+
+def test_repo_trend_file_is_valid():
+    """The committed BENCH_trend.json must always load."""
+    hist = trend.load_trend(trend.DEFAULT_TREND_PATH)
+    assert hist["format"] == trend.TREND_FORMAT
+    assert isinstance(hist["entries"], list)
