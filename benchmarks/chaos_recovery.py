@@ -1,0 +1,157 @@
+"""Chaos recovery: supervised-restart cost under injected worker death.
+
+Drives the async serving engine through the deterministic chaos harness
+(``repro.runtime.fault.FaultPlan``) under the fault-tolerant front-end
+(``repro.serving.supervisor.ServeSupervisor`` + an in-memory
+``StateStore`` at ``snapshot_every=1``) and measures what a worker death
+actually costs:
+
+  * ``chaos/bare_wps``        — the unsupervised async engine, fault-free
+    (the table7 configuration at S = 16): the throughput baseline.
+  * ``chaos/supervised_wps``  — the same traffic behind the supervisor,
+    fault-free: journalling + write-through snapshot overhead.
+  * ``chaos/<kind>_fault_wps``       — one injected dispatcher/collector
+    death mid-run: end-to-end throughput including crash detection,
+    engine rebuild, warm-start re-admission and replay.
+  * ``chaos/<kind>_recovery_ms``     — crash-detection → replay-complete
+    latency, read off the supervisor's ``engine_recovered`` flight event.
+  * ``chaos/<kind>_replayed``        — in-flight windows re-dispatched.
+
+Every run serves the identical frame sequences and the benchmark asserts
+the recovered outputs are *bit-identical* to the bare fault-free engine's
+(the ISSUE 9 acceptance property) — the rows are pure recovery-cost
+measurements, never a correctness trade. Registered as the ``chaos``
+suite in ``benchmarks.run``; the registry snapshot (restart/replay/state-
+store counters) rides the JSON artifact via ``metrics_snapshot``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.item_memory import random_item_memory
+from repro.runtime.fault import FaultPlan
+from repro.serving.async_engine import AsyncStreamEngine
+from repro.serving.state_store import InMemoryStateStore
+from repro.serving.supervisor import ServeSupervisor
+
+from .table6_multistream import CFG, _make_streams
+
+_METRICS = None
+
+
+def metrics_snapshot():
+    """Metrics of the last run(), for the JSON artifact."""
+    return _METRICS.snapshot() if _METRICS is not None else None
+
+
+def _reference(cfg, im, task_w, streams):
+    """Fault-free unsupervised outputs: (wps, {(sid, seq): best})."""
+    eng = AsyncStreamEngine(cfg, im, n_slots=len(streams), paused=True)
+    futs = []
+    for s, frames in enumerate(streams):
+        eng.admit(s, task_w[s])
+        for t, (q, valid, boxes) in enumerate(frames):
+            futs.append((s, t, eng.submit(s, q, valid, boxes)))
+    eng.warmup()
+    t0 = time.perf_counter()
+    eng.start()
+    eng.flush()
+    dt = time.perf_counter() - t0
+    wps = eng.stats.windows / dt
+    eng.close()
+    outs = {(s, t): np.asarray(f.result(timeout=1)[0].best)
+            for s, t, f in futs}
+    return wps, outs
+
+
+def _supervised(cfg, im, task_w, streams, fault=None, metrics=None,
+                flight=None):
+    """One supervised drive; returns (wps, outputs, summary, flight recs)."""
+    store = InMemoryStateStore(metrics=metrics)
+
+    def make_engine():
+        return AsyncStreamEngine(cfg, im, n_slots=len(streams), paused=True,
+                                 store=store, snapshot_every=1,
+                                 fault_plan=fault)
+
+    sup = ServeSupervisor(make_engine, store, metrics=metrics, flight=flight)
+    futs = []
+    for s, frames in enumerate(streams):
+        sup.admit(s, task_w[s])
+        for t, (q, valid, boxes) in enumerate(frames):
+            futs.append((s, t, sup.submit(s, q, valid, boxes)))
+    sup.engine.warmup()
+    t0 = time.perf_counter()
+    sup.engine.start()
+    sup.flush()
+    dt = time.perf_counter() - t0
+    n_win = sum(len(frames) for frames in streams)
+    outs = {(s, t): np.asarray(f.result(timeout=1)[0].best)
+            for s, t, f in futs}
+    sup.close(drain=False)
+    return n_win / dt, outs, sup.summary()
+
+
+def _assert_identical(got: dict, want: dict, label: str) -> None:
+    assert set(got) == set(want), (label, "lost windows",
+                                   sorted(set(want) - set(got))[:5])
+    for k in want:
+        assert np.array_equal(got[k], want[k]), (label, k)
+
+
+def run(n_streams: int = 16, n_frames: int = 12) -> list[tuple]:
+    global _METRICS
+    from repro.obs import FlightRecorder, MetricsRegistry
+    from repro.serving.supervisor import recovery_events
+
+    cfg = CFG
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(
+        jax.random.uniform(jax.random.PRNGKey(1), (n_streams, cfg.M)))
+    streams = _make_streams(cfg, n_streams, n_frames, seed=n_streams)
+    _METRICS = reg = MetricsRegistry()
+
+    wps_bare, ref = _reference(cfg, im, task_w, streams)
+    wps_sup, outs, _ = _supervised(cfg, im, task_w, streams, metrics=reg)
+    _assert_identical(outs, ref, "supervised-faultfree")
+    rows = [
+        ("chaos/bare_wps", round(wps_bare, 1),
+         "windows/sec, unsupervised async, fault-free"),
+        ("chaos/supervised_wps", round(wps_sup, 1),
+         f"journal+snapshots(cadence=1); "
+         f"ratio_vs_bare={wps_sup / wps_bare:.2f}"),
+    ]
+    for kind in ("dispatcher", "collector"):
+        flight = FlightRecorder(1024)
+        fault = FaultPlan(at_step=4, thread=kind)
+        wps, outs, summary = _supervised(cfg, im, task_w, streams,
+                                         fault=fault, metrics=reg,
+                                         flight=flight)
+        _assert_identical(outs, ref, f"{kind}-fault")
+        assert summary["restarts"] == 1, summary
+        recs = [r for r in recovery_events(flight.records())
+                if r["event"] == "engine_recovered"]
+        rec_ms = recs[-1]["duration_s"] * 1e3 if recs else float("nan")
+        rows.extend([
+            (f"chaos/{kind}_fault_wps", round(wps, 1),
+             f"1 injected {kind} death @ step 4; "
+             f"ratio_vs_faultfree={wps / wps_sup:.2f}"),
+            (f"chaos/{kind}_recovery_ms", round(rec_ms, 2),
+             "crash detection -> replay complete"),
+            (f"chaos/{kind}_replayed", summary["windows_replayed"],
+             "in-flight windows re-dispatched after restart"),
+        ])
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

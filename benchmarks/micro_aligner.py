@@ -356,17 +356,20 @@ def obs_overhead_rows(cfg: TorrConfig = REUSE_CFG, n_streams: int = 64,
 
     Times the mix-0.9 step-level drive (S = 64, M = 1024 — the ISSUE 6
     gate's shape) twice: bare, and with a live ``repro.obs`` stack (metrics
-    registry + flight recorder + ``StepObserver``) folded exactly the way
-    the sync engine folds it — deferred one step behind dispatch, so the
-    host never blocks on in-flight device work, with the final drain
-    inside the timed region (the engine pays it at ``summary()``). The
-    ISSUE 7 acceptance gate is overhead <= 3% windows/sec, asserted here
-    so CI bench-smoke fails loudly if instrumentation creeps onto the hot
-    path.
+    registry + flight recorder + ``StepObserver``) *plus* write-through
+    state-store snapshots (``snapshot_every=1``, every stream every step —
+    the worst-case externalization cadence) folded exactly the way the
+    sync engine folds it — deferred one step behind dispatch, so the host
+    never blocks on in-flight device work, with the final drain inside
+    the timed region (the engine pays it at ``summary()``). The ISSUE 7
+    acceptance gate is overhead <= 3% windows/sec, asserted here so CI
+    bench-smoke fails loudly if instrumentation (or snapshotting) creeps
+    onto the hot path.
     """
     from collections import deque
 
     from repro.obs import FlightRecorder, MetricsRegistry, StepObserver
+    from repro.serving import state_store as ss
 
     im = random_item_memory(jax.random.PRNGKey(0), cfg)
     task_w = jax.random.uniform(jax.random.PRNGKey(1), (n_streams, cfg.M))
@@ -386,48 +389,65 @@ def obs_overhead_rows(cfg: TorrConfig = REUSE_CFG, n_streams: int = 64,
         max_full = max(max_full, int(np.sum(np.asarray(tel.path) == PATH_FULL)))
     tier = policy.bucket_tier(R, max_full)
 
-    def drive(obs):
+    def drive(obs, store=None):
         st = pipeline.init_multi_stream_state(cfg, task_w)
         st, _, _ = step(st, im, *warm, cfg, fused="compact", bucket_cap=tier)
         backlog = deque()
-        for q, v, b, qd in timed:
+        for t, (q, v, b, qd) in enumerate(timed):
             st, _out, tel = step(st, im, q, v, b, qd, cfg, fused="compact",
                                  bucket_cap=tier)
             if obs is not None:
                 rec = obs.on_dispatch(n_streams, 0,
                                       requested=("compact", tier, None))
-                backlog.append((tel, rec))
+                # the engine's lazy per-slot snapshot slices ride the same
+                # deferred fold as the telemetry (cadence 1: every stream)
+                snaps = None
+                if store is not None:
+                    snaps = [ss.snapshot_rows(st, s, f"stream{s}", t + 1,
+                                              {"engine": "bench"})
+                             for s in range(n_streams)]
+                backlog.append((tel, rec, snaps))
                 # the sync engine's deferred fold: everything but the
                 # newest (possibly in-flight) step
                 while len(backlog) > 1:
-                    tel0, rec0 = backlog.popleft()
+                    tel0, rec0, sn0 = backlog.popleft()
                     obs.observe_step(
                         jax.tree_util.tree_map(np.asarray, tel0), rec0)
+                    memo = {}
+                    for pending in sn0 or ():
+                        store.put(ss.materialize_snapshot(pending, memo))
         jax.block_until_ready(st.cache.age)
         while backlog:                         # flush_telemetry()
-            tel0, rec0 = backlog.popleft()
+            tel0, rec0, sn0 = backlog.popleft()
             obs.observe_step(jax.tree_util.tree_map(np.asarray, tel0), rec0)
+            memo = {}
+            for pending in sn0 or ():
+                store.put(ss.materialize_snapshot(pending, memo))
 
     # interleave base/obs rounds so slow host drift (the drives are ~1 s
     # each) cancels instead of biasing one arm; best-of over rounds
     drive(None)                                # compile / warm caches
     t_base = t_obs = float("inf")
-    obs = None
+    obs = store = None
     for _ in range(rounds):
         t0 = time.perf_counter()
         drive(None)
         t_base = min(t_base, time.perf_counter() - t0)
         obs = StepObserver(MetricsRegistry(), FlightRecorder())
+        store = ss.InMemoryStateStore(metrics=obs.registry)
         t0 = time.perf_counter()
-        drive(obs)
+        drive(obs, store)
         t_obs = min(t_obs, time.perf_counter() - t0)
 
-    # the instrumented drive must have actually observed every step
+    # the instrumented drive must have actually observed every step and
+    # written through every snapshot (cadence 1: one per stream per step)
     snap = obs.registry.snapshot()
     n_steps = snap["torr_steps_total"]["series"][0]["value"]
     assert n_steps == len(timed), (n_steps, len(timed))
     assert len(obs.flight.records()) == len(timed)
     assert all("telemetry" in r for r in obs.flight.records())
+    assert len(store.keys()) == n_streams
+    assert store.latest_seq("stream0") == len(timed)
     global _METRICS_SNAPSHOT
     _METRICS_SNAPSHOT = snap
 
@@ -438,7 +458,8 @@ def obs_overhead_rows(cfg: TorrConfig = REUSE_CFG, n_streams: int = 64,
          round(n_win / t_base, 1), "windows/sec, compact step, no obs"),
         (f"micro/obs_overhead_S{n_streams}_mix0.9_obs_wps",
          round(n_win / t_obs, 1),
-         "windows/sec, metrics+flight attached (deferred fold)"),
+         "windows/sec, metrics+flight+state-store snapshots "
+         "(deferred fold, snapshot_every=1)"),
         (f"micro/obs_overhead_S{n_streams}_mix0.9_pct", round(pct, 2),
          "acceptance: <= 3.0"),
     ]

@@ -7,8 +7,8 @@ multi-stream Tables 6-7). ``--json PATH`` additionally writes the whole
 suite as one JSON document: ``{suite: {"rows": [[name, value, derived],
 ...], "seconds": s, "ok": bool}}`` — the machine-readable artifact CI and
 dashboards diff across commits. Suites instrumented with ``repro.obs``
-(table7, table8, micro) additionally carry a ``"metrics"`` key: the
-registry snapshot of the run's serving traffic (see
+(table7, table8, chaos, micro) additionally carry a ``"metrics"`` key:
+the registry snapshot of the run's serving traffic (see
 ``docs/observability.md``).
 
 The document also carries a top-level ``"meta"`` key (git SHA, UTC
@@ -64,10 +64,11 @@ def main() -> None:
                          "(e.g. table7,table8)")
     args = ap.parse_args()
 
-    from . import (autotune_blocks, micro_aligner, roofline_summary,
-                   table1_hw, table2_envelope, table3_runtime,
-                   table4_throughput, table5_accuracy, table6_multistream,
-                   table7_async, table8_pareto, torr_reuse_ablation)
+    from . import (autotune_blocks, chaos_recovery, micro_aligner,
+                   roofline_summary, table1_hw, table2_envelope,
+                   table3_runtime, table4_throughput, table5_accuracy,
+                   table6_multistream, table7_async, table8_pareto,
+                   torr_reuse_ablation)
 
     suites = [
         ("table1", table1_hw),
@@ -79,6 +80,7 @@ def main() -> None:
         ("table7", table7_async),
         ("table8", table8_pareto),
         ("torr_ablation", torr_reuse_ablation),
+        ("chaos", chaos_recovery),
         ("micro", micro_aligner),
         ("autotune", autotune_blocks),
         ("roofline", roofline_summary),

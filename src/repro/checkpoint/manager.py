@@ -25,6 +25,7 @@ import pathlib
 import shutil
 import tempfile
 import threading
+import zipfile
 from typing import Any, Callable
 
 import jax
@@ -93,14 +94,36 @@ class CheckpointManager:
                 "treedef": str(treedef),
             }
             (tmp / _MANIFEST).write_text(json.dumps(manifest))
+            # durability before the commit point: a rename can land on disk
+            # before the data it names (write reordering across a power
+            # cut), producing a complete-looking but torn checkpoint —
+            # fsync both payload files and the temp dir first
+            for f in ("leaves.npz", _MANIFEST):
+                fd = os.open(tmp / f, os.O_RDONLY)
+                try:
+                    os.fsync(fd)
+                finally:
+                    os.close(fd)
+            self._fsync_dir(tmp)
             if final.exists():  # idempotent re-save of the same step
                 shutil.rmtree(final)
             os.replace(tmp, final)  # commit point
+            self._fsync_dir(self.dir)  # persist the rename itself
         finally:
             if tmp.exists():
                 shutil.rmtree(tmp, ignore_errors=True)
         self._gc()
         return final
+
+    @staticmethod
+    def _fsync_dir(path) -> None:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass  # some filesystems refuse directory fsync; best-effort
+        finally:
+            os.close(fd)
 
     def _gc(self):
         steps = self.all_steps()
@@ -119,16 +142,9 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, template, step: int | None = None,
-                shardings=None):
-        """Restore into the structure of ``template``.
-
-        ``shardings``: optional matching tree of jax.sharding.Sharding —
-        pass the *current* mesh's shardings to reshard elastically.
-        """
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+    def _load_leaves(self, step: int) -> list:
+        """Read one checkpoint's raw leaves (any torn/truncated file
+        raises — the caller decides whether to fall back)."""
         d = self.dir / f"step_{step:08d}"
         data = np.load(d / "leaves.npz")
         manifest = json.loads((d / _MANIFEST).read_text())
@@ -141,6 +157,45 @@ class CheckpointManager:
                 import ml_dtypes
                 arr = arr.view(np.dtype(getattr(ml_dtypes, dtypes[i], dtypes[i])))
             leaves.append(arr)
+        return leaves
+
+    # exception families a torn/truncated checkpoint surfaces as: zip
+    # directory damage (BadZipFile subclasses Exception, not OSError),
+    # short reads, missing entries, mangled JSON (JSONDecodeError
+    # subclasses ValueError)
+    _TORN_ERRORS = (OSError, ValueError, KeyError, EOFError,
+                    zipfile.BadZipFile)
+
+    def restore(self, template, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``template``.
+
+        With ``step=None`` the newest *readable* checkpoint wins: a torn
+        or truncated latest (crash mid-write on a filesystem that
+        reordered around the rename) is skipped with a warning and the
+        previous step is restored instead — an explicit ``step`` is
+        trusted and raises on damage. ``shardings``: optional matching
+        tree of jax.sharding.Sharding — pass the *current* mesh's
+        shardings to reshard elastically.
+        """
+        leaves = None
+        if step is not None:
+            leaves = self._load_leaves(step)
+        else:
+            for cand in reversed(self.all_steps()):
+                try:
+                    leaves = self._load_leaves(cand)
+                    step = cand
+                    break
+                except self._TORN_ERRORS as e:
+                    import warnings
+                    warnings.warn(
+                        f"checkpoint step_{cand:08d} is torn "
+                        f"({type(e).__name__}: {e}); falling back to the "
+                        "previous step", RuntimeWarning, stacklevel=2)
+            if leaves is None:
+                raise FileNotFoundError(
+                    f"no readable checkpoints in {self.dir}")
         flat_t, treedef = jax.tree_util.tree_flatten(template)
         if len(flat_t) != len(leaves):
             raise ValueError(

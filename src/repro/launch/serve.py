@@ -157,7 +157,11 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                      governor: bool = False, fused: str | None = None,
                      metrics_port: int | None = None, metrics_json: str = "",
                      flight_jsonl: str = "", flight_capacity: int = 4096,
-                     trace_json: str = ""):
+                     trace_json: str = "", supervise: bool = False,
+                     state_store: str = "", snapshot_every: int = 1,
+                     fault_at: int | None = None,
+                     fault_kind: str = "dispatcher",
+                     outputs_jsonl: str = ""):
     """Serve S synthetic TOOD streams through the batched window engine.
 
     ``use_async`` routes through the dispatch/collect
@@ -179,16 +183,31 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
     the scraped ``metrics_text`` (when a server ran) and the engine
     ``summary`` — what ``tests/test_obs.py`` asserts the acceptance
     criteria against.
+
+    Fault tolerance: ``supervise`` (implied by ``fault_at``) wraps the
+    engine in a :class:`repro.serving.supervisor.ServeSupervisor` (which
+    implies the async runtime); ``state_store`` points it at a JSONL
+    session store (empty = in-memory), snapshotting every
+    ``snapshot_every`` served windows. ``fault_at``/``fault_kind`` inject
+    one deterministic worker death (the chaos harness); recovery replays
+    the lost windows and the run still must account for every admitted
+    window — any lost window raises SystemExit(3). ``outputs_jsonl``
+    streams one fsync'd record per resolved window (stream, seq, best
+    classes, scores digest) — the bit-match ledger the SIGKILL recovery
+    test compares across runs; a killed process resumes from the store,
+    skipping each stream's already-covered windows.
     """
     from ..core import hdc
     from ..data import tood_synth as ts
     from ..serving import tood_pipelines as tp
     from ..serving.stream_engine import StreamEngine
 
-    # deadline admission, sharding and the governor live on the async
-    # runtime; honor them for programmatic callers too, not just main()'s
-    # CLI plumbing
-    use_async = use_async or bool(rt) or governor or mesh_devices != 0
+    # deadline admission, sharding, the governor and supervision live on
+    # the async runtime; honor them for programmatic callers too, not just
+    # main()'s CLI plumbing
+    supervise = supervise or fault_at is not None
+    use_async = (use_async or bool(rt) or governor or mesh_devices != 0
+                 or supervise)
 
     # K >= N_max so a window cannot thrash its own cache out of reuse range
     cfg = TorrConfig(D=2048, B=8, M=64, K=16, N_max=16, delta_budget=256)
@@ -207,6 +226,20 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
             server = MetricsServer(registry, port=metrics_port)
             print(f"[serve/torr] metrics endpoint "
                   f"http://127.0.0.1:{server.start()}/metrics")
+    # fault-tolerance plumbing: session store, chaos plan, supervisor.
+    # The FaultPlan instance is shared across engine rebuilds — it fires
+    # exactly once, so the supervisor's replacement engine runs clean.
+    store = None
+    fault = None
+    sup = None
+    if supervise or state_store:
+        from ..serving.state_store import InMemoryStateStore, JsonlStateStore
+        store = (JsonlStateStore(state_store, metrics=registry)
+                 if state_store else InMemoryStateStore(metrics=registry))
+    if fault_at is not None:
+        from ..runtime.fault import FaultPlan
+        fault = FaultPlan(at_step=fault_at, thread=fault_kind,
+                          kind=fault_kind)
     if use_async:
         from ..runtime import sharding as shd
         from ..serving.async_engine import AsyncStreamEngine
@@ -228,15 +261,30 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
         if governor:
             from ..control import Governor, policy_from_env
             gov = Governor(cfg, policy_from_env(rt), metrics=registry)
-        eng = AsyncStreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
-                                fused=fused, mesh=mesh, tracker=tracker,
-                                governor=gov, paused=True,
-                                metrics=registry, flight=flight,
-                                tracer=tracer)
+
+        def make_engine():
+            # tracker/governor survive rebuilds deliberately: their EMAs
+            # are measurements of the workload, not of one engine instance
+            return AsyncStreamEngine(
+                cfg, sys_.im, n_slots=n_slots, serial=serial, fused=fused,
+                mesh=mesh, tracker=tracker, governor=gov, paused=True,
+                metrics=registry, flight=flight, tracer=tracer,
+                store=store, snapshot_every=snapshot_every,
+                fault_plan=fault)
+
+        if supervise:
+            from ..serving.supervisor import ServeSupervisor
+            sup = ServeSupervisor(make_engine, store, metrics=registry,
+                                  flight=flight)
+            eng = sup.engine
+        else:
+            eng = make_engine()
     else:
         eng = StreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
                            fused=fused, metrics=registry, flight=flight,
-                           tracer=tracer)
+                           tracer=tracer, store=store,
+                           snapshot_every=snapshot_every, fault_plan=fault)
+    front = sup if sup is not None else eng
 
     R = jnp.asarray(sys_.R)
     n_tasks = world.relevance.shape[0]
@@ -246,49 +294,86 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
         eng.start()
     t_total = 0.0
     shed = 0
+    submitted = accounted = resumed_skip = 0
+    out_f = open(outputs_jsonl, "a", encoding="utf-8") \
+        if outputs_jsonl else None
+    out_lock = threading.Lock()
+
+    def _ledger_cb(sid, seq):
+        # async ledger writes ride the window's future resolution (the
+        # collector thread) — strictly BEFORE that step's state-store
+        # snapshot put, so a snapshot covering a window implies its
+        # ledger record is on disk (the resume path's no-gap invariant)
+        def cb(fut):
+            if fut.cancelled() or fut.exception() is not None:
+                return
+            wout, _tel = fut.result()
+            with out_lock:
+                _write_output(out_f, sid, seq, wout)
+        return cb
+
     interrupted = False
-    prev_handlers = _install_signal_handlers()
-    # printed *after* the handlers are armed: operators (and the shutdown
-    # test) can take this line as "an interrupt from here on flushes
-    # artifacts instead of killing the process"
-    print("[serve/torr] serving (SIGINT/SIGTERM flushes artifacts)",
-          flush=True)
+    engine_dead = None
+    prev_handlers = None
     try:
+        # handlers armed and the armed-line printed *inside* the try: an
+        # operator (or the shutdown test) reacting to this line with an
+        # immediate signal must land in the graceful-flush handler even
+        # if it arrives before print() has returned
+        prev_handlers = _install_signal_handlers()
+        print("[serve/torr] serving (SIGINT/SIGTERM flushes artifacts)",
+              flush=True)
         # admit streams in waves of n_slots: slots < streams just queues work
         for wave_start in range(0, n_streams, n_slots):
             wave = range(wave_start, min(wave_start + n_slots, n_streams))
             # synthesize + encode the wave's windows outside the timed
             # region: the async engine must not get a head start on
             # untimed work
-            windows = []   # (stream_id, q, valid, boxes), submission order
+            # (stream_id, q, valid, boxes, seq), submission order
+            windows = []
             for s in wave:
                 task = s % n_tasks
-                eng.admit(f"stream{s}", sys_.task_w[task])
+                front.admit(f"stream{s}", sys_.task_w[task])
                 frames = ts.simulate_sequence(world, task, n_frames, seed=s,
                                               n_max=cfg.N_max)
-                for f in frames:
+                # cross-process resume: the store already covers the first
+                # latest_seq windows of this (deterministic) stream — a
+                # previous process served them before dying
+                skip = 0
+                if sup is not None:
+                    skip = min(store.latest_seq(f"stream{s}"), len(frames))
+                    resumed_skip += skip
+                for seq, f in enumerate(frames[skip:], start=skip):
                     q = hdc.pack_bits(
                         hdc.sign_project(jnp.asarray(f.feats), R))
                     windows.append(
-                        (f"stream{s}", np.asarray(q), f.valid, f.boxes))
-            futures = []   # (future, valid-mask) pairs, submission order
+                        (f"stream{s}", np.asarray(q), f.valid, f.boxes,
+                         seq))
+            futures = []   # (future, valid-mask, sid, seq), submission order
             t0 = time.time()
-            for sid, q, fvalid, fboxes in windows:
-                fut = eng.submit(sid, q, fvalid, fboxes)
+            for sid, q, fvalid, fboxes, seq in windows:
+                fut = front.submit(sid, q, fvalid, fboxes)
+                submitted += 1
                 if use_async:
-                    futures.append((fut, fvalid))
+                    if out_f is not None:
+                        fut.add_done_callback(_ledger_cb(sid, seq))
+                    futures.append((fut, fvalid, sid, seq))
                 else:
                     valids.append(fvalid)
             if use_async:
                 from ..serving.deadline import WindowShed
-                eng.flush()
+                front.flush()
                 t_total += time.time() - t0
-                for fut, vmask in futures:
+                for fut, vmask, sid, seq in futures:
                     try:
-                        _, tel = fut.result()
+                        wout, tel = fut.result()
                     except WindowShed:
                         shed += 1
+                        accounted += 1
                         continue
+                    except Exception:   # noqa: BLE001 — lost window,
+                        continue        # tallied by the zero-loss gate
+                    accounted += 1
                     paths.append(np.asarray(tel.path))
                     valids.append(vmask)
             else:
@@ -296,10 +381,14 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                 eng.sync()
                 t_total += time.time() - t0
                 for s in wave:
-                    for _, tel in results[f"stream{s}"]:
+                    for seq, (wout, tel) in enumerate(
+                            results[f"stream{s}"]):
+                        accounted += 1
                         paths.append(np.asarray(tel.path))
+                        if out_f is not None:
+                            _write_output(out_f, f"stream{s}", seq, wout)
             for s in wave:
-                eng.retire(f"stream{s}")
+                front.retire(f"stream{s}")
     except KeyboardInterrupt:
         # SIGINT/SIGTERM (or a ^C): stop serving but keep going — the
         # whole point of the handler is that the artifact flush below
@@ -307,11 +396,26 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
         interrupted = True
         print("[serve/torr] interrupted — cancelling in-flight windows "
               "and flushing observability artifacts")
+    except Exception as e:  # noqa: BLE001 — terminal engine death
+        from ..runtime.fault import EngineDead
+        if not isinstance(e, EngineDead):
+            raise
+        engine_dead = e
+        print(f"[serve/torr] engine terminally dead: {e}")
     finally:
-        _restore_signal_handlers(prev_handlers)
+        if prev_handlers is not None:
+            _restore_signal_handlers(prev_handlers)
 
     if use_async:
-        eng.close(drain=not interrupted)
+        if sup is not None:
+            from ..runtime.fault import EngineDead
+            try:
+                sup.close(drain=not interrupted and engine_dead is None)
+            except EngineDead:
+                pass    # already accounted as lost windows
+            eng = sup.engine    # a recovery may have swapped the instance
+        else:
+            eng.close(drain=not interrupted)
     mode = "async" if use_async else "sync"
     print(f"[serve/torr] streams={n_streams} slots={eng.n_slots} "
           f"frames/stream={n_frames} mode={mode}")
@@ -352,7 +456,30 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
                   f"missed={ssum['missed']}/{ssum['completed']} "
                   f"(objective {ssum['objective']:.2f})")
 
+    sup_summary = None
+    lost = 0
+    if sup is not None:
+        sup_summary = sup.summary()
+        print(f"[serve/torr] supervisor: restarts={sup_summary['restarts']} "
+              f"replayed={sup_summary['windows_replayed']} "
+              f"rerun={sup_summary['windows_rerun']} "
+              f"degraded={sup_summary['degraded']}")
+        if resumed_skip:
+            print(f"[serve/torr] resumed: skipped {resumed_skip} windows "
+                  "already covered by the state store")
+        if not interrupted:
+            lost = submitted - accounted
+            if lost:
+                print(f"[serve/torr] LOST {lost} of {submitted} admitted "
+                      "windows — recovery failed to replay them")
+    if out_f is not None:
+        out_f.close()
+
     if registry is None:
+        if store is not None and hasattr(store, "close"):
+            store.close()
+        if lost:
+            raise SystemExit(3)
         return None
     # fold any telemetry still deferred by the sync engine's double
     # buffering before the registry is read (no-op on the async runtime,
@@ -380,9 +507,33 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
         n_ev = write_chrome_trace(flight.records(), trace_json)
         print(f"[serve/torr] chrome trace: {n_ev} events "
               f"({tracer.minted} windows traced) -> {trace_json}")
-    return {"registry": registry, "flight": flight, "tracer": tracer,
-            "slo": slo, "metrics_text": metrics_text,
-            "summary": eng.summary(), "interrupted": interrupted}
+    result = {"registry": registry, "flight": flight, "tracer": tracer,
+              "slo": slo, "metrics_text": metrics_text,
+              "summary": eng.summary(), "interrupted": interrupted,
+              "supervisor": sup_summary, "lost": lost,
+              "submitted": submitted}
+    if store is not None and hasattr(store, "close"):
+        store.close()
+    if lost:
+        raise SystemExit(3)
+    return result
+
+
+def _write_output(f, sid, seq, wout) -> None:
+    """Append one resolved window's output record (fsync'd: the SIGKILL
+    recovery test diffs these ledgers across runs, so a record must never
+    be half-written)."""
+    import hashlib
+    import json
+    import os
+
+    scores = np.ascontiguousarray(np.asarray(wout.scores))
+    rec = {"stream": sid, "seq": int(seq),
+           "best": np.asarray(wout.best).tolist(),
+           "scores_sha256": hashlib.sha256(scores.tobytes()).hexdigest()}
+    f.write(json.dumps(rec) + "\n")
+    f.flush()
+    os.fsync(f.fileno())
 
 
 def main() -> None:
@@ -444,6 +595,29 @@ def main() -> None:
                     help="arm per-window causal tracing and write a Chrome "
                          "trace-event JSON (open in chrome://tracing or "
                          "ui.perfetto.dev); see docs/observability.md")
+    ap.add_argument("--supervise", action="store_true",
+                    help="wrap the engine in a ServeSupervisor: worker "
+                         "death restarts the engine, re-admits streams "
+                         "warm from the state store and replays in-flight "
+                         "windows (implies --async; see docs/robustness.md)")
+    ap.add_argument("--state-store", default="", metavar="PATH",
+                    help="file-backed JSONL session store (a SIGKILLed run "
+                         "resumes from it); default with --supervise is "
+                         "in-memory")
+    ap.add_argument("--snapshot-every", type=int, default=1, metavar="N",
+                    help="write-through a stream's session snapshot every "
+                         "N served windows (default 1)")
+    ap.add_argument("--fault-at", type=int, default=None, metavar="STEP",
+                    help="chaos harness: kill the engine worker at this "
+                         "dispatched-step index (implies --supervise)")
+    ap.add_argument("--fault-kind", default="dispatcher",
+                    choices=["dispatcher", "collector"],
+                    help="which worker thread the injected fault kills "
+                         "(default dispatcher)")
+    ap.add_argument("--outputs-jsonl", default="", metavar="PATH",
+                    help="stream one fsync'd record per resolved window "
+                         "(stream, seq, best classes, scores digest) — the "
+                         "recovery tests' bit-match ledger")
     args = ap.parse_args()
 
     if args.torr_streams > 0:
@@ -457,7 +631,13 @@ def main() -> None:
                          metrics_port=args.metrics_port,
                          metrics_json=args.metrics_json,
                          flight_jsonl=args.flight_jsonl,
-                         trace_json=args.trace_json)
+                         trace_json=args.trace_json,
+                         supervise=args.supervise,
+                         state_store=args.state_store,
+                         snapshot_every=args.snapshot_every,
+                         fault_at=args.fault_at,
+                         fault_kind=args.fault_kind,
+                         outputs_jsonl=args.outputs_jsonl)
         return
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)

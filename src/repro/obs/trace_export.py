@@ -21,7 +21,10 @@ https://ui.perfetto.dev both load it directly:
   Perfetto draws the dispatcher→collector hand-off per window;
 * **counter tracks** (``ph: "C"``) per dispatched step for the governor
   plan level, the energy EWMA (mJ) and the queue depth, so plan ladder
-  moves line up visually with the windows that caused them.
+  moves line up visually with the windows that caused them;
+* **instant markers** (``ph: "i"``, global scope) for the supervisor's
+  ``engine_crash`` / ``engine_recovered`` epoch records, so a recovery
+  window is visible as a bracketed gap in the timeline.
 
 ``ts``/``dur`` are microseconds on the process-wide trace epoch
 (:func:`repro.obs.trace.now_us`), the unit the format specifies.
@@ -93,6 +96,15 @@ def chrome_trace(records: Iterable[dict], pid: int = 1) -> dict:
 
     for rec in records:
         step_ts: Optional[float] = rec.get("ts_us")
+        if rec.get("event") in ("engine_crash", "engine_recovered") \
+                and step_ts is not None:
+            args = {k: v for k, v in rec.items()
+                    if k not in ("event", "ts_us", "trace")}
+            events.append({
+                "name": rec["event"], "ph": "i", "s": "g", "cat": "recovery",
+                "ts": step_ts, "pid": pid, "tid": 0, "args": args,
+            })
+            continue
         for w in rec.get("trace") or ():
             args = _window_args(w)
             seq = w.get("seq")

@@ -36,6 +36,36 @@ Modules:
     ``WindowShed`` instead of resolving.
   * ``deadline``      — RT-30/RT-60 admission control: pure decision table
     (admit / bypass-escalate / shed) + the tracker that projects window
-    completion and emits cycle-model-compatible jitter/miss telemetry.
+    completion and emits cycle-model-compatible jitter/miss telemetry;
+    ``WindowShed`` carries a ``retry_after_s`` hint derived from the same
+    drain model the decision table uses.
+  * ``state_store``   — externalized per-stream session state: either
+    engine snapshots a stream's cache rows + task weights into a pluggable
+    :class:`~repro.serving.state_store.StateStore` (in-memory or JSONL)
+    every ``snapshot_every`` served windows, off the hot path; ``admit``
+    accepts a :class:`~repro.serving.state_store.StreamSnapshot` for a
+    warm start that is bit-identical to never having lost the slot.
+  * ``supervisor``    — fault-tolerant front-end over either engine::
+
+        sup = ServeSupervisor(lambda: AsyncStreamEngine(..., store=store,
+                                                        paused=True),
+                              store)
+        sup.admit("cam0", task_w0)          # warm-starts from the store
+        fut = sup.submit("cam0", q, valid, boxes)
+        sup.flush()                         # survives EngineDead: rebuild,
+                                            # re-admit, replay, resolve
+
+    On :class:`~repro.runtime.fault.EngineDead` the supervisor rebuilds
+    the engine from its factory, re-admits every stream from its latest
+    snapshot and replays the uncovered journal suffix — recovered outputs
+    are bit-identical to a fault-free run at ``snapshot_every=1``. A
+    crash-loop breaker degrades the knob plan; bounded restarts fail
+    pending futures with the terminal ``EngineDead``.
   * ``reranker``      — TorR as an LLM token-reranking sidecar.
+
+Chaos injection: both engines accept a
+:class:`~repro.runtime.fault.FaultPlan` (``fault_plan=``) that kills the
+dispatcher or collector at a chosen step exactly once — the deterministic
+harness behind ``repro.launch.serve --fault-at/--fault-kind`` and the
+recovery tests.
 """

@@ -88,6 +88,7 @@ from ..obs.spans import NULL_SPAN, span
 from ..obs.trace import now_us, trace_scope
 from ..perf.cycle_model import telemetry_cost
 from ..runtime import sharding as shd
+from ..runtime.fault import EngineDead
 from .deadline import Decision, DeadlineTracker, WindowShed
 from .stream_engine import (GATE_ADMIT, GATE_ESCALATE, GATE_SHED,
                             StreamEngine)
@@ -122,6 +123,9 @@ class AsyncStreamEngine(StreamEngine):
         metrics=None,
         flight=None,
         tracer=None,
+        store=None,
+        snapshot_every: int = 1,
+        fault_plan=None,
     ):
         if governor is not None and tracker is None:
             raise ValueError(
@@ -136,7 +140,9 @@ class AsyncStreamEngine(StreamEngine):
                          n_slots=shd.pad_stream_slots(n_slots, self._mesh),
                          jit=jit, serial=serial, fused=fused,
                          bucket_cap=bucket_cap, decide=decide,
-                         metrics=metrics, flight=flight, tracer=tracer)
+                         metrics=metrics, flight=flight, tracer=tracer,
+                         store=store, snapshot_every=snapshot_every,
+                         fault_plan=fault_plan)
         # async-specific phase spans (the sync step() spans are unused
         # here); each runs on exactly one daemon thread
         sp = (lambda name: span(name, metrics)) \
@@ -217,6 +223,33 @@ class AsyncStreamEngine(StreamEngine):
         if drain_err is not None:
             raise drain_err
 
+    def abandon(self) -> None:
+        """Stop signal without joining the worker threads.
+
+        The supervisor's recovery path runs under its own lock, which a
+        mid-delivery collector may be waiting on inside a done-callback —
+        ``close()``'s joins would deadlock there. Workers observe the stop
+        flag and exit on their own; queued-but-undelivered windows stay
+        pending on the supervisor's journal and are replayed by the
+        replacement engine (at-least-once), and any late delivery from
+        this engine is either bit-identical (deterministic replay of the
+        same snapshot lineage) or ignored by the supervisor's epoch guard.
+        """
+        if not self._started:
+            return
+        with self._work:
+            self._stop = True
+            self._work.notify_all()
+        # unblock a dispatcher parked on a full collect queue (collector
+        # death) and wake a collector parked on an empty one
+        try:
+            while True:
+                self._collect_q.get_nowait()
+        except queue.Empty:
+            pass
+        self._collect_q.put(None)
+        self._started = False
+
     def __enter__(self) -> "AsyncStreamEngine":
         return self
 
@@ -225,13 +258,18 @@ class AsyncStreamEngine(StreamEngine):
 
     def _check_error(self) -> None:
         if self._error is not None:
-            raise RuntimeError("async engine worker died") from self._error
+            # _fail stored a typed EngineDead; raise a fresh instance per
+            # caller (shared tracebacks across threads mutate) with the
+            # same cause/inflight/thread payload
+            dead = self._error
+            raise EngineDead(cause=dead.cause, inflight=dead.inflight,
+                             thread=dead.thread) from dead.cause
 
     # -- admission / submission (caller threads) ----------------------------
 
-    def admit(self, stream_id, task_w) -> int:
+    def admit(self, stream_id, task_w, snapshot=None) -> int:
         with self._lock:
-            slot = super().admit(stream_id, task_w)
+            slot = super().admit(stream_id, task_w, snapshot=snapshot)
             if self._mesh is not None:
                 # super() rebuilt the state tree functionally; re-pin it so
                 # the dispatcher's next step keeps the stream-axis layout
@@ -334,7 +372,8 @@ class AsyncStreamEngine(StreamEngine):
                     self._obs.on_shed()
                 self._inflight -= 1
                 deferred.append((fut, WindowShed(
-                    stream_id, self._tracker.lateness(arrival, now))))
+                    stream_id, self._tracker.lateness(arrival, now),
+                    retry_after_s=self._tracker.retry_after_hint(backlog))))
                 self._settled.notify_all()
                 if ctx is not None:
                     # shed windows never reach a step: retire the context
@@ -420,6 +459,11 @@ class AsyncStreamEngine(StreamEngine):
                         self._work.wait()
                     if self._stop:
                         break
+                    if self._fault is not None:
+                        # chaos injection: die at the planned step boundary
+                        # with real backlog in flight — the outer handler's
+                        # _fail path is exercised, not simulated
+                        self._fault.maybe_fire("dispatcher", self.stats.steps)
                     # traced steps open a trace_scope over the decide +
                     # dispatch spans: _assemble populates step_ctxs with
                     # the admitted windows' contexts, and each span stamps
@@ -449,6 +493,11 @@ class AsyncStreamEngine(StreamEngine):
                         self.stats.steps += 1
                         self.stats.windows += len(served)
                         self.stats.pad_slots += self.n_slots - len(served)
+                        # lazy device slices of the post-step state; the
+                        # collector materializes + writes them after the
+                        # windows' results are delivered
+                        snaps = self._collect_snaps(served) \
+                            if self._store is not None else None
                         rec = None
                         if self._obs is not None:
                             gov = None
@@ -474,7 +523,8 @@ class AsyncStreamEngine(StreamEngine):
                     continue
                 # bounded queue = pipeline depth: block here (not holding
                 # the lock) instead of racing ahead of the device
-                self._collect_q.put((served, out, tel, t0, rec, step_ctxs))
+                self._collect_q.put(
+                    (served, out, tel, t0, rec, step_ctxs, snaps))
                 if self._error is not None:
                     # the collector died while we were blocked in put():
                     # _fail's drain ran before our item landed, so nobody
@@ -493,12 +543,19 @@ class AsyncStreamEngine(StreamEngine):
     # -- collector ----------------------------------------------------------
 
     def _collect_loop(self) -> None:
+        n_collected = 0
         try:
             while True:
                 item = self._collect_q.get()
                 if item is None:
                     break
-                served, out, tel, t0, rec, ctxs = item
+                if self._fault is not None:
+                    # chaos injection: die with this step's windows still
+                    # unresolved (their futures fail via _fail, and no
+                    # snapshot covering them is ever written)
+                    self._fault.maybe_fire("collector", n_collected)
+                n_collected += 1
+                served, out, tel, t0, rec, ctxs, snaps = item
                 # traced steps re-open their context scope on the collector
                 # thread: the device/drain spans stamp onto the same
                 # windows the dispatcher's spans did — the cross-thread
@@ -509,7 +566,8 @@ class AsyncStreamEngine(StreamEngine):
                         jax.block_until_ready(out.scores)
                     dur = time.monotonic() - t0
                     with self._sp_drain:
-                        digest = self._drain_item(served, out, tel, rec, dur)
+                        digest = self._drain_item(served, out, tel, rec,
+                                                  dur, snaps)
                 # finish *after* the drain span exits so collector_drain is
                 # part of the serialized per-window event list
                 if ctxs:
@@ -517,7 +575,7 @@ class AsyncStreamEngine(StreamEngine):
         except BaseException as e:  # noqa: BLE001
             self._fail(e)
 
-    def _drain_item(self, served, out, tel, rec, dur):
+    def _drain_item(self, served, out, tel, rec, dur, snaps=None):
         """Move one retired step to host and resolve its windows; returns
         the step's telemetry digest (for trace completion), or None when
         nothing downstream needs it."""
@@ -569,6 +627,16 @@ class AsyncStreamEngine(StreamEngine):
         with self._settled:
             self._inflight -= len(served)
             self._settled.notify_all()
+        if snaps:
+            # snapshot writes happen strictly AFTER the set_result loop
+            # above: a snapshot's window_seq covering a window therefore
+            # implies its result was delivered — the invariant that makes
+            # cross-process resume (skip the first latest_seq windows)
+            # gap-free. Duplicates on replay are fine (at-least-once).
+            from .state_store import materialize_snapshot
+            memo = {}  # one host transfer per stacked leaf per batch
+            for pending in snaps:
+                self._store.put(materialize_snapshot(pending, memo))
         return digest
 
     def _drain_collect(self) -> list:
@@ -596,11 +664,21 @@ class AsyncStreamEngine(StreamEngine):
     def _fail(self, exc: BaseException) -> None:
         """Worker died: fail every queued future and wake all waiters.
 
-        Futures are resolved after the lock is released — set_exception
-        runs done-callbacks synchronously, and one may re-enter the engine."""
+        The raw exception is wrapped into a typed :class:`EngineDead`
+        carrying the cause, the in-flight window count at the moment of
+        death, and which worker died — pending futures fail with it, so
+        callers can tell a crash (replayable) from a ``WindowShed``
+        (admission policy). Futures are resolved after the lock is
+        released — set_exception runs done-callbacks synchronously, and
+        one may re-enter the engine."""
+        tname = threading.current_thread().name
+        role = {"torr-dispatch": "dispatcher",
+                "torr-collect": "collector"}.get(tname, tname)
         doomed = []
         with self._work:
-            self._error = exc
+            dead = exc if isinstance(exc, EngineDead) else EngineDead(
+                cause=exc, inflight=self._inflight, thread=role)
+            self._error = dead
             self._stop = True
             for dq in self._pending:
                 while dq:
@@ -614,7 +692,7 @@ class AsyncStreamEngine(StreamEngine):
             self._work.notify_all()
         for fut in doomed:
             if not fut.cancelled():
-                fut.set_exception(exc)
+                fut.set_exception(dead)
 
     # -- telemetry ----------------------------------------------------------
 

@@ -42,15 +42,26 @@ class Decision(enum.IntEnum):
 
 
 class WindowShed(Exception):
-    """Set on a window's future when admission control sheds it."""
+    """Set on a window's future when admission control sheds it.
 
-    def __init__(self, stream_id, lateness_s: float, reason: str = "deadline"):
+    ``retry_after_s`` (when the shedding engine has a tracker projection)
+    is the earliest resubmission delay for which the pure :func:`decide`
+    table would return ADMIT again, assuming the backlog drains at the
+    projected step cadence — supervised clients back off by it instead of
+    hammering a saturated engine. None when no projection is available.
+    """
+
+    def __init__(self, stream_id, lateness_s: float, reason: str = "deadline",
+                 retry_after_s: float | None = None):
         self.stream_id = stream_id
         self.lateness_s = lateness_s
         self.reason = reason
+        self.retry_after_s = retry_after_s
+        hint = "" if retry_after_s is None else \
+            f"; retry after {retry_after_s * 1e3:.2f} ms"
         super().__init__(
             f"window for stream {stream_id!r} shed ({reason}; "
-            f"projected {lateness_s * 1e3:.2f} ms past deadline)"
+            f"projected {lateness_s * 1e3:.2f} ms past deadline{hint})"
         )
 
 
@@ -94,6 +105,21 @@ def decide(
     if backlog > 0 and wait_s + (backlog + 1) * step_s > policy.budget_s:
         return Decision.ESCALATE
     return Decision.ADMIT
+
+
+def retry_after_s(backlog: int, step_s: float, policy: DeadlinePolicy) -> float:
+    """Earliest resubmission delay after a shed for which :func:`decide`
+    would ADMIT a fresh window, under the drain model the decision table
+    itself projects with (one window per ``step_s`` per slot, no new
+    arrivals). A fresh window behind ``backlog`` others completes at
+    ``(backlog + 1) * step_s``; whatever exceeds the budget is the wait:
+
+        ``max(0, (backlog + 1) * step_s - budget_s)``
+
+    After backing off by this, the remaining backlog projects exactly to
+    the budget boundary and the table returns ADMIT (the property
+    tests/test_deadline.py pins against :func:`decide` directly)."""
+    return max(0.0, (backlog + 1) * step_s - policy.budget_s)
 
 
 class DeadlineTracker:
@@ -171,6 +197,10 @@ class DeadlineTracker:
     def lateness(self, arrival_s: float, now: float | None = None) -> float:
         now = self.now() if now is None else now
         return (now - arrival_s) + self._step_s - self.policy.budget_s
+
+    def retry_after_hint(self, backlog: int) -> float:
+        """The :func:`retry_after_s` backoff for the current step EMA."""
+        return retry_after_s(backlog, self._step_s, self.policy)
 
     def complete(self, arrival_s: float, now: float | None = None) -> float:
         """Record one served window's arrival->results latency."""

@@ -106,6 +106,9 @@ class StreamEngine:
         metrics=None,
         flight=None,
         tracer=None,
+        store=None,
+        snapshot_every: int = 1,
+        fault_plan=None,
     ):
         self.cfg = cfg
         self.im = im
@@ -172,6 +175,18 @@ class StreamEngine:
         self._sp_dispatch = sp("dispatch_enqueue")
         self._sp_observe = sp("host_observe")
         self._last_resolved = (self._fused, self._bucket_cap, self._decide)
+        # externalized session state (repro.serving.state_store): with a
+        # store attached, every stream's cache rows + task weights write
+        # through every `snapshot_every` served windows — sliced lazily at
+        # dispatch, materialized on the deferred telemetry fold (sync) or
+        # the collector (async), so the hot path never blocks on it
+        self._store = store
+        self._snapshot_every = max(1, int(snapshot_every))
+        self._served_count: Dict[object, int] = {}
+        # deterministic chaos injection (runtime.fault.FaultPlan): fired at
+        # the engine's step boundaries; exercises the EngineDead + recovery
+        # machinery end-to-end
+        self._fault = fault_plan
         # reusable host-side pad buffers for batch assembly
         self._q0 = np.zeros((cfg.N_max, cfg.words), np.uint32)
         self._v0 = np.zeros((cfg.N_max,), bool)
@@ -179,8 +194,17 @@ class StreamEngine:
 
     # -- admission control --------------------------------------------------
 
-    def admit(self, stream_id, task_w) -> int:
-        """Bind a stream to a free slot; returns the slot index."""
+    def admit(self, stream_id, task_w, snapshot=None) -> int:
+        """Bind a stream to a free slot; returns the slot index.
+
+        ``snapshot`` (a :class:`repro.serving.state_store.StreamSnapshot`,
+        or None) warm-starts the slot: the snapshot's cache rows (packed
+        prototypes, accumulators, ``acc_tag``s, age/validity) and
+        task-weight row overwrite the freshly-reset slot, and the
+        stream's served-window count resumes from ``snapshot.window_seq``
+        — a re-admitted stream keeps the reuse state that makes
+        partial-similarity paths pay, instead of recomputing it cold.
+        """
         if stream_id in self._slot_of:
             raise ValueError(f"stream {stream_id!r} already admitted")
         if not self._free:
@@ -199,6 +223,13 @@ class StreamEngine:
                 jnp.asarray(task_w, jnp.float32)
             ),
         )
+        if snapshot is not None:
+            from . import state_store as ss
+            self._state = ss.restore_slot(self._state, self.cfg, slot,
+                                          snapshot)
+            self._served_count[stream_id] = int(snapshot.window_seq)
+        else:
+            self._served_count[stream_id] = 0
         self.stats.admitted += 1
         if self._obs is not None:
             self._obs.on_admit()
@@ -216,6 +247,9 @@ class StreamEngine:
         self._pending[slot].clear()
         self._free.append(slot)
         self.stats.retired += 1
+        self._served_count.pop(stream_id, None)
+        if self._store is not None:
+            self._store.delete(stream_id)
         if self._obs is not None:
             self._obs.on_retire(n_dropped)
 
@@ -322,12 +356,47 @@ class StreamEngine:
             f = float(np.sum(np.asarray(path) == PATH_FULL)) / nv
             self._full_ewma += AUTO_ALPHA * (f - self._full_ewma)
 
-    def _fold_one(self, tel, rec, ctxs=None) -> None:
+    # -- externalized session state (write-through snapshots) ----------------
+
+    def _snap_meta(self) -> dict:
+        """Host-side metadata stamped into every snapshot: the engine
+        family, the auto dispatcher's path-mix EWMA (so a warm-started
+        engine resumes load-aware dispatch where the dead one left off),
+        and the latched knob plan, if any."""
+        meta = {"engine": self._ENGINE, "full_ewma": float(self._full_ewma)}
+        if self._plan is not None:
+            meta["plan"] = {"banks": int(self._plan.banks),
+                            "planes": int(self._plan.planes)}
+        return meta
+
+    def _collect_snaps(self, served):
+        """Advance served-window counts and slice snapshot rows for streams
+        that hit the ``snapshot_every`` cadence this step.
+
+        Called right after ``_dispatch`` (the state already points at the
+        post-step arrays), under the async engine's lock. The slices are
+        *lazy device views* — materialization to host (and the store write)
+        happens on the deferred telemetry fold (sync) or in the collector
+        after ``block_until_ready`` (async), so the dispatcher never blocks
+        on a snapshot."""
+        from . import state_store as ss
+        snaps = []
+        for stream_id, slot, _extra in served:
+            n = self._served_count.get(stream_id, 0) + 1
+            self._served_count[stream_id] = n
+            if n % self._snapshot_every == 0:
+                snaps.append(ss.snapshot_rows(
+                    self._state, slot, stream_id, n, self._snap_meta()))
+        return snaps
+
+    def _fold_one(self, tel, rec, ctxs=None, snaps=None) -> None:
         """Move one backlogged step's telemetry to host and consume it:
         the auto dispatcher's path-mix EWMA, the observer's metric digest +
         flight-record completion (``rec`` is the step's open flight record,
-        or None), and — when the step was traced — completing its windows'
-        contexts with the resolved plan/lowering off the same digest."""
+        or None), when the step was traced — completing its windows'
+        contexts with the resolved plan/lowering off the same digest — and
+        any pending state-store snapshots (materialized + written here,
+        off the dispatch path)."""
         tel_h = jax.tree_util.tree_map(np.asarray, tel)
         if self._auto:
             self._observe_path_mix(tel_h.path, tel_h.n_valid)
@@ -338,6 +407,11 @@ class StreamEngine:
             if digest is None:
                 digest = telemetry_digest(tel_h)
             self._trace_finish(ctxs, rec, digest)
+        if snaps:
+            from . import state_store as ss
+            memo = {}  # one host transfer per stacked leaf per fold batch
+            for pending in snaps:
+                self._store.put(ss.materialize_snapshot(pending, memo))
 
     def _trace_finish(self, ctxs, rec, digest) -> None:
         """Complete one step's trace contexts: stamp the resolved plan and
@@ -432,6 +506,11 @@ class StreamEngine:
         # traced steps open a trace_scope around the assemble/dispatch
         # spans: _assemble populates step_ctxs as it admits windows, and
         # each span stamps its interval onto them at exit
+        # chaos injection: the sync engine plays both worker roles inside
+        # step() — "dispatcher" fires before assemble, "collector" after
+        # the telemetry fold (mirroring where the async threads would die)
+        if self._fault is not None:
+            self._fault.maybe_fire("dispatcher", self.stats.steps)
         step_ctxs = None
         scope = NULL_SPAN
         if self._tracer is not None:
@@ -450,8 +529,11 @@ class StreamEngine:
         self.stats.steps += 1
         self.stats.windows += len(served)
         self.stats.pad_slots += self.n_slots - len(served)
+        snaps = self._collect_snaps(served) \
+            if self._store is not None else None
 
-        if self._auto or self._obs is not None or self._tracer is not None:
+        if self._auto or self._obs is not None or self._tracer is not None \
+                or self._store is not None:
             rec = None
             if self._obs is not None:
                 rec = self._obs.on_dispatch(
@@ -463,9 +545,12 @@ class StreamEngine:
                     rec["queue_depth"] = int(qd.max())
             # deferred fold: this step's telemetry enters the backlog, and
             # only entries at least one dispatch old are consumed now
-            self._tel_backlog.append((tel, rec, step_ctxs))
+            self._tel_backlog.append((tel, rec, step_ctxs, snaps))
             with self._sp_observe:
                 self._fold_telemetry()
+
+        if self._fault is not None:
+            self._fault.maybe_fire("collector", self.stats.steps)
 
         results = {}
         for stream_id, slot, _extra in served:

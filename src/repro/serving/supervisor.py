@@ -1,0 +1,490 @@
+"""Supervised serving: engine restart, warm-start re-admission, replay.
+
+The training side has had checkpoint/restart supervision since the seed
+(``runtime/fault.py``); this is its serving analogue. A
+:class:`ServeSupervisor` wraps either engine family behind the same
+admit/submit/flush surface and turns worker death from a terminal event
+into a bounded recovery:
+
+1. **Detect** — any engine failure surfaces as a typed
+   :class:`~repro.runtime.fault.EngineDead` (cause-carrying, in-flight
+   count at death). Pending futures fail with it, never with a bare
+   RuntimeError, so clients distinguish crash (replayable) from
+   :class:`~repro.serving.deadline.WindowShed` (admission policy).
+2. **Restart** — the supervisor rebuilds a fresh engine via the caller's
+   ``factory`` under exponential backoff (``backoff_s * 2**(n-1)``,
+   capped), bounded by ``max_restarts``.
+3. **Warm-start re-admission** — every live stream re-admits into the new
+   engine with its cache rows, task weights and ``acc_tag``s restored
+   from the :class:`~repro.serving.state_store.StateStore` snapshot the
+   old engine wrote through; the engine-level path-mix EWMA restores from
+   the newest snapshot's meta, so the auto-dispatch lowering choice does
+   not reset to cold-cache pessimism.
+4. **Replay** — the supervisor journals every submitted window until a
+   store snapshot covers it. On recovery, journaled windows *after* the
+   snapshot re-run in submission order: already-resolved ones rebuild the
+   cache state silently (their outer futures stay resolved; shed windows
+   are skipped — they never advanced state), unresolved ones re-dispatch
+   into their original futures. With snapshot cadence 1 no silent re-runs
+   are needed and replayed outputs are bit-identical to a fault-free run;
+   with coarser cadences the re-run prefix restores bit-identity as long
+   as admission control cannot re-decide a replayed window (tracker off,
+   or generous budgets) — see docs/robustness.md.
+5. **Crash-loop breaker** — ``breaker_restarts`` deaths inside
+   ``breaker_window_s`` trips graceful degradation: the supervisor
+   latches a cheap :class:`~repro.control.plan.KnobPlan` (the bottom of
+   ``control.governor.build_ladder`` unless ``degrade_plan`` overrides)
+   on the rebuilt engine, trading accuracy headroom for survival — the
+   same move the governor makes under deadline pressure, triggered by
+   instability instead of slack. Engines owned by a live governor keep
+   their governor (the breaker then only records the trip).
+
+Observability: ``torr_engine_restarts_total``,
+``torr_windows_replayed_total``, a ``torr_recovery_duration_seconds``
+histogram, and ``engine_crash`` / ``engine_recovered`` epoch events in
+the flight recorder (rendered as instant markers in the Perfetto trace).
+The counters reconcile exactly with the flight events — asserted in
+tests/test_fault_serving.py.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..runtime.fault import EngineDead
+from .async_engine import AsyncStreamEngine
+from .deadline import WindowShed
+from .state_store import StateStore
+
+# window status in the replay journal
+_PENDING, _DONE, _SHED = "pending", "done", "shed"
+
+
+@dataclasses.dataclass
+class _Window:
+    seq: int                    # per-stream submission index (0-based)
+    q: np.ndarray
+    valid: np.ndarray
+    boxes: np.ndarray
+    outer: Future
+    status: str = _PENDING
+
+
+@dataclasses.dataclass
+class _Stream:
+    sid: object
+    task_w: np.ndarray
+    next_seq: int = 0
+    journal: collections.deque = dataclasses.field(
+        default_factory=collections.deque)
+    # sync engines return results positionally (FIFO per slot, no futures):
+    # one entry per engine-submitted window, in submission order — the
+    # _Window a result resolves, or None for a silent warm-start re-run
+    # whose output is discarded. Rebuilt from scratch on every recovery.
+    expect: collections.deque = dataclasses.field(
+        default_factory=collections.deque)
+
+
+class ServeSupervisor:
+    """Crash-supervised facade over a (re-buildable) stream engine.
+
+    ``factory()`` must return a *fresh* engine each call, wired to the
+    same :class:`StateStore` (and snapshot cadence) the supervisor reads
+    on recovery; the supervisor owns admit/retire bookkeeping, so the
+    factory must return an engine with no admitted streams.
+    """
+
+    def __init__(
+        self,
+        factory: Callable[[], object],
+        store: StateStore,
+        *,
+        max_restarts: int = 5,
+        backoff_s: float = 0.02,
+        backoff_cap_s: float = 1.0,
+        breaker_restarts: int = 3,
+        breaker_window_s: float = 30.0,
+        degrade_plan=None,
+        metrics=None,
+        flight=None,
+        clock=time.monotonic,
+        sleep=time.sleep,
+    ):
+        self._factory = factory
+        self.store = store
+        self.max_restarts = max_restarts
+        self._backoff_s = backoff_s
+        self._backoff_cap_s = backoff_cap_s
+        self._breaker_restarts = breaker_restarts
+        self._breaker_window_s = breaker_window_s
+        self._degrade_plan = degrade_plan
+        self._flight = flight
+        self._clock = clock
+        self._sleep = sleep
+        self.restarts = 0
+        self.windows_replayed = 0
+        self.windows_rerun = 0
+        self.degraded = False
+        self._recent_crashes: collections.deque = collections.deque()
+        self._streams: Dict[object, _Stream] = {}
+        self._lock = threading.RLock()
+        self._dead: Optional[EngineDead] = None  # flagged by callbacks
+        self._epoch = 0   # bumped per rebuild; stale callbacks are ignored
+        self._m_restarts = self._m_replayed = self._h_recovery = None
+        if metrics is not None:
+            from ..obs.metrics import LATENCY_BUCKETS_S
+            self._m_restarts = metrics.counter(
+                "torr_engine_restarts_total",
+                "Supervised engine rebuilds after worker death.")
+            self._m_replayed = metrics.counter(
+                "torr_windows_replayed_total",
+                "Unresolved in-flight windows re-dispatched after a "
+                "restart.")
+            self._h_recovery = metrics.histogram(
+                "torr_recovery_duration_seconds",
+                "Crash detection to replay-complete recovery latency.",
+                buckets=LATENCY_BUCKETS_S)
+        self.engine = factory()
+        self._async = isinstance(self.engine, AsyncStreamEngine)
+
+    # -- stream lifecycle ----------------------------------------------------
+
+    def admit(self, stream_id, task_w) -> int:
+        """Admit a stream — warm-starting it if the store already holds a
+        snapshot (a previous *process* served it and died: cross-process
+        resume). The journal's sequence numbers continue from the
+        snapshot's ``window_seq``, so the caller must skip that many
+        already-served windows of its (deterministic) input stream."""
+        with self._lock:
+            self._heal_if_dead()
+            task_w = np.asarray(task_w, np.float32)
+            snap = self.store.get(stream_id)
+            slot = self._call_engine(
+                lambda: self.engine.admit(stream_id, task_w, snapshot=snap))
+            rec = _Stream(sid=stream_id, task_w=task_w)
+            if snap is not None:
+                rec.next_seq = int(snap.window_seq)
+            self._streams[stream_id] = rec
+            return slot
+
+    def retire(self, stream_id) -> None:
+        """Retire a stream cleanly: slot freed, session state deleted."""
+        with self._lock:
+            self._heal_if_dead()
+            self._streams.pop(stream_id, None)
+            try:
+                self.engine.retire(stream_id)
+            except EngineDead:
+                pass    # the rebuilt engine will simply not re-admit it
+            self.store.delete(stream_id)
+
+    def submit(self, stream_id, q_packed, valid, boxes) -> Future:
+        """Enqueue one window; the returned future survives engine death —
+        it resolves once the window is served (possibly by a rebuilt
+        engine) or fails with ``WindowShed`` / terminal ``EngineDead``."""
+        with self._lock:
+            self._heal_if_dead()
+            rec = self._streams[stream_id]
+            win = _Window(
+                seq=rec.next_seq,
+                q=np.asarray(q_packed, np.uint32),
+                valid=np.asarray(valid, bool),
+                boxes=np.asarray(boxes, np.float32),
+                outer=Future(),
+            )
+            rec.next_seq += 1
+            rec.journal.append(win)
+            self._call_engine(
+                lambda: self._submit_inner(stream_id, rec, win))
+            return win.outer
+
+    def flush(self, timeout: float | None = None) -> None:
+        """Serve until every submitted window has resolved, recovering
+        through any number of worker deaths up to ``max_restarts``."""
+        deadline = None if timeout is None else self._clock() + timeout
+        while True:
+            try:
+                if self._async:
+                    left = (None if deadline is None
+                            else max(deadline - self._clock(), 0.0))
+                    self.engine.flush(timeout=left)
+                else:
+                    self._drive_sync()
+            except EngineDead as e:
+                with self._lock:
+                    self._recover(e)
+                continue
+            with self._lock:
+                if self._dead is not None:
+                    self._heal_if_dead()
+                    continue
+                if self._n_pending() == 0:
+                    return
+            # pending windows but a clean, idle engine: a replay handed to
+            # the engine is still settling — yield and re-enter the drain
+            self._sleep(0.001)
+
+    def close(self, drain: bool = True) -> None:
+        if drain:
+            self.flush()
+        if self._async:
+            try:
+                self.engine.close(drain=False)
+            except EngineDead:
+                pass
+
+    def __enter__(self) -> "ServeSupervisor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    # -- engine call guard ---------------------------------------------------
+
+    def _call_engine(self, fn):
+        """Run one engine call, recovering (and retrying) on EngineDead."""
+        while True:
+            try:
+                return fn()
+            except EngineDead as e:
+                self._recover(e)
+
+    def _heal_if_dead(self) -> None:
+        if self._dead is not None:
+            dead, self._dead = self._dead, None
+            self._recover(dead)
+
+    def _n_pending(self) -> int:
+        return sum(1 for rec in self._streams.values()
+                   for w in rec.journal if w.status == _PENDING)
+
+    # -- submission plumbing -------------------------------------------------
+
+    def _submit_inner(self, stream_id, rec: _Stream, win: _Window) -> None:
+        if self._async:
+            fut = self.engine.submit(stream_id, win.q, win.valid, win.boxes)
+            fut.add_done_callback(
+                lambda f, w=win, r=rec, e=self._epoch:
+                self._on_done(r, w, f, e))
+        else:
+            self.engine.submit(stream_id, win.q, win.valid, win.boxes)
+            rec.expect.append(win)
+
+    def _on_done(self, rec: _Stream, win: _Window, fut: Future,
+                 epoch: int = 0) -> None:
+        """Inner-future resolution (collector thread). Engine death and
+        cancellation leave the window pending for replay; everything else
+        propagates to the caller-facing outer future. ``epoch`` is the
+        engine generation that issued the inner future: an abandoned
+        engine's collector may deliver late — its results are accepted
+        only while the window is still pending (they are bit-identical to
+        what the replay will produce), and its death flags are ignored so
+        a stale crash can't restart a healthy replacement."""
+        if fut.cancelled():
+            return
+        exc = fut.exception()
+        if isinstance(exc, EngineDead):
+            with self._lock:
+                if epoch == self._epoch and self._dead is None:
+                    self._dead = exc
+            return
+        with self._lock:
+            if win.status != _PENDING:
+                return  # duplicate delivery (abandoned engine vs replay)
+            win.status = _SHED if isinstance(exc, WindowShed) else _DONE
+            self._trim(rec)
+        if exc is None:
+            win.outer.set_result(fut.result())
+        else:
+            win.outer.set_exception(exc)
+
+    def _trim(self, rec: _Stream) -> None:
+        """Drop the journal prefix that is both resolved and covered by a
+        store snapshot — those windows can never need replay."""
+        if not rec.journal:
+            return
+        covered = self.store.latest_seq(rec.sid)
+        while rec.journal and rec.journal[0].status != _PENDING \
+                and rec.journal[0].seq < covered:
+            rec.journal.popleft()
+
+    # -- sync drive ----------------------------------------------------------
+
+    def _drive_sync(self) -> None:
+        """Step the sync engine until its backlog drains, resolving outer
+        futures per served window; any step-time failure surfaces as a
+        typed EngineDead for the shared recovery path."""
+        import jax
+
+        eng = self.engine
+        try:
+            while eng.busy:
+                results = eng.step()
+                with self._lock:
+                    for sid, out_tel in results.items():
+                        rec = self._streams.get(sid)
+                        if rec is None:
+                            continue
+                        win = rec.expect.popleft() if rec.expect else None
+                        if win is None or win.status != _PENDING:
+                            continue    # a silent warm-start re-run
+                        win.status = _DONE
+                        self._trim(rec)
+                        win.outer.set_result(jax.tree_util.tree_map(
+                            np.asarray, out_tel))
+            eng.flush_telemetry()  # fold deferred snapshots/telemetry through
+        except EngineDead:
+            raise
+        except Exception as e:
+            raise EngineDead(cause=e, inflight=self._n_pending(),
+                             thread="dispatcher") from e
+
+    # -- recovery ------------------------------------------------------------
+
+    def _recover(self, dead: EngineDead) -> None:
+        """Rebuild the engine, warm-start every stream, replay the journal.
+
+        Caller must hold the lock (or be the only thread, pre-start)."""
+        t0 = self._clock()
+        self.restarts += 1
+        self._dead = None
+        if self._m_restarts is not None:
+            self._m_restarts.inc()
+        if self._flight is not None:
+            self._flight.record(
+                event="engine_crash", ts_us=_now_us(),
+                cause=f"{type(dead.cause).__name__}: {dead.cause}"
+                if dead.cause is not None else None,
+                thread=dead.thread, inflight=dead.inflight,
+                restarts=self.restarts)
+        if self.restarts > self.max_restarts:
+            self._fail_pending(dead)
+            raise dead
+        # crash-loop breaker bookkeeping (before the backoff sleep so the
+        # window measures crash arrivals, not our own sleeps)
+        self._recent_crashes.append(t0)
+        while self._recent_crashes and \
+                t0 - self._recent_crashes[0] > self._breaker_window_s:
+            self._recent_crashes.popleft()
+        trip = len(self._recent_crashes) >= self._breaker_restarts
+        n = min(self.restarts, 16)
+        self._sleep(min(self._backoff_s * (2.0 ** (n - 1)),
+                        self._backoff_cap_s))
+        old, self.engine = self.engine, None
+        if self._async and old is not None:
+            try:
+                # stop WITHOUT joining: a mid-delivery collector may be
+                # blocked on self._lock inside _on_done — close()'s joins
+                # would deadlock here. Its late deliveries are handled by
+                # the epoch/status guards in _on_done.
+                old.abandon()
+            except BaseException:   # noqa: BLE001 — old engine is garbage
+                pass
+        self._epoch += 1
+        self.engine = self._factory()
+        self._async = isinstance(self.engine, AsyncStreamEngine)
+        if trip and not self.degraded:
+            self.degraded = True
+            self._apply_degrade()
+        elif self.degraded:
+            self._apply_degrade()   # keep the cheap plan across rebuilds
+        n_replayed = n_rerun = 0
+        full_ewma = None
+        for sid, rec in self._streams.items():
+            snap = self.store.get(sid)
+            self.engine.admit(sid, rec.task_w, snapshot=snap)
+            base = snap.window_seq if snap is not None else 0
+            if snap is not None and "full_ewma" in snap.meta:
+                full_ewma = snap.meta["full_ewma"]
+            rec.expect.clear()  # dead engine's positional results are gone
+            # windows at or before the snapshot boundary are fully covered
+            while rec.journal and rec.journal[0].seq < base \
+                    and rec.journal[0].status != _PENDING:
+                rec.journal.popleft()
+            for win in rec.journal:
+                if win.seq < base and win.status != _PENDING:
+                    continue        # resolved & snapshotted (mixed prefix)
+                if win.status == _SHED:
+                    continue        # never advanced state: skip on replay
+                if win.status == _DONE:
+                    # silent re-run: rebuilds cache state between the
+                    # snapshot boundary and the crash; output discarded
+                    n_rerun += 1
+                    self.engine.submit(sid, win.q, win.valid, win.boxes)
+                    if not self._async:
+                        rec.expect.append(None)
+                else:
+                    n_replayed += 1
+                    self._submit_inner(sid, rec, win)
+        if full_ewma is not None:
+            self.engine._full_ewma = float(full_ewma)
+        if self._async:
+            # a paused factory engine must be started here — and only
+            # after the replay submissions above, so the rebuilt
+            # dispatcher sees the full replay backlog at once (the same
+            # drain schedule a fault-free run would have used)
+            self.engine.start()
+        self.windows_replayed += n_replayed
+        self.windows_rerun += n_rerun
+        dur = self._clock() - t0
+        if self._m_replayed is not None and n_replayed:
+            self._m_replayed.inc(n_replayed)
+        if self._h_recovery is not None:
+            self._h_recovery.observe(dur)
+        if self._flight is not None:
+            self._flight.record(
+                event="engine_recovered", ts_us=_now_us(),
+                duration_s=dur, replayed=n_replayed, rerun=n_rerun,
+                restarts=self.restarts, degraded=self.degraded)
+
+    def _apply_degrade(self) -> None:
+        """Crash-loop graceful degradation: latch a cheap plan (precision/
+        bank-reduced, relaxed taus → bypass-heavy admission) on the fresh
+        engine. Governor-owned engines keep their governor — set_plan is
+        refused there by design, so the trip is record-only."""
+        if getattr(self.engine, "_governor", None) is not None:
+            return
+        plan = self._degrade_plan
+        if plan is None:
+            from ..control.governor import build_ladder
+            plan = build_ladder(self.engine.cfg)[-1]
+        self.engine.set_plan(plan)
+
+    def _fail_pending(self, dead: EngineDead) -> None:
+        for rec in self._streams.values():
+            for win in rec.journal:
+                if win.status == _PENDING and not win.outer.done():
+                    win.status = _DONE
+                    win.outer.set_exception(dead)
+
+    # -- telemetry -----------------------------------------------------------
+
+    def summary(self) -> dict:
+        with self._lock:
+            return {
+                "restarts": self.restarts,
+                "windows_replayed": self.windows_replayed,
+                "windows_rerun": self.windows_rerun,
+                "degraded": self.degraded,
+                "pending": self._n_pending(),
+                "streams": len(self._streams),
+            }
+
+
+def _now_us() -> float:
+    from ..obs.trace import now_us
+    return now_us()
+
+
+def recovery_events(records) -> List[dict]:
+    """The crash/recovery epoch events of a flight record stream, in
+    order — the reconciliation source for ``torr_engine_restarts_total``
+    and ``torr_windows_replayed_total``."""
+    return [r for r in records
+            if r.get("event") in ("engine_crash", "engine_recovered")]

@@ -103,3 +103,53 @@ def test_straggler_watchdog():
     assert wd.observe(9, 0.5) == "evict"      # second consecutive
     assert len(wd.events) == 2
     assert wd.observe(10, 0.1) == "ok"        # recovers
+
+
+def test_restore_falls_back_past_torn_latest():
+    """A SIGKILL/power-cut can leave the newest checkpoint directory
+    complete-looking but truncated; step=None restore must warn, skip it
+    and restore the previous step — an explicit step still raises."""
+    import pathlib
+    import warnings
+
+    d = tempfile.mkdtemp()
+    try:
+        cm = CheckpointManager(d, keep_last=3)
+        tree = {"a": jnp.arange(6.0), "b": jnp.ones((2,), jnp.int32)}
+        cm.save(1, tree)
+        cm.save(2, jax.tree.map(lambda x: x * 2, tree))
+        # truncate the newest payload mid-file: torn zip central directory
+        leaves = pathlib.Path(d) / "step_00000002" / "leaves.npz"
+        raw = leaves.read_bytes()
+        leaves.write_bytes(raw[: len(raw) // 2])
+
+        with pytest.warns(RuntimeWarning, match="torn"):
+            restored, step = cm.restore(tree)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+        # trusting an explicit step surfaces the damage loudly
+        with pytest.raises(Exception):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                cm.restore(tree, step=2)
+    finally:
+        shutil.rmtree(d)
+
+
+def test_restore_raises_when_no_readable_checkpoint():
+    import pathlib
+
+    d = tempfile.mkdtemp()
+    try:
+        cm = CheckpointManager(d, keep_last=3)
+        cm.save(1, {"x": jnp.zeros(2)})
+        leaves = pathlib.Path(d) / "step_00000001" / "leaves.npz"
+        leaves.write_bytes(b"\x00" * 8)
+        import warnings
+        with pytest.raises(FileNotFoundError, match="no readable"):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                cm.restore({"x": jnp.zeros(2)})
+    finally:
+        shutil.rmtree(d)

@@ -107,3 +107,56 @@ def test_window_shed_message_carries_context():
     e = WindowShed("cam3", 0.0123)
     assert "cam3" in str(e) and "12.30 ms" in str(e)
     assert e.lateness_s == pytest.approx(0.0123)
+
+
+def test_window_shed_retry_after_hint_in_message():
+    e = WindowShed("cam1", 0.020, retry_after_s=0.0335)
+    assert e.retry_after_s == pytest.approx(0.0335)
+    assert "retry after 33.50 ms" in str(e)
+    assert WindowShed("cam1", 0.020).retry_after_s is None
+
+
+@pytest.mark.parametrize("backlog,step_ms", [
+    (0, 1.0), (0, 20.0), (2, 5.0), (4, 5.0), (8, 3.0), (30, 2.0),
+    (1, 16.0), (0, 16.0),
+])
+def test_retry_after_backoff_readmits(backlog, step_ms):
+    """The shed hint is exactly what makes the pure decision table ADMIT
+    again under its own drain model: after backing off by the hint, the
+    windows the backlog drained in the meantime bring a fresh arrival's
+    completion projection back inside the budget."""
+    import math
+
+    from repro.serving.deadline import retry_after_s
+
+    step = step_ms * MS
+    hint = retry_after_s(backlog, step, POL)
+    assert hint >= 0.0
+    if hint == 0.0:
+        # nothing to wait for: the table admits a fresh window right now
+        assert decide(0.0, backlog, step, POL) == Decision.ADMIT
+        return
+    # without backing off, the fresh window would NOT be admitted
+    assert decide(0.0, backlog, step, POL) != Decision.ADMIT
+    if step > POL.budget_s:
+        # a single window already blows the budget: no amount of drain
+        # re-admits, and the hint reflects that residual overrun
+        assert hint >= step - POL.budget_s - 1e-12
+        return
+    # after the hint, the backlog has drained hint/step windows (the
+    # decision table's own one-window-per-step projection)
+    drained = math.ceil(hint / step - 1e-9)
+    assert 0 <= drained <= backlog
+    assert decide(0.0, backlog - drained, step, POL) == Decision.ADMIT
+
+
+def test_tracker_retry_after_hint_tracks_step_ema():
+    t = [0.0]
+    tr = DeadlineTracker(POL, clock=lambda: t[0])
+    from repro.serving.deadline import retry_after_s
+    assert tr.retry_after_hint(4) == pytest.approx(
+        retry_after_s(4, POL.step_init_s, POL))
+    tr.observe_step(8 * MS)     # step EMA moves; the hint moves with it
+    assert tr.retry_after_hint(4) == pytest.approx(
+        retry_after_s(4, tr._step_s, POL))
+    assert tr.retry_after_hint(4) > 0.0
