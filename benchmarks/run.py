@@ -64,7 +64,7 @@ def main() -> None:
                          "(e.g. table7,table8)")
     args = ap.parse_args()
 
-    from . import (autotune_blocks, chaos_recovery, micro_aligner,
+    from . import (autotune_blocks, chaos_recovery, loadgen, micro_aligner,
                    roofline_summary, table1_hw, table2_envelope,
                    table3_runtime, table4_throughput, table5_accuracy,
                    table6_multistream, table7_async, table8_pareto,
@@ -81,6 +81,7 @@ def main() -> None:
         ("table8", table8_pareto),
         ("torr_ablation", torr_reuse_ablation),
         ("chaos", chaos_recovery),
+        ("loadgen", loadgen),
         ("micro", micro_aligner),
         ("autotune", autotune_blocks),
         ("roofline", roofline_summary),
@@ -96,35 +97,60 @@ def main() -> None:
         suites = [(n, m) for n, m in suites if n in names]
     failed = []
     report = {"meta": run_meta()}
+
+    def _write_report() -> None:
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=1, sort_keys=True)
+            print(f"wrote {args.json}", file=sys.stderr)
+
     print("name,value,derived")
-    for name, mod in suites:
-        t0 = time.time()
-        rows = []
-        try:
-            for row in mod.run():
-                rows.append(row)
-                print(",".join(str(x) for x in row), flush=True)
-            ok = True
-            print(f"{name}/_suite_seconds,{time.time()-t0:.1f},ok", flush=True)
-        except Exception:  # noqa: BLE001
-            ok = False
-            failed.append(name)
-            traceback.print_exc()
-            print(f"{name}/_suite_seconds,{time.time()-t0:.1f},FAILED",
-                  flush=True)
-        report[name] = {"rows": [list(r) for r in rows],
-                        "seconds": round(time.time() - t0, 1), "ok": ok}
-        # suites instrumented with repro.obs (table7/table8/micro) expose
-        # their registry snapshot for the artifact
-        snap_fn = getattr(mod, "metrics_snapshot", None)
-        if snap_fn is not None:
-            snap = snap_fn()
-            if snap is not None:
-                report[name]["metrics"] = snap
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(report, f, indent=1, sort_keys=True)
-        print(f"wrote {args.json}", file=sys.stderr)
+    try:
+        for name, mod in suites:
+            t0 = time.time()
+            rows = []
+            error = None
+            try:
+                for row in mod.run():
+                    rows.append(row)
+                    print(",".join(str(x) for x in row), flush=True)
+                ok = True
+                print(f"{name}/_suite_seconds,{time.time()-t0:.1f},ok",
+                      flush=True)
+            except Exception:  # noqa: BLE001
+                ok = False
+                error = traceback.format_exc()
+                failed.append(name)
+                traceback.print_exc()
+                print(f"{name}/_suite_seconds,{time.time()-t0:.1f},FAILED",
+                      flush=True)
+            report[name] = {"rows": [list(r) for r in rows],
+                            "seconds": round(time.time() - t0, 1), "ok": ok}
+            if error is not None:
+                # keep the partial rows AND the cause: a suite that dies
+                # mid-run still contributes everything it measured
+                report[name]["error"] = error
+            # suites instrumented with repro.obs (table7/table8/micro)
+            # expose their registry snapshot for the artifact; a snapshot
+            # crash must not discard the suite's rows
+            snap_fn = getattr(mod, "metrics_snapshot", None)
+            if snap_fn is not None:
+                try:
+                    snap = snap_fn()
+                except Exception:  # noqa: BLE001
+                    report[name].setdefault(
+                        "error", traceback.format_exc())
+                else:
+                    if snap is not None:
+                        report[name]["metrics"] = snap
+    except BaseException:
+        # KeyboardInterrupt / SystemExit / MemoryError mid-run: the JSON
+        # still lands with every completed suite's rows and an "error"
+        # marker instead of being discarded wholesale
+        report["error"] = traceback.format_exc()
+        _write_report()
+        raise
+    _write_report()
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

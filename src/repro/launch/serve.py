@@ -277,6 +277,8 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
             sup = ServeSupervisor(make_engine, store, metrics=registry,
                                   flight=flight)
             eng = sup.engine
+            if server is not None:
+                server.set_ready(sup.health)    # /readyz mirrors recovery
         else:
             eng = make_engine()
     else:
@@ -519,6 +521,198 @@ def run_torr_streams(n_streams: int, n_frames: int, n_slots: int = 0,
     return result
 
 
+def run_torr_gateway(n_slots: int = 8, serial: bool = False, rt: str = "",
+                     governor: bool = False, fused: str | None = None,
+                     metrics_port: int | None = None, metrics_json: str = "",
+                     flight_jsonl: str = "", flight_capacity: int = 4096,
+                     trace_json: str = "", supervise: bool = False,
+                     state_store: str = "", snapshot_every: int = 1,
+                     fault_at: int | None = None,
+                     fault_kind: str = "dispatcher",
+                     gateway_port: int = 0, gateway_host: str = "127.0.0.1",
+                     gateway_rate: float = 200.0, gateway_burst: int = 100,
+                     gateway_deadline_ms: float = 2000.0,
+                     gateway_max_conns: int = 64,
+                     gateway_tenant_sessions: int = 8,
+                     run_seconds: float = 0.0,
+                     use_async: bool = True):
+    """Serve the TorR engine behind the network gateway until SIGTERM.
+
+    The same engine stack as :func:`run_torr_streams` — config, synthetic
+    TOOD world, observability tier, state store, chaos plan, supervisor —
+    but instead of driving synthetic streams in-process, the
+    :class:`repro.serving.gateway.Gateway` listens on
+    ``gateway_host:gateway_port`` (0 = ephemeral, printed as a
+    ``listening`` line that ``benchmarks/loadgen.py --spawn`` parses) and
+    clients open tenant sessions over real sockets. SIGINT/SIGTERM
+    triggers the graceful drain: stop accepting, flush in-flight
+    requests, close the engine, write every armed artifact, exit 0.
+
+    ``run_seconds > 0`` bounds the serve window (tests); 0 serves until
+    a signal arrives.
+    """
+    from ..data import tood_synth as ts
+    from ..serving import tood_pipelines as tp
+    from ..serving.gateway import Gateway, GatewayLimits, SyncDriver
+
+    supervise = supervise or fault_at is not None
+    use_async = use_async or bool(rt) or governor or supervise
+
+    cfg = TorrConfig(D=2048, B=8, M=64, K=16, N_max=16, delta_budget=256)
+    world = ts.make_world(seed=0, M=cfg.M, d=cfg.feat_dim)
+    sys_ = tp.build_system(world, cfg, seed=0)
+
+    registry = flight = server = tracer = slo = None
+    if metrics_port is not None or metrics_json or flight_jsonl or trace_json:
+        from ..obs import FlightRecorder, MetricsRegistry, MetricsServer
+        registry = MetricsRegistry()
+        flight = FlightRecorder(flight_capacity, metrics=registry)
+        if trace_json:
+            from ..obs import Tracer
+            tracer = Tracer(metrics=registry)
+        if metrics_port is not None:
+            server = MetricsServer(registry, port=metrics_port)
+            print(f"[serve/gateway] metrics endpoint "
+                  f"http://127.0.0.1:{server.start()}/metrics")
+
+    store = fault = sup = None
+    if supervise or state_store:
+        from ..serving.state_store import InMemoryStateStore, JsonlStateStore
+        store = (JsonlStateStore(state_store, metrics=registry)
+                 if state_store else InMemoryStateStore(metrics=registry))
+    if fault_at is not None:
+        from ..runtime.fault import FaultPlan
+        fault = FaultPlan(at_step=fault_at, thread=fault_kind,
+                          kind=fault_kind)
+
+    driver = None
+    if use_async:
+        from ..serving.async_engine import AsyncStreamEngine
+        from ..serving.deadline import DeadlineTracker, policy_for
+        if governor and not rt:
+            rt = "RT-60"
+        tracker = None
+        if rt:
+            if registry is not None:
+                from ..obs import SLOMonitor
+                slo = SLOMonitor(metrics=registry, flight=flight)
+            tracker = DeadlineTracker(policy_for(rt), metrics=registry,
+                                      slo=slo)
+        gov = None
+        if governor:
+            from ..control import Governor, policy_from_env
+            gov = Governor(cfg, policy_from_env(rt), metrics=registry)
+
+        def make_engine():
+            return AsyncStreamEngine(
+                cfg, sys_.im, n_slots=n_slots, serial=serial, fused=fused,
+                tracker=tracker, governor=gov, paused=True,
+                metrics=registry, flight=flight, tracer=tracer,
+                store=store, snapshot_every=snapshot_every,
+                fault_plan=fault)
+
+        if supervise:
+            from ..serving.supervisor import ServeSupervisor
+            sup = ServeSupervisor(make_engine, store, metrics=registry,
+                                  flight=flight)
+            eng = sup.engine
+            if server is not None:
+                server.set_ready(sup.health)
+        else:
+            eng = make_engine()
+        front = sup if sup is not None else eng
+    else:
+        from ..serving.stream_engine import StreamEngine
+        eng = StreamEngine(cfg, sys_.im, n_slots=n_slots, serial=serial,
+                           fused=fused, metrics=registry, flight=flight,
+                           tracer=tracer, store=store,
+                           snapshot_every=snapshot_every, fault_plan=fault)
+        driver = SyncDriver(eng, metrics=registry)
+        front = driver
+
+    eng.warmup()
+    if use_async:
+        eng.start()
+
+    limits = GatewayLimits(
+        rate_per_s=gateway_rate, burst=gateway_burst,
+        request_deadline_s=gateway_deadline_ms / 1e3,
+        max_connections=gateway_max_conns,
+        max_sessions_per_tenant=gateway_tenant_sessions)
+    gw = Gateway(front, cfg, sys_.task_w, limits=limits,
+                 host=gateway_host, port=gateway_port,
+                 metrics=registry, flight=flight)
+    if server is not None and sup is None:
+        server.set_ready(gw._front_health)
+
+    interrupted = False
+    prev_handlers = None
+    try:
+        prev_handlers = _install_signal_handlers()
+        gw.start()
+        # the loadgen --spawn handshake line: printed only once the
+        # socket accepts (flush so a pipe reader sees it immediately)
+        print(f"[serve/gateway] listening on "
+              f"http://{gateway_host}:{gw.port} "
+              f"(SIGINT/SIGTERM drains and flushes artifacts)", flush=True)
+        t_end = None if run_seconds <= 0 else time.time() + run_seconds
+        while t_end is None or time.time() < t_end:
+            time.sleep(0.2)
+    except KeyboardInterrupt:
+        interrupted = True
+        print("[serve/gateway] signal received — draining", flush=True)
+    finally:
+        if prev_handlers is not None:
+            _restore_signal_handlers(prev_handlers)
+
+    drained = gw.drain(timeout=max(10.0, 2 * limits.request_deadline_s))
+    gw.close()
+    summary = gw.summary()
+    print(f"[serve/gateway] drained={drained} sessions={summary['sessions']}")
+    from ..runtime.fault import EngineDead
+    if sup is not None:
+        try:
+            sup.close(drain=False)
+        except EngineDead:
+            pass
+        eng = sup.engine
+        s = sup.summary()
+        print(f"[serve/gateway] supervisor: restarts={s['restarts']} "
+              f"replayed={s['windows_replayed']} rerun={s['windows_rerun']} "
+              f"degraded={s['degraded']}")
+    elif driver is not None:
+        driver.close()
+    elif use_async:
+        try:
+            eng.close(drain=False)
+        except EngineDead:
+            pass
+
+    if registry is not None:
+        eng.flush_telemetry()
+        if server is not None:
+            server.close()
+        if metrics_json:
+            from ..obs import write_json_snapshot
+            write_json_snapshot(registry, metrics_json)
+            print(f"[serve/gateway] metrics snapshot -> {metrics_json}")
+        if flight_jsonl:
+            n_rec = flight.dump_jsonl(flight_jsonl)
+            print(f"[serve/gateway] flight recorder: {n_rec} records -> "
+                  f"{flight_jsonl}")
+        if trace_json:
+            from ..obs import write_chrome_trace
+            n_ev = write_chrome_trace(flight.records(), trace_json)
+            print(f"[serve/gateway] chrome trace: {n_ev} events -> "
+                  f"{trace_json}")
+    if store is not None and hasattr(store, "close"):
+        store.close()
+    print(f"[serve/gateway] exit 0 (interrupted={interrupted})", flush=True)
+    return {"registry": registry, "flight": flight, "drained": drained,
+            "summary": summary,
+            "supervisor": sup.summary() if sup is not None else None}
+
+
 def _write_output(f, sid, seq, wout) -> None:
     """Append one resolved window's output record (fsync'd: the SIGKILL
     recovery test diffs these ledgers across runs, so a record must never
@@ -618,7 +812,52 @@ def main() -> None:
                     help="stream one fsync'd record per resolved window "
                          "(stream, seq, best classes, scores digest) — the "
                          "recovery tests' bit-match ledger")
+    ap.add_argument("--gateway-port", type=int, default=None, metavar="PORT",
+                    help="serve the network event gateway on this port "
+                         "(0 = ephemeral, printed at startup) instead of "
+                         "driving synthetic streams in-process; runs until "
+                         "SIGTERM, then drains gracefully "
+                         "(docs/gateway.md)")
+    ap.add_argument("--gateway-host", default="127.0.0.1")
+    ap.add_argument("--gateway-rate", type=float, default=200.0,
+                    metavar="N", help="per-tenant token-bucket refill "
+                    "rate, windows/s (default 200)")
+    ap.add_argument("--gateway-burst", type=int, default=100, metavar="N",
+                    help="per-tenant token-bucket depth (default 100)")
+    ap.add_argument("--gateway-deadline-ms", type=float, default=2000.0,
+                    metavar="MS", help="default per-request wait budget "
+                    "before a window parks with 503 (default 2000)")
+    ap.add_argument("--gateway-max-conns", type=int, default=64, metavar="N")
+    ap.add_argument("--gateway-tenant-sessions", type=int, default=8,
+                    metavar="N", help="per-tenant session quota (fair "
+                    "slot admission; default 8)")
+    ap.add_argument("--gateway-seconds", type=float, default=0.0,
+                    metavar="S", help="bound the serve window (0 = until "
+                    "signal)")
+    ap.add_argument("--gateway-sync", action="store_true",
+                    help="drive the sync StreamEngine through the "
+                         "SyncDriver adapter instead of the async runtime "
+                         "(incompatible with --rt/--governor/--supervise)")
     args = ap.parse_args()
+
+    if args.gateway_port is not None:
+        run_torr_gateway(
+            n_slots=args.torr_slots or 8, serial=args.torr_serial,
+            rt=args.rt, governor=args.governor,
+            fused=args.torr_fused or None,
+            metrics_port=args.metrics_port, metrics_json=args.metrics_json,
+            flight_jsonl=args.flight_jsonl, trace_json=args.trace_json,
+            supervise=args.supervise, state_store=args.state_store,
+            snapshot_every=args.snapshot_every, fault_at=args.fault_at,
+            fault_kind=args.fault_kind, gateway_port=args.gateway_port,
+            gateway_host=args.gateway_host, gateway_rate=args.gateway_rate,
+            gateway_burst=args.gateway_burst,
+            gateway_deadline_ms=args.gateway_deadline_ms,
+            gateway_max_conns=args.gateway_max_conns,
+            gateway_tenant_sessions=args.gateway_tenant_sessions,
+            run_seconds=args.gateway_seconds,
+            use_async=not args.gateway_sync)
+        return
 
     if args.torr_streams > 0:
         run_torr_streams(args.torr_streams, args.torr_frames,

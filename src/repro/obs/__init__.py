@@ -8,7 +8,8 @@ decodes telemetry with. Metric catalog, flight schema, trace-context
 model and SLO semantics live in ``docs/observability.md``.
 """
 from .bridge import StepObserver, telemetry_digest
-from .export import MetricsServer, prometheus_text, write_json_snapshot
+from .export import (MetricsServer, health_response, prometheus_text,
+                     write_json_snapshot)
 from .flight import (FLIGHT_SCHEMA_VERSION, FlightRecorder, load_jsonl,
                      plan_timeline, replay)
 from .metrics import (LATENCY_BUCKETS_S, Counter, Gauge, Histogram,
@@ -27,7 +28,8 @@ __all__ = [
     "NULL_SPAN", "SLOMonitor", "SLOPolicy", "SLO_OK", "SLO_PAGE",
     "SLO_WARN", "StepObserver", "TRACE_SCHEMA_VERSION", "TraceContext",
     "Tracer", "burn_rate", "chrome_trace", "current_span",
-    "default_registry", "load_jsonl", "now_us", "plan_timeline",
+    "default_registry", "health_response", "load_jsonl", "now_us",
+    "plan_timeline",
     "prometheus_text", "quantile", "replay", "snapshot_quantile", "span",
     "span_stack", "telemetry_digest", "trace_scope", "write_chrome_trace",
     "write_json_snapshot",

@@ -14,6 +14,14 @@ Three consumers of :class:`repro.obs.metrics.MetricsRegistry` snapshots:
   ``/metrics`` (text) and ``/metrics.json``; this is what
   ``launch/serve.py --metrics-port`` starts. Zero dependencies, one
   thread, scrape-safe (every request renders a fresh snapshot).
+
+The server also answers ``/healthz`` (process liveness — always 200
+while the thread runs) and ``/readyz`` (readiness: an optional ``ready``
+callable, typically ``ServeSupervisor.health``, decides 200 vs 503 — a
+recovering or terminally-failed supervisor reports not-ready). The
+gateway serves the same two probes on its own port via
+:func:`health_response`, so orchestrators can point one probe config at
+either tier.
 """
 from __future__ import annotations
 
@@ -85,21 +93,51 @@ def write_json_snapshot(registry: MetricsRegistry, path: str) -> None:
         f.write("\n")
 
 
+def health_response(ready) -> tuple:
+    """Evaluate a readiness source into ``(status, body_dict)``.
+
+    ``ready`` may be None (always ready), a bool, a zero-arg callable
+    returning either a bool or a health dict with a ``"ready"`` key
+    (:meth:`ServeSupervisor.health`). A raising callable is *not ready*
+    — a probe must never 200 because the health check itself crashed."""
+    state = {"ready": True}
+    if callable(ready):
+        try:
+            ready = ready()
+        except Exception as e:   # noqa: BLE001 — fail closed
+            ready = {"ready": False, "error": f"{type(e).__name__}: {e}"}
+    if isinstance(ready, dict):
+        state = dict(ready)
+        state["ready"] = bool(state.get("ready", True))
+    elif ready is not None:
+        state = {"ready": bool(ready)}
+    return (200 if state["ready"] else 503), state
+
+
 class _Handler(http.server.BaseHTTPRequestHandler):
     registry: MetricsRegistry = None  # patched per-server subclass
+    ready = None                      # optional readiness callable
 
     def do_GET(self):  # noqa: N802 (stdlib handler contract)
         path = self.path.split("?", 1)[0]
+        status = 200
         if path in ("/metrics", "/"):
             body = prometheus_text(self.registry).encode()
             ctype = "text/plain; version=0.0.4; charset=utf-8"
         elif path == "/metrics.json":
             body = json.dumps(self.registry.snapshot()).encode()
             ctype = "application/json"
+        elif path == "/healthz":
+            body = json.dumps({"ok": True}).encode()
+            ctype = "application/json"
+        elif path == "/readyz":
+            status, state = health_response(type(self).ready)
+            body = json.dumps(state).encode()
+            ctype = "application/json"
         else:
             self.send_error(404)
             return
-        self.send_response(200)
+        self.send_response(status)
         self.send_header("Content-Type", ctype)
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
@@ -110,16 +148,19 @@ class _Handler(http.server.BaseHTTPRequestHandler):
 
 
 class MetricsServer:
-    """``/metrics`` endpoint on a daemon thread (stdlib ``http.server``).
+    """``/metrics`` + health-probe endpoint on a daemon thread.
 
     ``port=0`` binds an ephemeral port; read the bound one from ``.port``
     after :meth:`start`. The thread is a daemon so a crashed serving loop
-    never hangs on the scrape endpoint.
+    never hangs on the scrape endpoint. ``ready`` (optional callable,
+    e.g. ``supervisor.health``) backs ``/readyz``.
     """
 
     def __init__(self, registry: MetricsRegistry, port: int = 0,
-                 host: str = "127.0.0.1"):
-        handler = type("_BoundHandler", (_Handler,), {"registry": registry})
+                 host: str = "127.0.0.1", ready=None):
+        handler = type("_BoundHandler", (_Handler,),
+                       {"registry": registry, "ready": staticmethod(ready)
+                        if callable(ready) else ready})
         self._httpd = http.server.ThreadingHTTPServer((host, port), handler)
         self._httpd.daemon_threads = True
         self._thread = threading.Thread(
@@ -130,6 +171,13 @@ class MetricsServer:
     def start(self) -> int:
         self._thread.start()
         return self.port
+
+    def set_ready(self, ready) -> None:
+        """(Re)wire the ``/readyz`` readiness source — the supervisor is
+        usually built after the scrape server, so launchers wire it in
+        late (``server.set_ready(sup.health)``)."""
+        self._httpd.RequestHandlerClass.ready = \
+            staticmethod(ready) if callable(ready) else ready
 
     def close(self) -> None:
         self._httpd.shutdown()

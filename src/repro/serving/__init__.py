@@ -61,6 +61,23 @@ Modules:
     are bit-identical to a fault-free run at ``snapshot_every=1``. A
     crash-loop breaker degrades the knob plan; bounded restarts fail
     pending futures with the terminal ``EngineDead``.
+  * ``gateway`` / ``protocol`` — the network tier: a stdlib threaded
+    socket/HTTP front mapping multi-tenant ``tenant/stream`` sessions to
+    engine slots, with per-tenant token-bucket rate limits, strict frame
+    validation, seq-based idempotent retries, recovery-aware 503s and
+    graceful drain::
+
+        gw = Gateway(sup, cfg, task_bank, metrics=reg, port=0)
+        gw.start()                  # POST /v1/session, POST /v1/window,
+                                    # /healthz /readyz /metrics /v1/config
+        gw.drain()                  # SIGTERM path: flush in-flight, exit 0
+
+    Every failure mode is a typed client outcome (400/408/409/413/429/503
+    + Retry-After); the error taxonomy and wire schema live in
+    ``protocol.py`` and docs/gateway.md. ``SyncDriver`` adapts the sync
+    ``StreamEngine`` to the future-returning submit surface the gateway
+    needs; ``benchmarks/loadgen.py`` is the production-shaped load/chaos
+    harness that drives all of it over real sockets.
   * ``reranker``      — TorR as an LLM token-reranking sidecar.
 
 Chaos injection: both engines accept a

@@ -131,12 +131,18 @@ class ServeSupervisor:
         self.windows_replayed = 0
         self.windows_rerun = 0
         self.degraded = False
+        # lock-free health flags: the gateway fast-fails requests on
+        # `recovering` without queueing threads on self._lock, and
+        # `terminal` marks a supervisor past max_restarts
+        self.recovering = False
+        self.terminal = False
         self._recent_crashes: collections.deque = collections.deque()
         self._streams: Dict[object, _Stream] = {}
         self._lock = threading.RLock()
         self._dead: Optional[EngineDead] = None  # flagged by callbacks
         self._epoch = 0   # bumped per rebuild; stale callbacks are ignored
         self._m_restarts = self._m_replayed = self._h_recovery = None
+        self._m_dropped = None
         if metrics is not None:
             from ..obs.metrics import LATENCY_BUCKETS_S
             self._m_restarts = metrics.counter(
@@ -150,6 +156,9 @@ class ServeSupervisor:
                 "torr_recovery_duration_seconds",
                 "Crash detection to replay-complete recovery latency.",
                 buckets=LATENCY_BUCKETS_S)
+            self._m_dropped = metrics.counter(
+                "torr_telemetry_dropped_total",
+                "Observed steps/windows lost before telemetry was folded.")
         self.engine = factory()
         self._async = isinstance(self.engine, AsyncStreamEngine)
 
@@ -260,6 +269,36 @@ class ServeSupervisor:
             dead, self._dead = self._dead, None
             self._recover(dead)
 
+    def heal(self) -> None:
+        """Run any pending recovery *now*. The engine's death is only
+        noticed inside submit/admit/flush; a network front with no
+        traffic would otherwise sit on a dead engine until the next
+        request pays the whole recovery latency — the gateway's pump
+        thread calls this instead. Raises the terminal
+        :class:`EngineDead` once ``max_restarts`` is exhausted."""
+        with self._lock:
+            self._heal_if_dead()
+
+    # -- health (lock-free: read by the gateway's hot path) ------------------
+
+    def health(self) -> dict:
+        """Readiness snapshot for ``/readyz`` and gateway fast-fail."""
+        return {
+            "ready": not self.recovering and not self.terminal,
+            "recovering": self.recovering,
+            "terminal": self.terminal,
+            "restarts": self.restarts,
+            "degraded": self.degraded,
+        }
+
+    def retry_after_s(self) -> float:
+        """Recovery-aware client backoff: the next restart's backoff
+        sleep plus replay headroom — what a 503 during recovery carries
+        as its Retry-After."""
+        n = min(self.restarts + 1, 16)
+        return min(self._backoff_s * (2.0 ** (n - 1)),
+                   self._backoff_cap_s) + 0.05
+
     def _n_pending(self) -> int:
         return sum(1 for rec in self._streams.values()
                    for w in rec.journal if w.status == _PENDING)
@@ -299,10 +338,21 @@ class ServeSupervisor:
                 return  # duplicate delivery (abandoned engine vs replay)
             win.status = _SHED if isinstance(exc, WindowShed) else _DONE
             self._trim(rec)
-        if exc is None:
-            win.outer.set_result(fut.result())
-        else:
-            win.outer.set_exception(exc)
+        self._deliver(win, fut.result() if exc is None else None, exc)
+
+    def _deliver(self, win: _Window, result, exc) -> None:
+        """Resolve the caller-facing future, tolerating a gateway-side
+        cancellation (client disconnected mid-flight): the window's
+        state advance is kept — only the delivery is dropped, accounted
+        in ``torr_telemetry_dropped_total``."""
+        try:
+            if exc is None:
+                win.outer.set_result(result)
+            else:
+                win.outer.set_exception(exc)
+        except BaseException:   # cancelled outer: InvalidStateError
+            if self._m_dropped is not None:
+                self._m_dropped.inc()
 
     def _trim(self, rec: _Stream) -> None:
         """Drop the journal prefix that is both resolved and covered by a
@@ -336,8 +386,8 @@ class ServeSupervisor:
                             continue    # a silent warm-start re-run
                         win.status = _DONE
                         self._trim(rec)
-                        win.outer.set_result(jax.tree_util.tree_map(
-                            np.asarray, out_tel))
+                        self._deliver(win, jax.tree_util.tree_map(
+                            np.asarray, out_tel), None)
             eng.flush_telemetry()  # fold deferred snapshots/telemetry through
         except EngineDead:
             raise
@@ -354,6 +404,13 @@ class ServeSupervisor:
         t0 = self._clock()
         self.restarts += 1
         self._dead = None
+        self.recovering = True
+        try:
+            self._recover_locked(dead, t0)
+        finally:
+            self.recovering = False
+
+    def _recover_locked(self, dead: EngineDead, t0: float) -> None:
         if self._m_restarts is not None:
             self._m_restarts.inc()
         if self._flight is not None:
@@ -364,6 +421,7 @@ class ServeSupervisor:
                 thread=dead.thread, inflight=dead.inflight,
                 restarts=self.restarts)
         if self.restarts > self.max_restarts:
+            self.terminal = True
             self._fail_pending(dead)
             raise dead
         # crash-loop breaker bookkeeping (before the backoff sleep so the
@@ -472,6 +530,8 @@ class ServeSupervisor:
                 "windows_replayed": self.windows_replayed,
                 "windows_rerun": self.windows_rerun,
                 "degraded": self.degraded,
+                "recovering": self.recovering,
+                "terminal": self.terminal,
                 "pending": self._n_pending(),
                 "streams": len(self._streams),
             }

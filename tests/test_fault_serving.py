@@ -344,6 +344,60 @@ def test_crash_loop_breaker_degrades_plan():
     sup.close(drain=False)
 
 
+def test_shed_retry_hint_survives_supervised_restart():
+    """ISSUE 10 satellite: the ``WindowShed.retry_after_s`` drain-model
+    hint must still be attached to sheds raised *after* a supervised
+    restart. The DeadlineTracker outlives the engine (the factory closes
+    over it), so the replayed windows' sheds carry the same projection a
+    fault-free engine would have produced — the gateway forwards it as
+    the 429 Retry-After."""
+    from repro.serving.deadline import (DeadlinePolicy, DeadlineTracker,
+                                        WindowShed)
+    cfg = CFG
+    S, T = 1, 4
+    im = random_item_memory(jax.random.PRNGKey(0), cfg)
+    task_w = np.asarray(jax.random.uniform(jax.random.PRNGKey(1),
+                                           (S, cfg.M)))
+    steps = _make_inputs(cfg, S, T)
+    store = InMemoryStateStore()
+    # impossible budget: every admitted window sheds, with a hint from
+    # the tracker's drain projection (nonzero step prior so the
+    # projection is meaningful before the first completed step)
+    tracker = DeadlineTracker(DeadlinePolicy(budget_s=1e-12,
+                                             escalate_margin_s=1e-12,
+                                             step_init_s=0.004))
+    built = [0]
+
+    def make_engine():
+        # engine 1 dies at its first dispatch; engine 2 is healthy and
+        # REUSES the tracker — recovery must not reset the drain model
+        built[0] += 1
+        fault = FaultPlan(at_step=0, thread="dispatcher") \
+            if built[0] == 1 else None
+        return AsyncStreamEngine(cfg, im, n_slots=S, paused=True,
+                                 store=store, snapshot_every=1,
+                                 tracker=tracker, fault_plan=fault)
+
+    sup = ServeSupervisor(make_engine, store, backoff_s=0.001)
+    sup.admit("cam0", task_w[0])
+    futs = [sup.submit("cam0", q[0], valid[0], boxes[0])
+            for q, valid, boxes, _qd in steps]
+    sup.engine.start()
+    sup.flush(timeout=FLUSH_S)
+    assert sup.summary()["restarts"] == 1
+    assert built[0] == 2
+    hints = []
+    for f in futs:
+        exc = f.exception(timeout=10)
+        # the shed (not the crash) is what the client sees: replay turned
+        # the journaled windows into typed sheds, not EngineDead
+        assert isinstance(exc, WindowShed), exc
+        hints.append(exc.retry_after_s)
+    assert all(h is not None and h > 0 for h in hints), hints
+    assert tracker.shed == T
+    sup.close(drain=False)
+
+
 def test_max_restarts_terminal_death_fails_pending():
     cfg = CFG
     S, T = 2, 3

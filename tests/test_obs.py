@@ -22,8 +22,8 @@ import jax
 from repro.control import Governor, GovernorPolicy
 from repro.core.item_memory import random_item_memory
 from repro.obs.bridge import StepObserver, telemetry_digest
-from repro.obs.export import (MetricsServer, prometheus_text,
-                              write_json_snapshot)
+from repro.obs.export import (MetricsServer, health_response,
+                              prometheus_text, write_json_snapshot)
 from repro.obs.flight import (FLIGHT_SCHEMA_VERSION, FlightRecorder,
                               load_jsonl, plan_timeline, replay)
 from repro.obs.metrics import MetricsRegistry
@@ -188,6 +188,55 @@ def test_metrics_server_scrape(tmp_path):
     doc = json.loads(path.read_text())
     assert doc["format"] == "torr-metrics-snapshot-v1"
     assert doc["metrics"]["torr_scrapes_total"]["series"][0]["value"] == 7
+
+
+def test_health_response_shapes_and_fail_closed():
+    # None / bools
+    assert health_response(None) == (200, {"ready": True})
+    assert health_response(True) == (200, {"ready": True})
+    assert health_response(False) == (503, {"ready": False})
+    # callable returning a bool or a supervisor-style health dict
+    assert health_response(lambda: True)[0] == 200
+    st, state = health_response(
+        lambda: {"ready": False, "recovering": True, "restarts": 2})
+    assert st == 503 and state["recovering"] is True
+    # a raising readiness check must fail CLOSED, never 200
+    def boom():
+        raise RuntimeError("probe crashed")
+    st, state = health_response(boom)
+    assert st == 503 and state["ready"] is False
+    assert "RuntimeError" in state["error"]
+
+
+def test_metrics_server_healthz_and_readyz():
+    reg = MetricsRegistry()
+    state = {"ready": True}
+    srv = MetricsServer(reg, port=0, ready=lambda: dict(state))
+    port = srv.start()
+
+    def probe(path):
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}{path}", timeout=10) as r:
+                return r.status, json.loads(r.read())
+        except urllib.error.HTTPError as e:
+            return e.code, json.loads(e.read())
+
+    try:
+        assert probe("/healthz") == (200, {"ok": True})
+        assert probe("/readyz")[0] == 200
+        # readiness flips with the source (a recovering supervisor)
+        state["ready"] = False
+        state["recovering"] = True
+        st, body = probe("/readyz")
+        assert st == 503 and body["recovering"] is True
+        # liveness is unaffected by readiness
+        assert probe("/healthz") == (200, {"ok": True})
+        # launchers wire the supervisor in late: set_ready rebinds
+        srv.set_ready(lambda: True)
+        assert probe("/readyz")[0] == 200
+    finally:
+        srv.close()
 
 
 # --- flight recorder --------------------------------------------------------
